@@ -1,0 +1,92 @@
+"""Kernel benchmarks: interpret-mode correctness deltas vs oracles +
+reference-path wall time (CPU) and per-call cost_analysis FLOPs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, iters=5):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+
+    # decay_scan
+    T, C = 1024, 512
+    a = jnp.asarray(rng.uniform(0, 1, (T, C)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(T, C)), jnp.float32)
+    got = ops.decay_scan(a, u, use_pallas="interpret")
+    want = ref.decay_scan_ref(a, u)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us = _time(lambda a, u: ops.decay_scan(a, u, use_pallas=False), a, u)
+    row = {"kernel": "decay_scan", "shape": f"{T}x{C}",
+           "max_abs_err_interpret": round(err, 8), "ref_us_per_call":
+           round(us, 1)}
+    rows.append(row)
+    emit("kernels", row)
+
+    # thinning_rmw
+    B, nt = 4096, 6
+    taus = jnp.asarray(np.geomspace(60, 1e7, nt), jnp.float32)
+    last_t = jnp.asarray(rng.uniform(0, 1e4, B), jnp.float32)
+    v_f = jnp.asarray(rng.uniform(0, 10, B), jnp.float32)
+    agg = jnp.asarray(rng.uniform(0, 5, (B, 3 * nt)), jnp.float32)
+    q = jnp.asarray(rng.lognormal(3, 1, B), jnp.float32)
+    t = jnp.asarray(rng.uniform(1e4, 2e4, B), jnp.float32)
+    uu = jnp.asarray(rng.random(B), jnp.float32)
+    valid = jnp.ones(B, jnp.float32)
+    kw = dict(h=3600.0, budget=0.001, variance_aware=True, alpha=1.5)
+    got = ops.thinning_rmw(taus, last_t, v_f, agg, q, t, uu, valid,
+                           use_pallas="interpret", **kw)
+    want = ref.thinning_rmw_ref(taus, last_t, v_f, agg, q, t, uu, valid,
+                                **kw)
+    err = max(float(jnp.max(jnp.abs(g.astype(jnp.float32)
+                                    - w.astype(jnp.float32))))
+              for g, w in zip(got, want))
+    us = _time(lambda *xs: ops.thinning_rmw(*xs, use_pallas=False, **kw),
+               taus, last_t, v_f, agg, q, t, uu, valid)
+    row = {"kernel": "thinning_rmw", "shape": f"B={B},T={nt}",
+           "max_abs_err_interpret": round(err, 6),
+           "ref_us_per_call": round(us, 1),
+           "ns_per_event": round(us * 1e3 / B, 1)}
+    rows.append(row)
+    emit("kernels", row)
+
+    # flash_attention
+    Bq, H, Kh, S, D = 1, 8, 2, 512, 64
+    qq = jnp.asarray(rng.normal(size=(Bq, H, S, D)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(Bq, Kh, S, D)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(Bq, Kh, S, D)), jnp.float32)
+    got = ops.flash_attention(qq, kk, vv, use_pallas="interpret",
+                              block_q=128, block_k=128)
+    want = ref.attention_ref(qq, kk, vv)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us = _time(lambda *xs: ops.flash_attention(*xs, use_pallas=False),
+               qq, kk, vv)
+    flops = 4 * Bq * H * S * S * D
+    row = {"kernel": "flash_attention", "shape": f"{Bq}x{H}x{S}x{D}",
+           "max_abs_err_interpret": round(err, 6),
+           "ref_us_per_call": round(us, 1),
+           "ref_gflops_per_s": round(flops / us / 1e3, 1)}
+    rows.append(row)
+    emit("kernels", row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""§Roofline — renders the per-(arch x shape x mesh) roofline table from
+the dry-run artifacts in runs/dryrun (see repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load_records(out_dir: str = "runs/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        try:
+            with open(path) as f:
+                recs.append(json.load(f))
+        except Exception:
+            continue
+    return recs
+
+
+def run(out_dir: str = "runs/dryrun"):
+    recs = load_records(out_dir)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+    rows = []
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        mem_gb = r["memory"].get("argument_size_in_bytes", 0) / 1e9
+        tmp_gb = r["memory"].get("temp_size_in_bytes", 0) / 1e9
+        row = {
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "args_gb_per_dev": round(mem_gb, 2),
+            "temp_gb_per_dev": round(tmp_gb, 2),
+            "t_compute_s": f"{r['t_compute']:.3e}",
+            "t_memory_s": f"{r['t_memory']:.3e}",
+            "t_collective_s": f"{r['t_collective']:.3e}",
+            "dominant": r["dominant"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "roofline_fraction": round(r["roofline_fraction"], 4),
+        }
+        rows.append(row)
+        emit("roofline", row)
+    emit("roofline_summary", {
+        "cells_ok": len(ok), "cells_skipped": len(skipped),
+        "cells_error": len(errors)})
+    for r in errors:
+        emit("roofline_errors", {"arch": r["arch"], "shape": r["shape"],
+                                 "mesh": r["mesh"],
+                                 "error": r.get("error", "?")[:120]})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Quickstart: persistence-path control in 60 lines.
+
+Streams skewed events through the thinned feature engine, shows the write
+reduction, the Horvitz-Thompson unbiasedness of the maintained profiles, and
+scores every event — the paper's core loop end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, Event, init_state, make_step
+from repro.streaming import workload
+
+# 1. a skewed transaction stream (4% of merchants -> 80% of volume)
+stream = workload.generate_regime("fraud", n_events=30_000)
+print(f"stream: {stream.stats()}")
+
+# 2. the thinned feature engine: every event scored, writes gated by
+#    p = min(1, budget / lambda_hat) with disk-backed intensity estimates
+cfg = EngineConfig(
+    taus=(3600.0, 86400.0, 30 * 86400.0),   # 1h / 1d / 30d decayed profiles
+    h=3600.0,                               # KDE bandwidth
+    budget=0.002 / 60.0,                    # write budget (events/s/key)
+    policy="pp",                            # persistence-path control
+)
+state = init_state(int(stream.key.max()) + 1, len(cfg.taus))
+step = jax.jit(make_step(cfg, "fast"))
+rng = jax.random.PRNGKey(0)
+
+writes = scored = 0
+B = 4096
+for i in range(0, len(stream), B):
+    j = min(i + B, len(stream))
+    pad = B - (j - i)
+    ev = Event(
+        key=jnp.asarray(np.pad(stream.key[i:j], (0, pad))),
+        q=jnp.asarray(np.pad(stream.q[i:j], (0, pad))),
+        t=jnp.asarray(np.pad(stream.t[i:j], (0, pad))),
+        valid=jnp.asarray(np.pad(np.ones(j - i, bool), (0, pad))))
+    state, info = step(state, ev, rng)
+    writes += int(info.writes)
+    scored += j - i
+    # info.features is the [B, F] feature matrix the model scores — every
+    # event gets one, whether or not it was persisted
+
+print(f"\nscored {scored} events, persisted {writes} "
+      f"({100 * writes / scored:.1f}% of events hit storage)")
+
+# 3. unbiasedness: HT-weighted decayed sums track the exact full-stream sums
+taus = np.asarray(cfg.taus)
+t_end = float(stream.t[-1])
+exact = np.zeros((state.num_entities, len(taus)))
+w = np.exp(-(t_end - stream.t)[:, None] / taus) * stream.q[:, None]
+np.add.at(exact, stream.key, w)
+
+last_t = np.asarray(state.last_t)
+beta = np.where(np.isfinite(last_t)[:, None],
+                np.exp(-np.clip(t_end - last_t, 0, None)[:, None] / taus), 0)
+est = np.asarray(state.agg)[..., 1] * beta
+
+hot = np.argsort(-exact[:, 1])[:8]
+print("\nhot-key 1-day decayed sums (exact vs thinned HT estimate):")
+for k in hot:
+    print(f"  key {k:5d}: exact={exact[k, 1]:12.1f}  "
+          f"estimate={est[k, 1]:12.1f}  "
+          f"rel.err={abs(est[k, 1] - exact[k, 1]) / exact[k, 1]:6.1%}")

@@ -1,0 +1,7 @@
+"""repro: persistence-path control (probabilistic thinning) for streaming ML
+feature engines, plus the multi-pod JAX training/serving framework around it.
+
+Layers: core (paper's mechanism) / streaming / features / models / kernels /
+train / serving / checkpoint / distributed / launch / configs.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Fault tolerance: async sharded checkpointing + elastic restore."""
+from repro.checkpoint.elastic import repartition_profile_state
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager", "repartition_profile_state"]

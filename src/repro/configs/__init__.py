@@ -1,0 +1,6 @@
+from repro.configs.base import (ARCH_IDS, ModelConfig, RunConfig, TrainConfig,
+                                load_config, load_smoke_config)
+from repro.configs import shapes
+
+__all__ = ["ARCH_IDS", "ModelConfig", "RunConfig", "TrainConfig",
+           "load_config", "load_smoke_config", "shapes"]

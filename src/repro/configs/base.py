@@ -1,0 +1,117 @@
+"""Architecture / run configuration schema and registry."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # dense-transformer flags
+    qk_norm: bool = False
+    use_bias: bool = False
+    tie_embeddings: bool = False
+    causal: bool = True            # False => encoder-only (no decode path)
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    attn_window: int = 0           # 0 = global attention
+    attn_softcap: float = 0.0
+    # MoE
+    num_experts: int = 0
+    num_experts_padded: int = 0    # >= num_experts, divisible by TP size
+    top_k: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    moe_impl: str = "spmd"         # spmd (scatter) | ep_a2a (shard_map EP)
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    ssm_groups: int = 1
+    # hybrid (recurrentgemma): repeating block pattern
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    rglru_conv_width: int = 4
+    rglru_expand: int = 1          # lru width = expand * d_model... (RG uses 1)
+    # vlm
+    cross_attn_every: int = 0      # insert a cross-attn layer every k layers
+    num_vision_tokens: int = 0
+    # audio / frame-input
+    input_mode: str = "tokens"     # tokens | frames
+    frame_dim: int = 0
+    scale_embeddings: bool = False # gemma-style sqrt(d_model) embed scaling
+    mlp_gated: bool = True         # SwiGLU (True) vs GELU MLP (False)
+    # chunking for the jnp flash path
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+    @property
+    def group_size(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def validate(self):
+        assert self.num_heads % self.num_kv_heads == 0
+        if self.family in ("moe",):
+            assert self.num_experts > 0 and self.top_k > 0
+            assert self.num_experts_padded >= self.num_experts
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"       # adamw | adafactor
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    master_weights: bool = True    # fp32 master copies (adamw only)
+    grad_accum: int = 1            # microbatch count per step
+    remat: bool = True
+    moe_aux_weight: float = 0.01
+    moe_z_weight: float = 1e-3
+    label_smoothing: float = 0.0
+    # beyond-paper: HT-thinned cross-pod gradient sync (repro.distributed)
+    thinned_sync: bool = False
+    thinned_sync_budget: float = 0.25
+    thinned_sync_alpha: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+
+
+ARCH_IDS = [
+    "mamba2-2.7b", "command-r-plus-104b", "yi-9b", "smollm-360m", "qwen3-4b",
+    "kimi-k2-1t-a32b", "qwen2-moe-a2.7b", "llama-3.2-vision-90b",
+    "recurrentgemma-2b", "hubert-xlarge",
+]
+
+
+def load_config(arch_id: str) -> RunConfig:
+    mod_name = "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(mod_name)
+    return mod.get_config()
+
+
+def load_smoke_config(arch_id: str) -> RunConfig:
+    mod_name = "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(mod_name)
+    return mod.get_smoke_config()

@@ -1,0 +1,95 @@
+"""Assigned input shapes and per-cell input specs (ShapeDtypeStruct only).
+
+Four shapes per architecture (40 nominal cells):
+  train_4k     seq 4096  x global_batch 256   -> train_step
+  prefill_32k  seq 32768 x global_batch 32    -> serve_step (prefill)
+  decode_32k   one token against a 32768 KV context, batch 128 -> serve_step
+  long_500k    one token against a 524288 context, batch 1     -> serve_step
+
+Skips (recorded in DESIGN.md §Arch-applicability):
+  - decode shapes for encoder-only archs (no autoregressive step)
+  - long_500k for pure full-attention archs (needs sub-quadratic context)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def applicable(model_cfg, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable?, reason-if-skipped) for one (arch, shape) cell."""
+    if shape.kind == "decode" and not model_cfg.causal:
+        return False, "encoder-only: no autoregressive decode step"
+    if shape.name == "long_500k" and model_cfg.family not in ("ssm", "hybrid"):
+        return False, "full quadratic attention: 512k context infeasible"
+    if shape.name == "long_500k" and not model_cfg.causal:
+        return False, "encoder-only: no autoregressive decode step"
+    return True, ""
+
+
+def _token_batch(cfg, shape: ShapeSpec, batch_override: Optional[int] = None
+                 ) -> Dict[str, jax.ShapeDtypeStruct]:
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.input_mode == "frames":
+        out["frames"] = jax.ShapeDtypeStruct((B, S, cfg.frame_dim),
+                                             jnp.bfloat16)
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_vision_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def input_specs(cfg, shape: ShapeSpec, *, batch_override: Optional[int] = None
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the *batch* inputs of one cell.
+
+    Decode cells additionally need a DecodeState — built separately via
+    ``jax.eval_shape(init_decode_state, ...)`` because its structure depends
+    on the model plan (see launch/dryrun.py).
+    """
+    if shape.kind in ("train", "prefill"):
+        return _token_batch(cfg, shape, batch_override)
+    # decode: one new token
+    B = batch_override or shape.global_batch
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def batch_axes(cfg, shape: ShapeSpec) -> Dict[str, str]:
+    """'|'-encoded logical axes per batch input (see backbone.parse_axes)."""
+    if shape.kind == "decode":
+        return {"tokens": "batch|"}
+    out = {}
+    if cfg.input_mode == "frames":
+        out["frames"] = "batch||"
+        out["labels"] = "batch|"
+    else:
+        out["tokens"] = "batch|"
+    if cfg.family == "vlm":
+        out["image_embeds"] = "batch|vision|"
+    return out

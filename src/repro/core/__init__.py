@@ -1,0 +1,18 @@
+"""Persistence-path control — the paper's primary contribution, in JAX.
+
+Public API:
+  - ``EngineConfig``, ``ProfileState``, ``Event``, ``StepInfo`` (types)
+  - ``init_state``, ``make_step``, ``materialize_features`` (engine)
+  - thinning policies (Eq. 2 / Eq. 4), intensity estimators (Eq. 5, §4.2),
+    Horvitz–Thompson decayed aggregates (§3.3)
+"""
+from repro.core.types import (Event, EngineConfig, ProfileState, StepInfo,
+                              init_state)
+from repro.core.engine import make_step, materialize_features
+from repro.core import thinning, intensity, estimators, diagnostics
+
+__all__ = [
+    "Event", "EngineConfig", "ProfileState", "StepInfo", "init_state",
+    "make_step", "materialize_features", "thinning", "intensity",
+    "estimators", "diagnostics",
+]

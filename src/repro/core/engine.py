@@ -1,0 +1,238 @@
+"""Vectorized persistence-path-control feature engine (paper §5).
+
+The paper's worker loop is per-event: retrieve -> materialize -> inclusion
+probability -> Bernoulli -> optional write-back.  On an accelerator that loop
+becomes a micro-batched tensor program.  Two execution modes are provided:
+
+* ``exact``  — bit-faithful per-event sequential semantics.  Events are sorted
+  by (key, t) and processed in *rounds*: round r handles every key's r-th
+  event, so all rounds are conflict-free scatters and the loop length is the
+  max events-per-key in the batch (static bound), not the batch size.
+
+* ``fast``   — decisions for the whole micro-batch are taken against the
+  batch-start state (decision staleness <= one batch), after which persisted
+  contributions fold into the state with a *closed-form segment reduction*:
+  because the HT update is a first-order linear recurrence, the end-of-batch
+  state needs only a decay-weighted segment sum, no sequential scan.  This is
+  the production configuration (it is also what any asynchronous real system
+  effectively does) and its staleness bias is bounded by the batch horizon.
+
+Both modes use counter-based RNG keyed on (entity, time-bits) so a given event
+receives the same thinning decision regardless of batching, ordering or shard
+placement.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators, intensity, thinning
+from repro.core.types import (Event, EngineConfig, ProfileState, StepInfo,
+                              init_state)
+
+__all__ = ["init_state", "make_step", "materialize_features"]
+
+
+def _seq_bits(t: jax.Array) -> jax.Array:
+    """Per-event RNG counter: the float32 bit pattern of the timestamp."""
+    return jax.lax.bitcast_convert_type(t.astype(jnp.float32), jnp.uint32)
+
+
+def _decide(cfg: EngineConfig, taus: jax.Array, state_cols, ev: Event, rng):
+    """Pure decision path: persistence-backed reads only (paper §4 design goal).
+
+    state_cols = (last_t, v_f, agg, v_full, last_t_full) gathered for ev.key.
+    Returns (p, z, lam_hat, features).
+    """
+    last_t, v_f, agg, v_full, last_t_full = state_cols
+    agg_now = estimators.decay_to(agg, last_t, ev.t, taus)
+    features = estimators.materialize(agg_now)
+
+    if cfg.policy == "full":
+        lam = intensity.lam_hat_from_state(v_full, last_t_full, ev.t, cfg.h)
+    else:
+        lam = intensity.lam_hat_from_state(v_f, last_t, ev.t, cfg.h)
+
+    if cfg.policy == "unfiltered":
+        p = jnp.ones_like(lam)
+    elif cfg.policy == "fixed":
+        p = thinning.fixed_rate_inclusion(lam.shape, cfg.fixed_rate, cfg.min_p)
+    elif cfg.policy == "pp_vr":
+        mu_w, sigma_w = estimators.contribution_moments(agg_now, cfg.mu_tau_index)
+        p = thinning.variance_aware_inclusion(
+            lam, cfg.budget, ev.q, mu_w, sigma_w, cfg.alpha, cfg.min_p)
+    else:  # 'pp' and the decision half of 'full'
+        p = thinning.naive_inclusion(lam, cfg.budget, cfg.min_p)
+
+    u = thinning.uniform_for_events(rng, ev.key, _seq_bits(ev.t))
+    z = (u < p) & ev.valid
+    return p, z, lam, features
+
+
+def _scatter_updates(state: ProfileState, cfg: EngineConfig, taus, ev: Event,
+                     p, z, write_key) -> ProfileState:
+    """Apply one round of conflict-free per-key updates.
+
+    write_key: ev.key where the row must change, OOB sentinel otherwise
+    (mode='drop' scatters).  Aggregates/v_f/last_t change only when z; the
+    full-stream control column changes on every valid event.
+    """
+    num_e = state.num_entities
+    data_key = jnp.where(z, ev.key, num_e)  # persisted-path writes
+    ctrl_key = jnp.where(ev.valid, ev.key, num_e)  # full-stream column
+
+    # Persistence-path state (decay computed against stored last persisted t).
+    last_t_g = state.last_t[write_key.clip(0, num_e - 1)]
+    agg_g = state.agg[write_key.clip(0, num_e - 1)]
+    v_f_g = state.v_f[write_key.clip(0, num_e - 1)]
+
+    agg_new = estimators.ht_update(
+        estimators.decay_to(agg_g, last_t_g, ev.t, taus), ev.q, z, p)
+    v_f_new = intensity.update_v(
+        v_f_g, last_t_g, ev.t, cfg.h, jnp.where(z, 1.0 / p, 0.0))
+
+    state = state._replace(
+        agg=state.agg.at[data_key].set(agg_new, mode="drop"),
+        v_f=state.v_f.at[data_key].set(v_f_new, mode="drop"),
+        last_t=state.last_t.at[data_key].set(ev.t, mode="drop"),
+    )
+
+    # Full-stream (in-memory baseline) column: unconditional KDE update.
+    v_full_g = state.v_full[ctrl_key.clip(0, num_e - 1)]
+    last_tf_g = state.last_t_full[ctrl_key.clip(0, num_e - 1)]
+    v_full_new = intensity.update_v(v_full_g, last_tf_g, ev.t, cfg.h,
+                                    jnp.ones_like(ev.t))
+    state = state._replace(
+        v_full=state.v_full.at[ctrl_key].set(v_full_new, mode="drop"),
+        last_t_full=state.last_t_full.at[ctrl_key].set(ev.t, mode="drop"),
+    )
+    return state
+
+
+def _sort_by_key_time(ev: Event):
+    order = jnp.lexsort((ev.t, ev.key))
+    ev_s = Event(*(x[order] for x in ev))
+    idx = jnp.arange(ev.key.shape[0])
+    is_start = jnp.concatenate(
+        [jnp.array([True]), ev_s.key[1:] != ev_s.key[:-1]])
+    start_idx = jnp.where(is_start, idx, 0)
+    seg_start = jax.lax.cummax(start_idx)
+    round_id = idx - seg_start  # position within (key)-segment
+    return ev_s, order, round_id, seg_start
+
+
+def _step_exact(cfg: EngineConfig, state: ProfileState, ev: Event, rng):
+    taus = jnp.asarray(cfg.taus, jnp.float32)
+    ev_s, order, round_id, _ = _sort_by_key_time(ev)
+    B = ev.key.shape[0]
+    num_e = state.num_entities
+
+    def round_body(carry, r):
+        state = carry
+        active = (round_id == r) & ev_s.valid
+        # Mask inactive lanes to a harmless OOB key so gathers stay in-bounds
+        # and scatters drop.
+        evr = Event(key=jnp.where(active, ev_s.key, 0),
+                    q=ev_s.q, t=ev_s.t, valid=active)
+        cols = (state.last_t[evr.key], state.v_f[evr.key],
+                state.agg[evr.key], state.v_full[evr.key],
+                state.last_t_full[evr.key])
+        p, z, lam, feats = _decide(cfg, taus, cols, evr, rng)
+        state = _scatter_updates(state, cfg, taus, evr, p, z,
+                                 jnp.where(active, evr.key, num_e))
+        return state, (p, z, lam, feats, active)
+
+    state, (p_r, z_r, lam_r, feats_r, act_r) = jax.lax.scan(
+        round_body, state, jnp.arange(cfg.exact_rounds))
+
+    # Collapse the per-round outputs back to per-(sorted)-event vectors, then
+    # invert the sort.
+    sel = jnp.argmax(act_r, axis=0)  # [B] which round handled each event
+    gather = lambda a: a[sel, jnp.arange(B)]
+    p_s, z_s, lam_s = gather(p_r), gather(z_r), gather(lam_r)
+    feats_s = feats_r[sel, jnp.arange(B), :]
+    inv = jnp.argsort(order)
+    info = StepInfo(z=z_s[inv] & ev.valid, p=p_s[inv], lam_hat=lam_s[inv],
+                    features=feats_s[inv],
+                    writes=jnp.sum(z_s & ev_s.valid).astype(jnp.int32))
+    return state, info
+
+
+def _step_fast(cfg: EngineConfig, state: ProfileState, ev: Event, rng):
+    taus = jnp.asarray(cfg.taus, jnp.float32)
+    num_e = state.num_entities
+    safe_key = jnp.where(ev.valid, ev.key, 0)
+    cols = (state.last_t[safe_key], state.v_f[safe_key], state.agg[safe_key],
+            state.v_full[safe_key], state.last_t_full[safe_key])
+    evm = Event(key=safe_key, q=ev.q, t=ev.t, valid=ev.valid)
+    p, z, lam, feats = _decide(cfg, taus, cols, evm, rng)
+
+    # --- closed-form segment fold of persisted contributions -------------
+    # Final per-key timestamp among persisted events:
+    t_star = jnp.full((num_e + 1,), -jnp.inf).at[
+        jnp.where(z, ev.key, num_e)].max(ev.t)[:num_e]
+    wrote = jnp.isfinite(t_star)
+    t_ref = jnp.where(wrote, t_star, 0.0)
+
+    inv_p = jnp.where(z, 1.0 / p, 0.0)
+    # v_f: sum_i (1/p_i) exp(-(t* - t_i)/h) + decay(t* - last_t) * v_f
+    w_v = inv_p * intensity.decay(t_ref[safe_key] - ev.t, cfg.h)
+    v_add = jnp.zeros((num_e + 1,)).at[jnp.where(z, ev.key, num_e)].add(w_v)[:num_e]
+    v_f_new = jnp.where(
+        wrote,
+        v_add + intensity.decay(t_star - state.last_t, cfg.h) * state.v_f,
+        state.v_f)
+
+    # aggregates: same fold per tau/column.
+    beta_ev = intensity.decay((t_ref[safe_key] - ev.t)[:, None], taus)  # [B,T]
+    contrib = (inv_p[:, None, None] * beta_ev[:, :, None] *
+               jnp.stack([jnp.ones_like(ev.q), ev.q, ev.q * ev.q], -1)[:, None, :])
+    agg_add = jnp.zeros((num_e + 1,) + state.agg.shape[1:]).at[
+        jnp.where(z, ev.key, num_e)].add(contrib)[:num_e]
+    agg_new = jnp.where(
+        wrote[:, None, None],
+        agg_add + estimators.decay_to(state.agg, state.last_t, t_star, taus),
+        state.agg)
+
+    last_t_new = jnp.where(wrote, t_star, state.last_t)
+
+    # full-stream control column (every valid event).
+    tf_star = jnp.full((num_e + 1,), -jnp.inf).at[
+        jnp.where(ev.valid, ev.key, num_e)].max(ev.t)[:num_e]
+    saw = jnp.isfinite(tf_star)
+    tf_ref = jnp.where(saw, tf_star, 0.0)
+    w_full = jnp.where(ev.valid, 1.0, 0.0) * intensity.decay(
+        tf_ref[safe_key] - ev.t, cfg.h)
+    vfull_add = jnp.zeros((num_e + 1,)).at[
+        jnp.where(ev.valid, ev.key, num_e)].add(w_full)[:num_e]
+    v_full_new = jnp.where(
+        saw,
+        vfull_add + intensity.decay(tf_star - state.last_t_full, cfg.h) * state.v_full,
+        state.v_full)
+
+    state = ProfileState(last_t=last_t_new, v_f=v_f_new, agg=agg_new,
+                         v_full=v_full_new,
+                         last_t_full=jnp.where(saw, tf_star, state.last_t_full))
+    info = StepInfo(z=z, p=p, lam_hat=lam, features=feats,
+                    writes=jnp.sum(z).astype(jnp.int32))
+    return state, info
+
+
+def make_step(cfg: EngineConfig, mode: str = "exact") -> Callable:
+    """Build a jit-able engine step: (state, Event, rng) -> (state, StepInfo)."""
+    if mode == "exact":
+        return functools.partial(_step_exact, cfg)
+    if mode == "fast":
+        return functools.partial(_step_fast, cfg)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def materialize_features(state: ProfileState, keys: jax.Array, t: jax.Array,
+                         taus) -> jax.Array:
+    """Read-only feature materialization (serving path)."""
+    taus = jnp.asarray(taus, jnp.float32)
+    agg_now = estimators.decay_to(state.agg[keys], state.last_t[keys], t, taus)
+    return estimators.materialize(agg_now)

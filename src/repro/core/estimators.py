@@ -1,0 +1,82 @@
+"""Horvitz–Thompson decayed aggregates (paper §3.2–3.4).
+
+The recursive masked update (§3.3)
+
+    A_hat(t_n) = Z_n * w(t_n, e_n) / p_n + exp(-(t_n - t_{n-1})/tau) * A_hat(t_{n-1})
+
+is unbiased for the full-stream decayed aggregate (App. A) and constant-space.
+We maintain, per (entity, tau): HT count (w=1), HT sum (w=q) and HT sum of
+squares (w=q^2).  Means / variances / CVs are derived, and — key design point —
+the (mu_w, sigma_w) standardization statistics of Eq. 4 are *read from these
+same persisted columns*, so variance-aware control needs no extra state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import intensity
+from repro.core.types import AGG_COUNT, AGG_SUM, AGG_SUMSQ
+
+
+def decay_to(agg: jax.Array, last_t: jax.Array, t: jax.Array,
+             taus: jax.Array) -> jax.Array:
+    """Lazily decay aggregates [..., T, 3] from last_t to t (exact composition)."""
+    dt = t - last_t
+    beta = intensity.decay(dt[..., None], taus)  # [..., T]
+    return agg * beta[..., None]
+
+
+def ht_update(agg_decayed: jax.Array, q: jax.Array, z: jax.Array,
+              p: jax.Array) -> jax.Array:
+    """Apply the HT-masked contribution to already-decayed aggregates.
+
+    agg_decayed: [..., T, 3]; q, z, p: [...].
+    """
+    inv_p = jnp.where(z, 1.0 / p, 0.0)
+    w = jnp.stack([jnp.ones_like(q), q, q * q], axis=-1)  # [..., 3]
+    return agg_decayed + inv_p[..., None, None] * w[..., None, :]
+
+
+def mean_estimate(agg: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """HT ratio estimator of the decayed mean: sum / count per tau."""
+    return agg[..., AGG_SUM] / jnp.maximum(agg[..., AGG_COUNT], eps)
+
+
+def variance_estimate(agg: jax.Array, eps: float = 1e-12) -> jax.Array:
+    cnt = jnp.maximum(agg[..., AGG_COUNT], eps)
+    mean = agg[..., AGG_SUM] / cnt
+    var = agg[..., AGG_SUMSQ] / cnt - mean * mean
+    return jnp.maximum(var, 0.0)
+
+
+def contribution_moments(agg: jax.Array, tau_index: int) -> tuple[jax.Array, jax.Array]:
+    """(mu_w, sigma_w) for Eq. 4, read from the persisted aggregates."""
+    sel = agg[..., tau_index, :]
+    cnt = jnp.maximum(sel[..., AGG_COUNT], 1e-12)
+    mu = sel[..., AGG_SUM] / cnt
+    var = jnp.maximum(sel[..., AGG_SUMSQ] / cnt - mu * mu, 0.0)
+    # Fresh entities (count ~ 0): fall back to a unit-scale standardization so
+    # Eq. 4 degrades to the naive rule instead of amplifying noise.
+    cold = sel[..., AGG_COUNT] < 1.0
+    mu = jnp.where(cold, 0.0, mu)
+    sigma = jnp.where(cold, 1e8, jnp.sqrt(var) + 1e-8)
+    return mu, sigma
+
+
+def materialize(agg_now: jax.Array) -> jax.Array:
+    """Feature vector from decayed aggregates [..., T, 3] -> [..., 4*T].
+
+    count, sum, mean, std per decay constant — the production-representative
+    feature set of §6.1 (exclusively persistence-derived, per §6.5).
+    """
+    cnt = agg_now[..., AGG_COUNT]
+    s = agg_now[..., AGG_SUM]
+    mean = mean_estimate(agg_now)
+    std = jnp.sqrt(variance_estimate(agg_now))
+    return jnp.concatenate([cnt, s, mean, std], axis=-1)
+
+
+def ht_variance_bound(w: jax.Array, p: jax.Array) -> jax.Array:
+    """Per-event variance term of Eq. (3): w^2 (E[1/p] - 1), given realized p."""
+    return w * w * (1.0 / p - 1.0)

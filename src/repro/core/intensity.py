@@ -1,0 +1,50 @@
+"""Arrival-intensity estimation (paper §4.1–4.2).
+
+Full-stream KDE estimator (Eq. 5) and its persistence-path *filtered*
+counterpart.  Both admit the constant-space recurrence
+
+    v(t_n) = c_n + exp(-(t_n - t_{n-1})/h) * v(t_{n-1}),      lam_hat = v / h
+
+with c_n = 1 for the full-stream version (every event) and c_n = Z_n / p_n for
+the filtered version (persisted events only, HT re-weighted).  Because the
+decay is exponential, skipped updates compose lazily: storing (v, last_t) and
+decaying by the elapsed time at the next *persisted* event is exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decay(dt: jax.Array, h: float | jax.Array) -> jax.Array:
+    """exp(-dt/h) with dt=inf (fresh entity) mapping to 0."""
+    dt = jnp.maximum(dt, 0.0)
+    return jnp.where(jnp.isfinite(dt), jnp.exp(-dt / h), 0.0)
+
+
+def lam_hat_from_state(v: jax.Array, last_t: jax.Array, t: jax.Array,
+                       h: float) -> jax.Array:
+    """Evaluate lam_hat(t) = (1 + decay * v_prev) / h at decision time.
+
+    This is the *pre-inclusion* estimate the paper plugs into Eq. (1): the
+    current event contributes its own kernel mass 1/h deterministically (it is
+    observed — only its persistence is in question), past mass is the decayed
+    stored numerator.
+    """
+    return (1.0 + decay(t - last_t, h) * v) / h
+
+
+def update_v(v: jax.Array, last_t: jax.Array, t: jax.Array, h: float,
+             contrib: jax.Array) -> jax.Array:
+    """v(t) = contrib + exp(-(t - last_t)/h) v(last_t)."""
+    return contrib + decay(t - last_t, h) * v
+
+
+def kde_intensity_dense(ts: jax.Array, t_eval: jax.Array, h: float) -> jax.Array:
+    """O(N·M) reference: lam_hat(t) = (1/h) * sum_{t_n <= t} exp(-(t-t_n)/h).
+
+    Used by tests/diagnostics only.
+    """
+    dt = t_eval[:, None] - ts[None, :]
+    mask = dt >= 0
+    return jnp.sum(jnp.where(mask, jnp.exp(-dt / h), 0.0), axis=1) / h

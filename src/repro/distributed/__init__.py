@@ -1,0 +1,4 @@
+"""Distribution: mesh context, logical-axis rules, gradient compression."""
+from repro.distributed import context, sharding
+
+__all__ = ["context", "sharding"]

@@ -1,0 +1,5 @@
+"""Feature substrate: profile specs + the sharded feature engine."""
+from repro.features.engine import ShardedFeatureEngine
+from repro.features.spec import PAPER_WINDOWS, ProfileSpec
+
+__all__ = ["ShardedFeatureEngine", "ProfileSpec", "PAPER_WINDOWS"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the system's compute hot spots (DESIGN.md §4).
+
+decay_scan        first-order linear recurrence (feature decay / SSD / RG-LRU)
+thinning_rmw      fused persistence-path decision + HT update
+flash_attention   blockwise online-softmax GQA attention (scoring plane)
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper
+with use_pallas='auto'|'interpret'|bool routing), ref.py (pure-jnp oracle).
+Kernels are validated under interpret=True on CPU; 'auto' routes to the
+reference path off-TPU.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: first-order linear (decayed) scan.
+
+    h[t] = a[t] * h[t-1] + u[t],   h[-1] = h0
+
+This single recurrence is the compute core of three layers of the system
+(DESIGN.md §4): the paper's decayed feature aggregates / filtered KDE
+numerator, Mamba-2's inter-chunk state passing, and the RG-LRU token mixer.
+
+TPU mapping: channels live on the 128-wide lane dimension; time is blocked
+into VMEM tiles and iterated sequentially *inside* the kernel (the recurrence
+is inherently serial in t, but fully parallel across channels, so each step
+is one fused VPU multiply-add over an (8, 128) vreg tile).  The running state
+h is carried across time-blocks in a VMEM scratch accumulator; the time grid
+dimension is declared "arbitrary" so the carry is legal.
+
+Block shapes: (block_t, block_c) with block_c a multiple of 128 (lanes) and
+block_t a multiple of 8 (sublanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decay_scan_kernel(a_ref, u_ref, h0_ref, out_ref, carry_ref, *,
+                       block_t: int):
+    t_idx = pl.program_id(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        carry_ref[...] = h0_ref[...]
+
+    a = a_ref[...]          # [block_t, block_c]
+    u = u_ref[...]
+    carry = carry_ref[0]    # [block_c]
+
+    def body(i, c):
+        h = a[i] * c + u[i]
+        out_ref[pl.ds(i, 1), :] = h[None]
+        return h
+
+    carry = jax.lax.fori_loop(0, block_t, body, carry)
+    carry_ref[0] = carry
+
+
+def decay_scan_pallas(a: jax.Array, u: jax.Array, h0: jax.Array | None = None,
+                      *, block_t: int = 256, block_c: int = 128,
+                      interpret: bool = True) -> jax.Array:
+    """h[t] = a[t]*h[t-1] + u[t] over [T, C] inputs (f32).
+
+    T must divide by block_t and C by block_c (ops.py pads otherwise).
+    """
+    T, C = a.shape
+    assert u.shape == (T, C)
+    if h0 is None:
+        h0 = jnp.zeros((C,), a.dtype)
+    block_t = min(block_t, T)
+    block_c = min(block_c, C)
+    assert T % block_t == 0 and C % block_c == 0, (T, C, block_t, block_c)
+    grid = (C // block_c, T // block_t)
+    kernel = functools.partial(_decay_scan_kernel, block_t=block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_c), lambda c, t: (t, c)),
+            pl.BlockSpec((block_t, block_c), lambda c, t: (t, c)),
+            pl.BlockSpec((1, block_c), lambda c, t: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_c), lambda c, t: (t, c)),
+        out_shape=jax.ShapeDtypeStruct((T, C), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_c), a.dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, u, h0[None, :])

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) GQA attention.
+
+The scoring plane's dominant FLOP consumer.  Standard construction adapted
+to the TPU memory hierarchy: the [Sq, Skv] score matrix never leaves VMEM —
+the grid walks (batch*head, q-block, kv-block) with the kv dimension
+sequential ("arbitrary"), carrying the online-softmax statistics
+(acc [bq, D], running max/sum [bq, 1]) in VMEM scratch across kv blocks, and
+writing the normalized output tile once on the last kv block.
+
+Block shapes default to (bq, bk) = (256, 256) with D on lanes — MXU-aligned
+for D in {64, 128, 256} (multiples of 128 preferred; 64 pads).
+
+GQA: q heads map to kv head h // group_size via the BlockSpec index map —
+no materialized K/V repetition.
+
+Supports causal masking, local windows (recurrentgemma) and logit softcap.
+Validated under interpret=True against ref.attention_ref; the jnp
+chunked_attention in models/attention.py is the CPU execution path of the
+same algorithm.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  block_q: int, block_k: int, n_kv_blocks: int):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # [bq, D]
+    k = k_ref[0]                                   # [bk, D]
+    v = v_ref[0]                                   # [bk, D]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # [bq, bk]
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # [bq, 1]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_next = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_next)
+    p = jnp.exp(s - m_next)                        # [bq, bk]
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_next
+
+    @pl.when(kb == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, block_q: int = 256,
+                           block_k: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    """q: [B, H, Sq, D]; k, v: [B, Kh, Skv, D] -> [B, H, Sq, D].
+
+    Sq/Skv must divide by the block sizes (ops.py pads otherwise).
+    """
+    B, H, Sq, D = q.shape
+    Kh, Skv = k.shape[1], k.shape[2]
+    G = H // Kh
+    scale = D ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    nq, nk = Sq // block_q, Skv // block_k
+
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * Kh, Skv, D)
+    vf = v.reshape(B * Kh, Skv, D)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, n_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, qb, kb, G=G: (bh // G, kb, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, qb, kb, G=G: (bh // G, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D),
+                               lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D)

@@ -1,0 +1,121 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``use_pallas='auto'`` routes through the jnp reference on CPU (this
+container) and through ``pallas_call`` on TPU backends; 'interpret' forces
+the Pallas kernel body in interpret mode (how tests validate the kernels on
+CPU); True/False force the respective paths.  Inputs are padded to block
+multiples here so the kernels can assume aligned shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decay_scan as _ds
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref
+from repro.kernels import thinning_rmw as _tr
+
+
+def _resolve(use_pallas: Union[bool, str]) -> str:
+    if use_pallas == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if use_pallas == "interpret":
+        return "interpret"
+    return "pallas" if use_pallas else "ref"
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+# ------------------------------------------------------------- decay_scan
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_t",
+                                             "block_c"))
+def decay_scan(a, u, h0=None, *, use_pallas: Union[bool, str] = "auto",
+               block_t: int = 256, block_c: int = 128):
+    """h[t] = a[t]*h[t-1] + u[t].  a, u: [T, C]; h0: [C] or None."""
+    mode = _resolve(use_pallas)
+    if mode == "ref":
+        return ref.decay_scan_ref(a, u, h0)
+    a_p, T = _pad_to(a, block_t, 0)
+    u_p, _ = _pad_to(u, block_t, 0)
+    a_p, C = _pad_to(a_p, block_c, 1)
+    u_p, _ = _pad_to(u_p, block_c, 1)
+    h0_p = None
+    if h0 is not None:
+        h0_p, _ = _pad_to(h0, block_c, 0)
+    out = _ds.decay_scan_pallas(a_p, u_p, h0_p, block_t=block_t,
+                                block_c=block_c,
+                                interpret=(mode == "interpret"))
+    return out[:T, :C]
+
+
+# ----------------------------------------------------------- thinning_rmw
+@functools.partial(jax.jit, static_argnames=(
+    "h", "budget", "alpha", "variance_aware", "mu_tau_index", "min_p",
+    "use_pallas", "block_b"))
+def thinning_rmw(taus, last_t, v_f, agg_flat, q, t, u, valid, *,
+                 h: float, budget: float, alpha: float = 0.0,
+                 variance_aware: bool = False, mu_tau_index: int = 2,
+                 min_p: float = 1e-6, use_pallas: Union[bool, str] = "auto",
+                 block_b: int = 256):
+    """Fused persistence-path RMW decision + update over gathered rows."""
+    mode = _resolve(use_pallas)
+    kw = dict(h=h, budget=budget, alpha=alpha,
+              variance_aware=variance_aware, mu_tau_index=mu_tau_index,
+              min_p=min_p)
+    if mode == "ref":
+        return ref.thinning_rmw_ref(taus, last_t, v_f, agg_flat, q, t, u,
+                                    valid, **kw)
+    B = last_t.shape[0]
+    pads = [_pad_to(x, block_b, 0) for x in
+            (last_t, v_f, agg_flat, q, t, u, valid)]
+    (last_t_p, _), (v_f_p, _), (agg_p, _), (q_p, _), (t_p, _), (u_p, _), \
+        (valid_p, _) = pads
+    # padded rows: mark invalid + fresh sentinel so they are no-ops
+    if last_t_p.shape[0] != B:
+        mask = jnp.arange(last_t_p.shape[0]) >= B
+        last_t_p = jnp.where(mask, -1e38, last_t_p)
+        u_p = jnp.where(mask, 2.0, u_p)          # u > p -> never selected
+        valid_p = jnp.where(mask, 0.0, valid_p)
+    outs = _tr.thinning_rmw_pallas(taus, last_t_p, v_f_p, agg_p, q_p, t_p,
+                                   u_p, valid_p, block_b=block_b,
+                                   interpret=(mode == "interpret"), **kw)
+    return tuple(o[:B] for o in outs)
+
+
+# -------------------------------------------------------- flash_attention
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "use_pallas", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0,
+                    use_pallas: Union[bool, str] = "auto",
+                    block_q: int = 256, block_k: int = 256):
+    """q: [B,H,Sq,D]; k,v: [B,Kh,Skv,D] -> [B,H,Sq,D]."""
+    mode = _resolve(use_pallas)
+    if mode == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 softcap=softcap)
+    Sq, Skv = q.shape[2], k.shape[2]
+    q_p, _ = _pad_to(q, block_q, 2)
+    k_p, _ = _pad_to(k, block_k, 2)
+    v_p, _ = _pad_to(v, block_k, 2)
+    # Padded KV rows sit at positions >= Skv; with causal masking and
+    # Sq <= Skv they are always in the future and thus masked.  Non-causal
+    # callers must supply block-aligned Skv.
+    assert k_p.shape[2] == Skv or (causal and Sq <= Skv), \
+        "non-causal flash_attention requires block-aligned Skv"
+    out = _fa.flash_attention_pallas(
+        q_p, k_p, v_p, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=(mode == "interpret"))
+    return out[:, :, :Sq]

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decay_scan_ref(a: jax.Array, u: jax.Array,
+                   h0: jax.Array | None = None) -> jax.Array:
+    """h[t] = a[t]*h[t-1] + u[t] via lax.scan.  a, u: [T, C]."""
+    if h0 is None:
+        h0 = jnp.zeros(a.shape[1:], a.dtype)
+
+    def step(h, xs):
+        at, ut = xs
+        h = at * h + ut
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a, u))
+    return hs
+
+
+def thinning_rmw_ref(taus, last_t, v_f, agg_flat, q, t, u, valid, *,
+                     h: float, budget: float, alpha: float = 0.0,
+                     variance_aware: bool = False, mu_tau_index: int = 2,
+                     min_p: float = 1e-6):
+    """Oracle for the fused RMW kernel (same sentinel conventions)."""
+    B = last_t.shape[0]
+    T = taus.shape[0]
+    agg = agg_flat.reshape(B, T, 3)
+    fresh = last_t < -1e30
+    dt = jnp.where(fresh, 0.0, jnp.maximum(t - last_t, 0.0))
+    beta_tau = jnp.where(fresh[:, None], 0.0,
+                         jnp.exp(-dt[:, None] / taus[None, :]))
+    agg_now = agg * beta_tau[..., None]
+
+    cnt, sm, sq = agg_now[..., 0], agg_now[..., 1], agg_now[..., 2]
+    mean = sm / jnp.maximum(cnt, 1e-12)
+    var = jnp.maximum(sq / jnp.maximum(cnt, 1e-12) - mean * mean, 0.0)
+    feats = jnp.concatenate([cnt, sm, mean, jnp.sqrt(var)], axis=1)
+
+    beta_h = jnp.where(fresh, 0.0, jnp.exp(-dt / h))
+    lam = (1.0 + beta_h * v_f) / h
+    base = jnp.minimum(1.0, budget / jnp.maximum(lam, 1e-30))
+    if variance_aware:
+        cold = cnt[:, mu_tau_index] < 1.0
+        mu_w = jnp.where(cold, 0.0, mean[:, mu_tau_index])
+        sg = jnp.where(cold, 1e8, jnp.sqrt(var[:, mu_tau_index]) + 1e-8)
+        zs = jnp.clip((q - mu_w) / jnp.maximum(sg, 1e-8), -8.0, 8.0)
+        b = jnp.clip(base, 1e-6, 1.0 - 1e-6)
+        logit = jnp.log(b) - jnp.log1p(-b) + alpha * zs
+        p = jnp.where(base >= 1.0 - 1e-6, 1.0, jax.nn.sigmoid(logit))
+    else:
+        p = base
+    p = jnp.clip(p, min_p, 1.0)
+
+    z = (u < p) & (valid > 0.5)
+    inv_p = jnp.where(z, 1.0 / p, 0.0)
+    w = jnp.stack([jnp.ones_like(q), q, q * q], axis=-1)       # [B, 3]
+    agg_new = agg_now + inv_p[:, None, None] * w[:, None, :]
+    new_agg = jnp.where(z[:, None, None], agg_new, agg)
+    new_v_f = jnp.where(z, inv_p + beta_h * v_f, v_f)
+    new_last_t = jnp.where(z, t, last_t)
+    return (new_last_t, new_v_f, new_agg.reshape(B, 3 * T), z, p, feats)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0) -> jax.Array:
+    """Naive dense attention.  q: [B,H,Sq,D]; k,v: [B,Kh,Skv,D]."""
+    B, H, Sq, D = q.shape
+    Kh, Skv = k.shape[1], k.shape[2]
+    G = H // Kh
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kk,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), vv,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

@@ -1,0 +1,6 @@
+"""Launchers: production meshes, multi-pod dry-run, train/serve drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS (512 host devices) at import time
+by design — do not import it from tests or library code; invoke it as
+``python -m repro.launch.dryrun`` only.
+"""

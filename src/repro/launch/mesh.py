@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first jax init,
+and smoke tests must keep seeing 1 device.
+
+Topology notes (v5e target): the 16x16 single-pod mesh maps 'model' to the
+fast ICI ring and 'data' across it; the multi-pod 'pod' axis rides DCN
+(~25x slower per link than ICI), so the launcher places only DP gradient
+all-reduce — overlappable with backward — on 'pod' (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_named(name: str):
+    if name in ("single", "single_pod", "16x16"):
+        return make_production_mesh(multi_pod=False)
+    if name in ("multi", "multi_pod", "2x16x16"):
+        return make_production_mesh(multi_pod=True)
+    raise ValueError(name)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,287 @@
+"""GQA attention: chunked (flash-style) training path, KV-cache decode path,
+local-window and cross-attention variants.
+
+The training/prefill path is blockwise with online softmax (lax.scan over KV
+chunks) so the [S, S] score matrix is never materialized — required for the
+32k/500k cells and mirroring the Pallas ``flash_attention`` kernel, which is
+the TPU-target implementation of the same algorithm (kernels/flash_attention).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Spec, shard
+
+NEG_INF = -1e30
+
+
+def attn_specs(d_model: int, num_heads: int, num_kv_heads: int, head_dim: int,
+               use_bias: bool = False, qk_norm: bool = False,
+               cross: bool = False) -> dict:
+    # head_dim is deliberately NOT a sharded weight axis: contracting over a
+    # sharded head_dim turns every QK^T block into a partial-sum all-reduce
+    # of the scores (measured: 16 GB/layer tuples on smollm) — TP shards
+    # heads instead, and K/V weights stay replicated over 'model' when
+    # kv_heads doesn't divide it (they are small).
+    s = {
+        "wq": Spec((d_model, num_heads, head_dim), ("embed", "heads", None)),
+        "wk": Spec((d_model, num_kv_heads, head_dim), ("embed", "kv_heads", None)),
+        "wv": Spec((d_model, num_kv_heads, head_dim), ("embed", "kv_heads", None)),
+        "wo": Spec((num_heads, head_dim, d_model), ("heads", None, "embed"),
+                   fan_in=num_heads * head_dim),
+    }
+    if use_bias:
+        s["bq"] = Spec((num_heads, head_dim), ("heads", None), "zeros")
+        s["bk"] = Spec((num_kv_heads, head_dim), ("kv_heads", None), "zeros")
+        s["bv"] = Spec((num_kv_heads, head_dim), ("kv_heads", None), "zeros")
+        s["bo"] = Spec((d_model,), ("embed",), "zeros")
+    if qk_norm:
+        s["q_norm"] = Spec((head_dim,), ("head_dim",), "ones")
+        s["k_norm"] = Spec((head_dim,), ("head_dim",), "ones")
+    return s
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, S_max, Kh, D]
+    v: jax.Array  # [B, S_max, Kh, D]
+
+    @staticmethod
+    def zeros(batch: int, max_len: int, num_kv_heads: int, head_dim: int,
+              dtype=jnp.bfloat16) -> "KVCache":
+        shp = (batch, max_len, num_kv_heads, head_dim)
+        return KVCache(jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """[Sq, Skv] boolean validity mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def _attend_block(q, k, v, q_pos, k_pos, scale, causal, window, softcap,
+                  k_valid=None):
+    """Dense attention for one (q-block, kv-block): returns (out, m, l).
+
+    q: [B, Sq, Kh, G, D]; k/v: [B, Skv, Kh, D].  fp32 softmax statistics.
+    """
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = _mask(q_pos, k_pos, causal, window)
+    if k_valid is not None:
+        mask &= k_valid[None, :]
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                          # [B,Kh,G,Sq]
+    e = jnp.exp(s - m[..., None])
+    l = jnp.sum(e, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", e.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    # statistics in [B, Sq, Kh, G] layout to match the accumulator
+    return o, m.transpose(0, 3, 1, 2), l.transpose(0, 3, 1, 2)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                      window: int = 0, softcap: float = 0.0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      k_valid=None, expand_kv: bool = True,
+                      kv_axes=("batch", "seq", "heads", None)) -> jax.Array:
+    """Online-softmax blockwise attention.
+
+    q: [B, Sq, H, D]; k, v: [B, Skv, Kh, D]; q_pos: [Sq]; k_pos: [Skv].
+    Returns [B, Sq, H, D] (q.dtype).
+    """
+    B, Sq, H, D = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    scale = D ** -0.5
+    if common.attention_stub_enabled():
+        # HBM-footprint stub (see common.attention_stub): reads K and V in
+        # full, writes O in full; no [Sq, Skv] intermediates.
+        kv = (k.mean(axis=1) + v.mean(axis=1))          # [B, Kh, D]
+        kvh = jnp.repeat(kv, G, axis=1)                 # [B, H, D]
+        return (q * kvh[:, None, :, :]).astype(q.dtype)
+    if G > 1 and expand_kv:
+        # expand KV to flat heads: the grouped [Kh, G] reshape cannot be
+        # expressed as a clean 'model'-axis sharding (96 heads / 16 shards
+        # straddle kv groups), so scores would reshard every block.  The
+        # expansion is sharded on heads (train/prefill) or keeps the cache's
+        # kv_seq sharding (decode — see decode_self_attention); the Pallas
+        # kernel avoids the expansion entirely via its GQA index map.
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        k = shard(k, *kv_axes)
+        v = shard(v, *kv_axes)
+        Kh, G = H, 1
+    qg = q.reshape(B, Sq, Kh, G, D)
+    Skv = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    if Sq % q_chunk or Skv % kv_chunk:  # fallback: single block
+        o, m, l = _attend_block(qg, k, v, q_pos, k_pos, scale, causal, window,
+                                softcap, k_valid)
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+    nq, nkv = Sq // q_chunk, Skv // kv_chunk
+    qg = qg.reshape(B, nq, q_chunk, Kh, G, D)
+    kc = k.reshape(B, nkv, kv_chunk, Kh, D)
+    vc = v.reshape(B, nkv, kv_chunk, Kh, D)
+    qp = q_pos.reshape(nq, q_chunk)
+    kp = k_pos.reshape(nkv, kv_chunk)
+    kval = None if k_valid is None else k_valid.reshape(nkv, kv_chunk)
+
+    def q_block(qi, qpi):
+        def kv_step(carry, xs):
+            acc, m_run, l_run = carry
+            ki, vi, kpi, kvi = xs
+            o, m_new, l_new = _attend_block(qi, ki, vi, qpi, kpi, scale,
+                                            causal, window, softcap, kvi)
+            m_next = jnp.maximum(m_run, m_new)
+            c_old = jnp.exp(m_run - m_next)
+            c_new = jnp.exp(m_new - m_next)
+            acc = acc * c_old[..., None] + o * c_new[..., None]
+            l_run = l_run * c_old + l_new * c_new
+            return (acc, m_next, l_run), None
+
+        acc0 = jnp.zeros((B, q_chunk, Kh, G, D), jnp.float32)
+        m0 = jnp.full((B, q_chunk, Kh, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, Kh, G), jnp.float32)
+        xs = (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kp,
+              (jnp.ones((nkv, kv_chunk), bool) if kval is None else kval))
+        (acc, m_run, l_run), _ = common.scan(kv_step, (acc0, m0, l0), xs)
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        return out  # [B, q_chunk, Kh, G, D]
+
+    out = common.loop_map(lambda xs: q_block(*xs),
+                          (qg.transpose(1, 0, 2, 3, 4, 5), qp))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def _project_qkv(p, x, kv_x, num_heads, num_kv_heads, head_dim, qk_norm,
+                 norm_eps):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if qk_norm:
+        q = common.rms_norm(q, p["q_norm"], norm_eps)
+        k = common.rms_norm(k, p["k_norm"], norm_eps)
+    return q, k, v
+
+
+def self_attention(p, x, positions, *, num_heads, num_kv_heads, head_dim,
+                   rope_theta, causal=True, window=0, softcap=0.0,
+                   qk_norm=False, norm_eps=1e-6, use_rope=True,
+                   q_chunk=1024, kv_chunk=1024, return_kv=False):
+    """Training / prefill self-attention.  x: [B,S,D_model], positions: [S]."""
+    q, k, v = _project_qkv(p, x, x, num_heads, num_kv_heads, head_dim,
+                           qk_norm, norm_eps)
+    if use_rope:
+        q = common.apply_rope(q, positions, rope_theta)
+        k = common.apply_rope(k, positions, rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    out = chunked_attention(q, k, v, positions, positions, causal=causal,
+                            window=window, softcap=softcap,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    out = shard(out, "batch", "seq", None)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def decode_self_attention(p, x, cache: KVCache, pos, *, num_heads,
+                          num_kv_heads, head_dim, rope_theta, window=0,
+                          softcap=0.0, qk_norm=False, norm_eps=1e-6,
+                          use_rope=True):
+    """Single-token decode.  x: [B,1,D]; pos: scalar current position.
+
+    Cache is a ring buffer when ``window`` > 0 (constant memory for local
+    attention / long-context decode).
+    """
+    q, k, v = _project_qkv(p, x, x, num_heads, num_kv_heads, head_dim,
+                           qk_norm, norm_eps)
+    # 'dec_heads' (not 'heads'): decode-time q sharding is a separate
+    # decision from weight TP — with a kv_seq-sharded cache, replicating q
+    # over 'model' turns cache gathers into a tiny partial-softmax combine
+    q = shard(q, "batch", None, "dec_heads", None)
+    positions = jnp.full((1,), pos, jnp.int32)
+    if use_rope:
+        q = common.apply_rope(q, positions, rope_theta)
+        k = common.apply_rope(k, positions, rope_theta)
+    S_max = cache.k.shape[1]
+    slot = jnp.where(window > 0, pos % S_max, pos) if window > 0 else pos
+    cache = KVCache(
+        k=jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                              slot, axis=1),
+        v=jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                              slot, axis=1))
+    if window > 0:
+        # ring buffer: absolute position of slot i given current pos
+        idx = jnp.arange(S_max)
+        wrap = (pos // S_max) * S_max
+        k_pos = jnp.where(idx <= pos % S_max, wrap + idx, wrap - S_max + idx)
+        k_valid = (k_pos >= 0) & (k_pos > pos - window) & (k_pos <= pos)
+    else:
+        k_pos = jnp.arange(S_max)
+        k_valid = k_pos <= pos
+    # decode keeps the grouped GQA form: expanding KV 12x (command-r) just
+    # to flatten heads would materialize/reshard the whole cache; with q
+    # tiny (one token) the grouped einsum against the kv_seq-sharded cache
+    # reduces to a partial-softmax combine (MB-scale collectives).
+    out = chunked_attention(q, cache.k, cache.v, positions, k_pos,
+                            causal=False, window=0, softcap=softcap,
+                            q_chunk=1, kv_chunk=min(8192, S_max),
+                            k_valid=k_valid, expand_kv=False)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out, cache
+
+
+def cross_kv(p, kv_src, *, qk_norm=False, norm_eps=1e-6):
+    """Project the (vision) memory to K/V once — reused across decode steps."""
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(kv_src.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(kv_src.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(kv_src.dtype)
+        v = v + p["bv"].astype(kv_src.dtype)
+    if qk_norm:
+        k = common.rms_norm(k, p["k_norm"], norm_eps)
+    return k, v
+
+
+def cross_attention(p, x, kv, *, num_heads, num_kv_heads, head_dim,
+                    qk_norm=False, norm_eps=1e-6, q_chunk=1024) -> jax.Array:
+    """Cross-attention over precomputed memory K/V.  kv = (k, v): [B,Nv,Kh,D]."""
+    k, v = kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    if qk_norm:
+        q = common.rms_norm(q, p["q_norm"], norm_eps)
+    Sq, Skv = x.shape[1], k.shape[1]
+    out = chunked_attention(q, k, v, jnp.arange(Sq), jnp.arange(Skv),
+                            causal=False, q_chunk=q_chunk,
+                            kv_chunk=min(Skv, 2048))
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out

@@ -1,0 +1,623 @@
+"""Unified multi-family model backbone with train / prefill / decode APIs.
+
+Every assigned architecture is expressed as a *layer plan*:
+
+    prefix kinds  +  (pattern kinds) x n_groups  +  suffix kinds
+
+where a kind is one of
+  attn   pre-norm GQA self-attention (+ SwiGLU MLP when d_ff > 0)
+  moe    pre-norm GQA self-attention + mixture-of-experts FFN
+  ssd    Mamba-2 SSD block (norm + ssd, no MLP)
+  rec    RG-LRU recurrent block + MLP
+  cross  tanh-gated cross-attention over vision memory + gated MLP
+
+The pattern section is executed with ``jax.lax.scan`` over stacked parameters
+(one stack per pattern position), keeping HLO size O(pattern) instead of
+O(layers); prefix/suffix layers (e.g. kimi's first dense layer,
+recurrentgemma's trailing partial group) are unrolled.
+
+Decode state mirrors the plan: each layer position owns a cache entry whose
+type depends on its kind (KVCache / SSMState / RGLRUState / precomputed cross
+K/V), stacked along the group dim for scanned positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, ffn, mamba2, rglru
+from repro.models.attention import KVCache
+from repro.models.common import Spec, shard
+from repro.models.mamba2 import SSMState
+from repro.models.rglru import RGLRUState
+
+VOCAB_ALIGN = 128  # pad vocab so the 'model' axis always divides it
+
+ZERO_METRICS = {"moe_aux_loss": 0.0, "moe_z_loss": 0.0, "moe_drop_frac": 0.0}
+
+
+def padded_vocab(cfg) -> int:
+    v = cfg.vocab_size
+    return -(-v // VOCAB_ALIGN) * VOCAB_ALIGN
+
+
+# ----------------------------------------------------------------- layer plan
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    prefix: Tuple[str, ...]
+    pattern: Tuple[str, ...]
+    n_groups: int
+    suffix: Tuple[str, ...]
+
+    @property
+    def num_layers(self) -> int:
+        return (len(self.prefix) + len(self.pattern) * self.n_groups
+                + len(self.suffix))
+
+
+def layer_plan(cfg) -> LayerPlan:
+    if cfg.family == "ssm":
+        pattern: Tuple[str, ...] = ("ssd",)
+    elif cfg.family == "moe":
+        pattern = ("moe",)
+    elif cfg.family == "hybrid":
+        pattern = tuple(cfg.block_pattern) or ("rec", "rec", "attn")
+    elif cfg.family == "vlm":
+        k = cfg.cross_attn_every
+        pattern = ("attn",) * (k - 1) + ("cross",)
+    else:  # dense / audio
+        pattern = ("attn",)
+    prefix = ("attn",) * cfg.first_dense_layers
+    body = cfg.num_layers - len(prefix)
+    n_groups = body // len(pattern)
+    suffix = pattern[: body % len(pattern)]
+    return LayerPlan(prefix, pattern, n_groups, suffix)
+
+
+# ------------------------------------------------------------------ specs
+def _norm_spec(cfg) -> Spec:
+    return Spec((cfg.d_model,), ("embed",), "ones")
+
+
+def block_specs(kind: str, cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    attn_kw = dict(d_model=D, num_heads=cfg.num_heads,
+                   num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                   use_bias=cfg.use_bias, qk_norm=cfg.qk_norm)
+    if kind == "ssd":
+        return {"ln": _norm_spec(cfg), "ssd": mamba2.ssd_specs(cfg)}
+    if kind == "rec":
+        return {"ln1": _norm_spec(cfg), "rglru": rglru.rglru_specs(cfg),
+                "ln2": _norm_spec(cfg), "mlp": ffn.mlp_specs(D, F)}
+    if kind == "attn":
+        s = {"ln1": _norm_spec(cfg), "attn": attention.attn_specs(**attn_kw)}
+        if F > 0:
+            s["ln2"] = _norm_spec(cfg)
+            s["mlp"] = ffn.mlp_specs(D, F, cfg.use_bias, cfg.mlp_gated)
+        return s
+    if kind == "moe":
+        return {"ln1": _norm_spec(cfg), "attn": attention.attn_specs(**attn_kw),
+                "ln2": _norm_spec(cfg),
+                "moe": ffn.moe_specs(D, cfg.moe_d_ff, cfg.num_experts_padded,
+                                     cfg.num_shared_experts)}
+    if kind == "cross":
+        return {"ln1": _norm_spec(cfg),
+                "xattn": attention.attn_specs(**attn_kw),
+                "gate_attn": Spec((), (), "zeros"),
+                "ln2": _norm_spec(cfg), "mlp": ffn.mlp_specs(D, F),
+                "gate_mlp": Spec((), (), "zeros")}
+    raise ValueError(kind)
+
+
+def model_specs(cfg) -> dict:
+    plan = layer_plan(cfg)
+    Vp = padded_vocab(cfg)
+    s: dict = {}
+    if cfg.input_mode == "frames":
+        s["embed"] = {"frame_proj": Spec((cfg.frame_dim, cfg.d_model),
+                                         (None, "embed")),
+                      "frame_bias": Spec((cfg.d_model,), ("embed",), "zeros")}
+    else:
+        s["embed"] = {"tok": Spec((Vp, cfg.d_model), ("vocab", "embed"),
+                                  "embed")}
+    s["prefix"] = [block_specs(k, cfg) for k in plan.prefix]
+    s["groups"] = tuple(
+        common.stack_specs(block_specs(k, cfg), plan.n_groups, "layers")
+        for k in plan.pattern) if plan.n_groups else ()
+    s["suffix"] = [block_specs(k, cfg) for k in plan.suffix]
+    s["final_norm"] = _norm_spec(cfg)
+    if not cfg.tie_embeddings and cfg.input_mode != "frames":
+        s["head"] = Spec((cfg.d_model, Vp), ("embed", "vocab"))
+    elif cfg.input_mode == "frames":
+        s["head"] = Spec((cfg.d_model, Vp), ("embed", "vocab"))
+    return s
+
+
+def init_params(cfg, key: jax.Array, dtype=jnp.float32):
+    return common.init_tree(model_specs(cfg), key, dtype)
+
+
+def param_pspecs(cfg):
+    return common.pspec_tree(model_specs(cfg))
+
+
+def param_shapes(cfg, dtype=jnp.bfloat16):
+    return common.shapes_tree(model_specs(cfg), dtype)
+
+
+def count_params(cfg) -> int:
+    return common.count_params(model_specs(cfg))
+
+
+def active_params(cfg) -> int:
+    """Active parameters per token (MoE routes top_k of num_experts)."""
+    if cfg.family != "moe":
+        return count_params(cfg)
+    total = count_params(cfg)
+    plan = layer_plan(cfg)
+    n_moe = sum(k == "moe" for k in plan.prefix + plan.suffix) \
+        + sum(k == "moe" for k in plan.pattern) * plan.n_groups
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    routed = n_moe * cfg.num_experts_padded * per_expert
+    active_routed = n_moe * cfg.top_k * per_expert
+    return total - routed + active_routed
+
+
+# ------------------------------------------------------------------ forward
+def _embed(params, cfg, batch, compute_dtype):
+    if cfg.input_mode == "frames":
+        x = batch["frames"].astype(compute_dtype)
+        w = params["embed"]["frame_proj"].astype(compute_dtype)
+        x = jnp.einsum("bsf,fd->bsd", x, w) \
+            + params["embed"]["frame_bias"].astype(compute_dtype)
+    else:
+        tok = params["embed"]["tok"]
+        x = jnp.take(tok, batch["tokens"], axis=0).astype(compute_dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    return shard(x, "batch", "seq", None)
+
+
+def _attn_kwargs(cfg, window):
+    return dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                softcap=cfg.attn_softcap, qk_norm=cfg.qk_norm,
+                norm_eps=cfg.norm_eps, window=window)
+
+
+def apply_block(kind: str, p, x, cfg, positions, vision, *,
+                collect_cache: bool = False):
+    """One layer forward.  Returns (x, metrics, cache_entry_or_None)."""
+    metrics = dict(ZERO_METRICS)
+    cache = None
+    window = cfg.attn_window if cfg.family == "hybrid" else \
+        (cfg.attn_window if kind == "attn" else 0)
+    if kind == "ssd":
+        h = common.rms_norm(x, p["ln"], cfg.norm_eps)
+        out = mamba2.ssd_block(p["ssd"], h, cfg, return_state=collect_cache)
+        if collect_cache:
+            out, cache = out
+        x = x + out
+    elif kind == "rec":
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        out = rglru.rglru_block(p["rglru"], h, cfg, return_state=collect_cache)
+        if collect_cache:
+            out, cache = out
+        x = x + out
+        h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + ffn.mlp(p["mlp"], h)
+    elif kind in ("attn", "moe"):
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        out = attention.self_attention(
+            p["attn"], h, positions, causal=cfg.causal,
+            use_rope=cfg.causal,  # encoder-only (hubert) skips rope
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            return_kv=collect_cache, **_attn_kwargs(cfg, cfg.attn_window))
+        if collect_cache:
+            out, (k, v) = out
+            cache = (k, v)
+        x = x + out
+        if kind == "moe":
+            h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+            moe_fn = ffn.moe
+            if cfg.moe_impl == "ep_a2a":
+                from repro.models.moe_ep import moe_ep as moe_fn
+            y, m = moe_fn(p["moe"], h, num_experts=cfg.num_experts,
+                          top_k=cfg.top_k,
+                          capacity_factor=cfg.capacity_factor)
+            metrics.update({k2: m[k2] for k2 in metrics if k2 in m})
+            x = x + y
+        elif cfg.d_ff > 0:
+            h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + ffn.mlp(p["mlp"], h)
+    elif kind == "cross":
+        kv = attention.cross_kv(p["xattn"], vision, qk_norm=cfg.qk_norm,
+                                norm_eps=cfg.norm_eps)
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        out = attention.cross_attention(
+            p["xattn"], h, kv, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps, q_chunk=cfg.q_chunk)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * out
+        h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * ffn.mlp(p["mlp"], h)
+        if collect_cache:
+            cache = kv
+    else:
+        raise ValueError(kind)
+    return x, metrics, cache
+
+
+def _acc_metrics(acc, m):
+    return {k: acc[k] + m[k] for k in acc}
+
+
+def forward_hidden(params, cfg, batch, *, compute_dtype=jnp.bfloat16,
+                   remat: bool = False):
+    """Embed + all layers + final norm.  Returns ([B,S,D] hidden, metrics)."""
+    plan = layer_plan(cfg)
+    x = _embed(params, cfg, batch, compute_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    vision = batch.get("image_embeds")
+    if vision is not None:
+        vision = vision.astype(compute_dtype)
+    metrics = {k: jnp.zeros((), jnp.float32) for k in ZERO_METRICS}
+
+    for kind, p in zip(plan.prefix, params["prefix"]):
+        x, m, _ = apply_block(kind, p, x, cfg, positions, vision)
+        metrics = _acc_metrics(metrics, m)
+
+    if plan.n_groups:
+        def group_body(carry, p_slices):
+            x, met = carry
+            for kind, p in zip(plan.pattern, p_slices):
+                x, m, _ = apply_block(kind, p, x, cfg, positions, vision)
+                met = _acc_metrics(met, m)
+            return (x, met), None
+
+        body = jax.checkpoint(group_body) if remat else group_body
+        (x, metrics), _ = common.scan(body, (x, metrics), params["groups"])
+
+    for kind, p in zip(plan.suffix, params["suffix"]):
+        x, m, _ = apply_block(kind, p, x, cfg, positions, vision)
+        metrics = _acc_metrics(metrics, m)
+
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, metrics
+
+
+def _head_weight(params, cfg):
+    if "head" in params:
+        return params["head"]
+    return params["embed"]["tok"].T  # tied
+
+
+def logits_from_hidden(params, cfg, x) -> jax.Array:
+    """Full-vocab logits (smoke tests / serving).  [B,S,D] -> [B,S,Vp] f32."""
+    w = _head_weight(params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    logits = shard(logits, "batch", "seq", "vocab").astype(jnp.float32)
+    Vp = logits.shape[-1]
+    if Vp > cfg.vocab_size:  # mask vocab padding
+        pad = jnp.arange(Vp) >= cfg.vocab_size
+        logits = jnp.where(pad, -1e30, logits)
+    return logits
+
+
+def chunked_xent(params, cfg, x, labels, valid, *, seq_chunk: int = 512):
+    """Cross-entropy without materializing [B, S, V] logits.
+
+    x: [B,S,D]; labels: [B,S] int32; valid: [B,S] bool.
+    The sequence is processed in chunks (head matmul + fp32 logsumexp per
+    chunk, rematerialized in backward) so peak memory is [B, chunk, V].
+    """
+    B, S, D = x.shape
+    w = _head_weight(params, cfg)
+    V = cfg.vocab_size
+    chunk = min(seq_chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+
+    @jax.checkpoint
+    def one_chunk(args):
+        xc, lc, vc = args
+        logits = jnp.einsum("bsd,dv->bsv", xc, w.astype(xc.dtype))
+        logits = shard(logits, "batch", None, "vocab").astype(jnp.float32)
+        Vp = logits.shape[-1]
+        if Vp > V:
+            pad = jnp.arange(Vp) >= V
+            logits = jnp.where(pad, -1e30, logits)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        ce = jnp.where(vc, lse - ll, 0.0)
+        correct = jnp.where(vc, jnp.argmax(logits, -1) == lc, False)
+        return (ce.sum(), vc.sum(), correct.sum())
+
+    xs = (x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3),
+          labels.reshape(B, n, chunk).transpose(1, 0, 2),
+          valid.reshape(B, n, chunk).transpose(1, 0, 2))
+    ce_sum, n_valid, n_correct = common.loop_map(one_chunk, xs)
+    total = jnp.maximum(n_valid.sum(), 1)
+    return (ce_sum.sum() / total,
+            {"accuracy": n_correct.sum() / total,
+             "tokens": total.astype(jnp.float32)})
+
+
+def train_loss(params, cfg, batch, *, compute_dtype=jnp.bfloat16,
+               remat: bool = True, moe_aux_weight: float = 0.01,
+               moe_z_weight: float = 1e-3, seq_chunk: int = 512):
+    """Next-token LM loss (or frame-classification loss for encoders)."""
+    x, metrics = forward_hidden(params, cfg, batch,
+                                compute_dtype=compute_dtype, remat=remat)
+    if cfg.input_mode == "frames" or not cfg.causal:
+        labels = batch["labels"]
+        valid = labels >= 0
+        labels = jnp.maximum(labels, 0)
+    else:
+        tok = batch["tokens"]
+        labels = jnp.concatenate(
+            [tok[:, 1:], jnp.zeros_like(tok[:, :1])], axis=1)
+        valid = jnp.concatenate(
+            [jnp.ones_like(tok[:, 1:], bool),
+             jnp.zeros_like(tok[:, :1], bool)], axis=1)
+    ce, ce_metrics = chunked_xent(params, cfg, x, labels, valid,
+                                  seq_chunk=seq_chunk)
+    loss = ce
+    if cfg.family == "moe":
+        loss = loss + moe_aux_weight * metrics["moe_aux_loss"] \
+            + moe_z_weight * metrics["moe_z_loss"]
+    metrics = dict(metrics)
+    metrics.update(ce_metrics)
+    metrics["ce_loss"] = ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ------------------------------------------------------------------ decode
+class DecodeState(NamedTuple):
+    pos: jax.Array       # int32 scalar: number of tokens already in context
+    prefix: tuple        # per-prefix-layer cache entries
+    groups: tuple        # per-pattern-position stacked cache entries
+    suffix: tuple
+
+
+def _attn_cache_len(cfg, kind: str, max_len: int) -> int:
+    window = cfg.attn_window
+    if window > 0:
+        return min(window, max_len)
+    return max_len
+
+
+def init_block_cache(kind: str, cfg, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    if kind == "ssd":
+        return mamba2.ssd_init_state(cfg, batch, dtype)
+    if kind == "rec":
+        return rglru.rglru_init_state(cfg, batch, dtype)
+    if kind in ("attn", "moe"):
+        return KVCache.zeros(batch, _attn_cache_len(cfg, kind, max_len),
+                             cfg.num_kv_heads, cfg.head_dim, dtype)
+    if kind == "cross":
+        shp = (batch, cfg.num_vision_tokens, cfg.num_kv_heads, cfg.head_dim)
+        return (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+    raise ValueError(kind)
+
+
+def _stack_cache(entries):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *entries)
+
+
+def init_decode_state(cfg, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    plan = layer_plan(cfg)
+    mk = lambda kind: init_block_cache(kind, cfg, batch, max_len, dtype)
+    groups = tuple(
+        _stack_cache([mk(kind)] * plan.n_groups) for kind in plan.pattern
+    ) if plan.n_groups else ()
+    return DecodeState(
+        pos=jnp.zeros((), jnp.int32),
+        prefix=tuple(mk(k) for k in plan.prefix),
+        groups=groups,
+        suffix=tuple(mk(k) for k in plan.suffix))
+
+
+def decode_block(kind: str, p, cache, x, cfg, pos, vision):
+    """One layer of single-token decode.  Returns (x, new_cache)."""
+    if kind == "ssd":
+        h = common.rms_norm(x, p["ln"], cfg.norm_eps)
+        out, cache = mamba2.ssd_decode_step(p["ssd"], h, cache, cfg)
+        return x + out, cache
+    if kind == "rec":
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        out, cache = rglru.rglru_decode_step(p["rglru"], h, cache, cfg)
+        x = x + out
+        h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + ffn.mlp(p["mlp"], h), cache
+    if kind in ("attn", "moe"):
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        out, cache = attention.decode_self_attention(
+            p["attn"], h, cache, pos, use_rope=cfg.causal,
+            **_attn_kwargs(cfg, cfg.attn_window))
+        x = x + out
+        if kind == "moe":
+            h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+            y, _ = ffn.moe(p["moe"], h, num_experts=cfg.num_experts,
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor)
+            return x + y, cache
+        if cfg.d_ff > 0:
+            h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + ffn.mlp(p["mlp"], h)
+        return x, cache
+    if kind == "cross":
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        out = attention.cross_attention(
+            p["xattn"], h, cache, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps, q_chunk=1)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * out
+        h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * ffn.mlp(p["mlp"], h)
+        return x, cache  # cross K/V is static during decode
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg, state: DecodeState, token: jax.Array, *,
+                compute_dtype=jnp.bfloat16):
+    """One decode step.  token: [B, 1] int32 -> ([B, Vp] f32 logits, state).
+
+    The pattern section scans over (param stacks, cache stacks) jointly; the
+    updated caches come back as scan outputs, so decode keeps the same
+    O(pattern) HLO footprint as the forward pass.
+    """
+    plan = layer_plan(cfg)
+    x = _embed(params, cfg, {"tokens": token}, compute_dtype)
+    pos = state.pos
+    new_prefix = []
+    for kind, p, c in zip(plan.prefix, params["prefix"], state.prefix):
+        x, c = decode_block(kind, p, c, x, cfg, pos, None)
+        new_prefix.append(c)
+
+    new_groups = state.groups
+    if plan.n_groups:
+        def group_body(x, xs):
+            p_slices, c_slices = xs
+            new_c = []
+            for kind, p, c in zip(plan.pattern, p_slices, c_slices):
+                x, c = decode_block(kind, p, c, x, cfg, pos, None)
+                new_c.append(c)
+            return x, tuple(new_c)
+
+        x, new_groups = common.scan(group_body, x,
+                                    (params["groups"], state.groups))
+
+    new_suffix = []
+    for kind, p, c in zip(plan.suffix, params["suffix"], state.suffix):
+        x, c = decode_block(kind, p, c, x, cfg, pos, None)
+        new_suffix.append(c)
+
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x)[:, 0]
+    state = DecodeState(pos=pos + 1, prefix=tuple(new_prefix),
+                        groups=new_groups, suffix=tuple(new_suffix))
+    return logits, state
+
+
+# ------------------------------------------------------------------ prefill
+def _fill_kv_cache(cfg, kind, kv, max_len: int, dtype) -> KVCache:
+    """Place prefill K/V [B,S,...] into a (possibly ring) cache buffer."""
+    k, v = kv
+    B, S = k.shape[:2]
+    L = _attn_cache_len(cfg, kind, max_len)
+    cache = KVCache.zeros(B, L, cfg.num_kv_heads, cfg.head_dim, dtype)
+    take = min(S, L)
+    ts = jnp.arange(S - take, S)
+    slots = ts % L if cfg.attn_window > 0 else ts
+    return KVCache(k=cache.k.at[:, slots].set(k[:, ts].astype(dtype)),
+                   v=cache.v.at[:, slots].set(v[:, ts].astype(dtype)))
+
+
+def prefill(params, cfg, batch, *, max_len: Optional[int] = None,
+            compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16):
+    """Process the prompt, return ([B, Vp] f32 last-position logits, state)."""
+    plan = layer_plan(cfg)
+    x = _embed(params, cfg, batch, compute_dtype)
+    B, S = x.shape[:2]
+    max_len = max_len or S
+    positions = jnp.arange(S, dtype=jnp.int32)
+    vision = batch.get("image_embeds")
+    if vision is not None:
+        vision = vision.astype(compute_dtype)
+
+    def fix(kind, cache):
+        if kind in ("attn", "moe"):
+            return _fill_kv_cache(cfg, kind, cache, max_len, cache_dtype)
+        return cache
+
+    new_prefix = []
+    for kind, p in zip(plan.prefix, params["prefix"]):
+        x, _, c = apply_block(kind, p, x, cfg, positions, vision,
+                              collect_cache=True)
+        new_prefix.append(fix(kind, c))
+
+    groups = ()
+    if plan.n_groups:
+        def group_body(x, p_slices):
+            caches = []
+            for kind, p in zip(plan.pattern, p_slices):
+                x, _, c = apply_block(kind, p, x, cfg, positions, vision,
+                                      collect_cache=True)
+                caches.append(fix(kind, c))
+            return x, tuple(caches)
+
+        x, groups = common.scan(group_body, x, params["groups"])
+
+    new_suffix = []
+    for kind, p in zip(plan.suffix, params["suffix"]):
+        x, _, c = apply_block(kind, p, x, cfg, positions, vision,
+                              collect_cache=True)
+        new_suffix.append(fix(kind, c))
+
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])[:, 0]
+    state = DecodeState(pos=jnp.asarray(S, jnp.int32),
+                        prefix=tuple(new_prefix), groups=groups,
+                        suffix=tuple(new_suffix))
+    return logits, state
+
+
+def encode(params, cfg, batch, *, compute_dtype=jnp.bfloat16):
+    """Encoder-only serve step (hubert): full-sequence logits."""
+    x, _ = forward_hidden(params, cfg, batch, compute_dtype=compute_dtype)
+    return logits_from_hidden(params, cfg, x)
+
+
+# --------------------------------------------------- logical axes for caches
+# Axis tuples are encoded as '|'-joined strings so they survive as pytree
+# *leaves* (tuples would flatten); parse_axes() recovers the name tuple.
+def parse_axes(s: str):
+    return tuple(None if a == "" else a for a in s.split("|")) \
+        if s else ()
+
+
+def _ax(*names) -> str:
+    return "|".join("" if n is None else n for n in names)
+
+
+def _block_cache_axes(kind: str, stacked: bool):
+    """Logical-axis strings matching init_block_cache leaf shapes."""
+    g = ("layers",) if stacked else ()
+    if kind == "ssd":
+        return SSMState(conv=_ax(*g, "batch", None, "ff"),
+                        h=_ax(*g, "batch", "heads", None, None))
+    if kind == "rec":
+        return RGLRUState(conv=_ax(*g, "batch", None, "ff"),
+                          h=_ax(*g, "batch", "ff"))
+    if kind in ("attn", "moe"):
+        # cache sharded along the SEQUENCE dim: decode attends to local KV
+        # slices and combines partial softmax stats with a tiny all-reduce
+        # (the standard TPU decode-kernel scheme); kv_heads/head_dim stay
+        # whole so no score contraction crosses shards.
+        ax = _ax(*g, "batch", "kv_seq", None, None)
+        return KVCache(k=ax, v=ax)
+    if kind == "cross":
+        ax = _ax(*g, "batch", "vision", "kv_heads", "head_dim")
+        return (ax, ax)
+    raise ValueError(kind)
+
+
+def decode_state_axes(cfg) -> DecodeState:
+    """DecodeState-shaped tree of axis strings (for in_shardings)."""
+    plan = layer_plan(cfg)
+    return DecodeState(
+        pos=_ax(),
+        prefix=tuple(_block_cache_axes(k, False) for k in plan.prefix),
+        groups=tuple(_block_cache_axes(k, True) for k in plan.pattern
+                     ) if plan.n_groups else (),
+        suffix=tuple(_block_cache_axes(k, False) for k in plan.suffix))

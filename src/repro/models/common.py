@@ -1,0 +1,193 @@
+"""Shared model machinery: parameter descriptors, norms, rope, dtype policy.
+
+Parameters are declared as ``Spec`` descriptor pytrees carrying shape +
+*logical axis names*; materialization (init) and sharding-spec derivation both
+walk the same tree, so a model definition is a single source of truth for
+math, memory layout and distribution.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import context as dctx
+
+# --------------------------------------------------------------- analysis
+# XLA's HloCostAnalysis counts while-loop bodies ONCE (no trip-count
+# multiplication), so cost_analysis() under-reports scanned models.  The
+# dry-run therefore lowers an *analysis variant* with every scan unrolled
+# (exact flop/byte/collective accounting) at 1 and 2 layer-groups and
+# extrapolates affinely; this contextvar is how that variant is requested
+# without threading a flag through every call signature.
+_ANALYSIS_UNROLL = contextvars.ContextVar("repro_analysis_unroll",
+                                          default=False)
+
+
+def analysis_unroll_enabled() -> bool:
+    return _ANALYSIS_UNROLL.get()
+
+
+@contextlib.contextmanager
+def analysis_unroll(on: bool = True):
+    tok = _ANALYSIS_UNROLL.set(on)
+    try:
+        yield
+    finally:
+        _ANALYSIS_UNROLL.reset(tok)
+
+
+def scan(f, init, xs, **kw):
+    """lax.scan that fully unrolls under analysis mode (see above)."""
+    if analysis_unroll_enabled():
+        kw = dict(kw)
+        kw["unroll"] = True
+    return jax.lax.scan(f, init, xs, **kw)
+
+
+def loop_map(f, xs):
+    """lax.map that unrolls under analysis mode."""
+    if analysis_unroll_enabled():
+        n = jax.tree.leaves(xs)[0].shape[0]
+        ys = [f(jax.tree.map(lambda x: x[i], xs)) for i in range(n)]
+        return jax.tree.map(lambda *zs: jnp.stack(zs, 0), *ys)
+    return jax.lax.map(f, xs)
+
+
+# The jnp attention path materializes [bq, bk] score blocks, which on the
+# TPU target live in VMEM inside the Pallas flash kernel and never touch
+# HBM.  XLA:CPU HLO counts them as memory traffic, inflating the roofline
+# memory term ~1000x.  The dry-run therefore measures HBM bytes on a
+# variant where attention-like score computations are replaced by a stub
+# with the same HBM footprint (reads Q/K/V, writes O) and trivial compute;
+# FLOPs are taken from the full variant.
+_ATTN_STUB = contextvars.ContextVar("repro_attention_stub", default=False)
+
+
+def attention_stub_enabled() -> bool:
+    return _ATTN_STUB.get()
+
+
+@contextlib.contextmanager
+def attention_stub(on: bool = True):
+    tok = _ATTN_STUB.set(on)
+    try:
+        yield
+    finally:
+        _ATTN_STUB.reset(tok)
+
+
+class Spec(NamedTuple):
+    """Parameter descriptor: shape + logical axes + initializer."""
+
+    shape: tuple
+    axes: tuple            # logical axis name (or None) per dim
+    init: str = "normal"   # normal | zeros | ones | embed | ssm_a | ssm_dt
+    fan_in: Optional[int] = None
+
+    def pspec(self):
+        return dctx.pspec_for(self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_param(spec: Spec, key: jax.Array, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a":  # mamba2 A_log in [1, 16]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "ssm_dt":  # dt bias ~ softplus-inverse of U[1e-3, 1e-1]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(dtype)
+    if spec.init == "rglru_a":  # a-param so sigmoid(.)^8 in ~[0.9, 0.999]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        lam = u ** (1.0 / 8.0)
+        return (jnp.log(lam) - jnp.log1p(-lam)).astype(dtype)
+    fan_in = spec.fan_in
+    if fan_in is None:
+        fan_in = spec.shape[0] if len(spec.shape) >= 2 else spec.shape[-1]
+    # GPT-2-style embedding init keeps tied-head logits O(1)
+    scale = 0.02 if spec.init == "embed" else (1.0 / jnp.sqrt(fan_in))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale
+            ).astype(dtype)
+
+
+def init_tree(specs, key: jax.Array, dtype=jnp.float32):
+    """Materialize a Spec pytree into parameter arrays (deterministic split)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    params = [init_param(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, params)
+
+
+def pspec_tree(specs):
+    return jax.tree.map(lambda s: s.pspec(), specs, is_leaf=is_spec)
+
+
+def shapes_tree(specs, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs, is_leaf=is_spec)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+def stack_specs(spec, n: int, axis_name: Optional[str] = "layers"):
+    """Prefix every Spec in a tree with a stacking (scan) dimension."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.fan_in),
+        spec, is_leaf=is_spec)
+
+
+# --------------------------------------------------------------------- layers
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6,
+             offset: float = 0.0) -> jax.Array:
+    """RMSNorm with fp32 accumulation (bf16-safe)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (offset + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                      # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def softmax_fp32(scores: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=axis)
+
+
+def shard(x, *axes):
+    return dctx.shard(x, *axes)

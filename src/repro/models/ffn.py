@@ -1,0 +1,147 @@
+"""Feed-forward blocks: dense SwiGLU MLP and sort-based expert-parallel MoE.
+
+MoE uses the dropless-with-capacity formulation: tokens are argsorted by
+expert id and gathered into an [E, capacity, D] block layout (no [T, E, cap]
+one-hot tensors — at 1M tokens x 384 experts those are infeasible).  Expert
+compute is a batched einsum whose leading dim shards over the 'model' mesh
+axis (expert parallelism); the dispatch gather/scatter across the token->
+expert resharding is the EP all-to-all, visible to the roofline analysis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Spec, shard
+
+
+def mlp_specs(d_model: int, d_ff: int, use_bias: bool = False,
+              gated: bool = True) -> dict:
+    s = {
+        "w_up": Spec((d_model, d_ff), ("embed", "ff")),
+        "w_down": Spec((d_ff, d_model), ("ff", "embed")),
+    }
+    if gated:
+        s["w_gate"] = Spec((d_model, d_ff), ("embed", "ff"))
+    if use_bias:
+        s["b_up"] = Spec((d_ff,), ("ff",), "zeros")
+        s["b_down"] = Spec((d_model,), ("embed",), "zeros")
+        if gated:
+            s["b_gate"] = Spec((d_ff,), ("ff",), "zeros")
+    return s
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    if "b_up" in p:
+        u = u + p["b_up"].astype(x.dtype)
+    if "w_gate" in p:  # SwiGLU
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        if "b_gate" in p:
+            g = g + p["b_gate"].astype(x.dtype)
+        g = shard(g, "batch", "seq", "ff")
+        h = common.swiglu(g, u)
+    else:  # ungated GELU (hubert / wav2vec2 family)
+        h = jax.nn.gelu(shard(u, "batch", "seq", "ff"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    if "b_down" in p:
+        out = out + p["b_down"].astype(x.dtype)
+    return shard(out, "batch", "seq", None)
+
+
+# ------------------------------------------------------------------------ MoE
+def moe_specs(d_model: int, moe_d_ff: int, num_experts_padded: int,
+              num_shared: int = 0) -> dict:
+    E = num_experts_padded
+    s = {
+        "router": Spec((d_model, E), ("embed", "experts"), fan_in=d_model),
+        "w_gate": Spec((E, d_model, moe_d_ff), ("experts", "embed", "ff"),
+                       fan_in=d_model),
+        "w_up": Spec((E, d_model, moe_d_ff), ("experts", "embed", "ff"),
+                     fan_in=d_model),
+        "w_down": Spec((E, moe_d_ff, d_model), ("experts", "ff", "embed"),
+                       fan_in=moe_d_ff),
+    }
+    if num_shared > 0:
+        s["shared"] = mlp_specs(d_model, num_shared * moe_d_ff)
+        s["shared_gate"] = Spec((d_model, 1), ("embed", None), "zeros")
+    return s
+
+
+def moe(p: dict, x: jax.Array, *, num_experts: int, top_k: int,
+        capacity_factor: float = 1.25, router_dtype=jnp.float32,
+        deterministic_capacity: Optional[int] = None):
+    """Mixture-of-experts block.  x: [B, S, D] -> (y, aux_metrics).
+
+    num_experts: the *logical* expert count (<= padded count in the params);
+    padding experts are masked out of routing entirely.
+    """
+    B, S, D = x.shape
+    E_pad = p["router"].shape[1]
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(router_dtype),
+                        p["router"].astype(router_dtype))
+    if E_pad > num_experts:  # mask padding experts out of the softmax
+        pad_mask = jnp.arange(E_pad) >= num_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, eid = jax.lax.top_k(probs, top_k)              # [T, k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (Switch/GShard) + router z-loss
+    me = probs.mean(0)                                      # [E]
+    ce = jnp.zeros((E_pad,)).at[eid.reshape(-1)].add(1.0) / (T * top_k)
+    aux_loss = num_experts * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- sort-based dispatch into [E, cap, D]
+    if deterministic_capacity is not None:
+        cap = deterministic_capacity
+    else:
+        cap = int(math.ceil(T * top_k / num_experts * capacity_factor))
+        # round up to 256 so the capacity dim can co-shard with the data axis
+        # (the [E, cap, D] dispatch buffer is the dominant MoE activation)
+        cap = max(256, -(-cap // 256) * 256)
+    flat_e = eid.reshape(-1)                                # [T*k]
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    idx = jnp.arange(T * top_k)
+    is_start = jnp.concatenate([jnp.array([True]), sorted_e[1:] != sorted_e[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    rank = idx - seg_start                                   # slot within expert
+    keep = rank < cap
+    dest = jnp.where(keep, sorted_e * cap + rank, E_pad * cap)  # OOB -> dropped
+    src_token = order // top_k                               # originating token
+
+    xe = jnp.zeros((E_pad * cap, D), x.dtype).at[dest].set(
+        xf[src_token], mode="drop").reshape(E_pad, cap, D)
+    xe = shard(xe, "experts", "capacity", None)
+
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(x.dtype))
+    h = common.swiglu(g, u)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    ye = shard(ye, "experts", "capacity", None).reshape(E_pad * cap, D)
+
+    # ---- combine: weighted scatter-add back to token order
+    w_flat = gate_w.reshape(-1)[order]
+    contrib = jnp.where(keep[:, None], ye[jnp.minimum(dest, E_pad * cap - 1)]
+                        * w_flat[:, None].astype(x.dtype), 0)
+    y = jnp.zeros((T, D), x.dtype).at[src_token].add(contrib)
+
+    if "shared" in p:
+        sg = jax.nn.sigmoid(
+            jnp.einsum("td,dz->tz", xf.astype(router_dtype),
+                       p["shared_gate"].astype(router_dtype)))
+        y = y + (mlp(p["shared"], x).reshape(T, D)
+                 * sg.astype(x.dtype))
+
+    metrics = {"moe_aux_loss": aux_loss, "moe_z_loss": z_loss,
+               "moe_drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return shard(y.reshape(B, S, D), "batch", None, None), metrics

@@ -1,0 +1,208 @@
+"""Mamba-2 (state-space duality / SSD) blocks — arXiv:2405.21060.
+
+Chunked SSD: intra-chunk "attention-like" quadratic term + inter-chunk state
+recurrence.  The inter-chunk recurrence h_{c+1} = decay_c * h_c + S_c is the
+same first-order linear recurrence as the paper's decayed feature aggregates —
+``kernels/decay_scan`` is the TPU-target kernel for both (see DESIGN.md §4).
+Decode maintains O(1) state, which is what makes the ``long_500k`` cell
+feasible for this family.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Spec, shard
+
+
+def ssd_specs(cfg) -> dict:
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    H = d_inner // cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = d_inner + 2 * G * N
+    return {
+        "w_z": Spec((D, d_inner), ("embed", "ff")),
+        "w_x": Spec((D, d_inner), ("embed", "ff")),
+        "w_B": Spec((D, G * N), ("embed", None)),
+        "w_C": Spec((D, G * N), ("embed", None)),
+        "w_dt": Spec((D, H), ("embed", "heads")),
+        "conv_w": Spec((cfg.ssm_conv_width, conv_ch), (None, "ff"), "normal",
+                       fan_in=cfg.ssm_conv_width),
+        "conv_b": Spec((conv_ch,), ("ff",), "zeros"),
+        "dt_bias": Spec((H,), ("heads",), "ssm_dt"),
+        "A_log": Spec((H,), ("heads",), "ssm_a"),
+        "D_skip": Spec((H,), ("heads",), "ones"),
+        "norm": Spec((d_inner,), ("ff",), "ones"),
+        "w_out": Spec((d_inner, D), ("ff", "embed"), fan_in=d_inner),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds.  x: [B,S,C]; w: [W,C]."""
+    W = w.shape[0]
+    out = x * w[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i if i else None]
+        out = out + shifted * w[W - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """L[i, j] = sum_{j < m <= i} dA[m] for i >= j else -inf.  dA: [..., Q]."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_block(p: dict, x: jax.Array, cfg, return_state: bool = False):
+    """Train/prefill SSD.  x: [B, S, D] -> [B, S, D] (+ final SSMState)."""
+    B, S, D = x.shape
+    d_inner = cfg.ssm_expand * D
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nC = S // Q
+
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(x.dtype))
+    xc = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(x.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(x.dtype))
+
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                            p["conv_b"].astype(x.dtype))
+    xc, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # [H]
+    dA = dt * A                                              # [B,S,H]
+
+    xh = xc.reshape(B, S, H, P)
+    xh = shard(xh, "batch", None, "heads", None)
+    Bg = Bm.reshape(B, S, G, N)
+    Cg = Cm.reshape(B, S, G, N)
+    # broadcast groups over heads (G == 1 typical)
+    rep = H // G
+    Bh = jnp.repeat(Bg, rep, axis=2)                         # [B,S,H,N]
+    Ch = jnp.repeat(Cg, rep, axis=2)
+
+    # chunk
+    xq = xh.reshape(B, nC, Q, H, P)
+    Bq = Bh.reshape(B, nC, Q, H, N)
+    Cq = Ch.reshape(B, nC, Q, H, N)
+    dtq = dt.reshape(B, nC, Q, H)
+    dAq = dA.reshape(B, nC, Q, H)
+
+    # ---- intra-chunk (quadratic, MXU-friendly)
+    if common.attention_stub_enabled():
+        # VMEM-resident on the TPU target (fused SSD kernel); HBM stub only
+        # keeps the Q/B/C/x reads and the y write (see common.attention_stub)
+        y_intra = xq * dtq[..., None].astype(x.dtype) \
+            * jnp.mean(Bq * Cq, axis=-1, keepdims=True).astype(x.dtype)
+    else:
+        L = jnp.exp(_segsum(dAq.transpose(0, 1, 3, 2)))      # [B,nC,H,Q,Q]
+        scores = jnp.einsum("bcqhn,bckhn->bchqk", Cq, Bq,
+                            preferred_element_type=jnp.float32)
+        M = scores * L
+        y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", M.astype(x.dtype),
+                             dtq.astype(x.dtype), xq)
+
+    # ---- chunk states: S_c = sum_j exp(dA_end - cs_j) dt_j B_j x_j^T
+    cs = jnp.cumsum(dAq, axis=2)                             # [B,nC,Q,H]
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)            # [B,nC,Q,H]
+    Sc = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp",
+                    (decay_to_end * dtq).astype(x.dtype), Bq, xq)
+
+    # ---- inter-chunk recurrence (first-order linear scan over chunks)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                   # [B,nC,H]
+
+    def scan_fn(h, xs):
+        dec, s_c = xs
+        h_new = dec[..., None, None].astype(h.dtype) * h + s_c
+        return h_new, h
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_final, h_prior = common.scan(
+        scan_fn, h0, (chunk_decay.transpose(1, 0, 2),
+                      Sc.transpose(1, 0, 2, 3, 4).astype(jnp.float32)))
+    h_prior = h_prior.transpose(1, 0, 2, 3, 4)               # [B,nC,H,N,P]
+
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Cq,
+                         h_prior.astype(x.dtype),
+                         jnp.exp(cs).astype(x.dtype))
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + p["D_skip"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner)
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    if return_state:
+        W = cfg.ssm_conv_width
+        state = SSMState(conv=conv_in[:, S - (W - 1):, :], h=h_final)
+        return out, state
+    return out
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # [B, W-1, conv_ch] trailing inputs
+    h: jax.Array     # [B, H, N, P] fp32 SSM state
+
+
+def ssd_init_state(cfg, batch: int, dtype=jnp.bfloat16) -> SSMState:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    conv_ch = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        h=jnp.zeros((batch, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32))
+
+
+def ssd_decode_step(p: dict, x: jax.Array, state: SSMState, cfg):
+    """Single-token SSD step.  x: [B, 1, D] -> ([B, 1, D], state)."""
+    B = x.shape[0]
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    G, N = cfg.ssm_groups, cfg.ssm_state
+
+    xt = x[:, 0]
+    z = xt @ p["w_z"].astype(x.dtype)
+    xc = xt @ p["w_x"].astype(x.dtype)
+    Bm = xt @ p["w_B"].astype(x.dtype)
+    Cm = xt @ p["w_C"].astype(x.dtype)
+    dt = xt @ p["w_dt"].astype(x.dtype)
+
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)          # [B, C]
+    hist = jnp.concatenate([state.conv, conv_in[:, None]], axis=1)  # [B,W,C]
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w)
+                           + p["conv_b"].astype(x.dtype))
+    new_conv = hist[:, 1:]
+    xc, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                      # [B,H]
+
+    xh = xc.reshape(B, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+
+    h = dA[..., None, None] * state.h + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, Bh, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+    y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+    return out[:, None], SSMState(conv=new_conv, h=h)

@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+The RG-LRU recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is a diagonal first-order linear recurrence — associative, so train/prefill
+uses ``jax.lax.associative_scan`` (TPU target: ``kernels/decay_scan``), and
+decode keeps O(1) state.  Combined with local attention this keeps the
+``long_500k`` cell constant-memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Spec, shard
+
+_C = 8.0  # RG-LRU recurrence-gate temperature
+
+
+def rglru_specs(cfg) -> dict:
+    D = cfg.d_model
+    R = cfg.rglru_expand * D
+    return {
+        "w_y": Spec((D, R), ("embed", "ff")),        # gate branch
+        "w_x": Spec((D, R), ("embed", "ff")),        # recurrent branch
+        "conv_w": Spec((cfg.rglru_conv_width, R), (None, "ff"), "normal",
+                       fan_in=cfg.rglru_conv_width),
+        "conv_b": Spec((R,), ("ff",), "zeros"),
+        "w_a": Spec((R, R), ("ff", "ff")),           # recurrence gate
+        "b_a": Spec((R,), ("ff",), "zeros"),
+        "w_i": Spec((R, R), ("ff", "ff")),           # input gate
+        "b_i": Spec((R,), ("ff",), "zeros"),
+        "lam": Spec((R,), ("ff",), "rglru_a"),       # learnable decay logits
+        "w_out": Spec((R, D), ("ff", "embed"), fan_in=R),
+    }
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    out = x * w[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[W - 1 - i]
+    return out + b
+
+
+def _gates(p, xr, dtype):
+    r = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", xr, p["w_a"].astype(dtype))
+                       + p["b_a"].astype(dtype))
+    i = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", xr, p["w_i"].astype(dtype))
+                       + p["b_i"].astype(dtype))
+    log_a = (-_C * jax.nn.softplus(-p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))                # log a_t  (<= 0)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, (mult * i.astype(jnp.float32) * xr.astype(jnp.float32))
+
+
+def rglru_block(p: dict, x: jax.Array, cfg, return_state: bool = False):
+    """Train/prefill.  x: [B, S, D] -> [B, S, D] (+ final RGLRUState)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_y"].astype(x.dtype)))
+    xr_pre = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype))
+    xr = _causal_conv(xr_pre, p["conv_w"].astype(x.dtype),
+                      p["conv_b"].astype(x.dtype))
+    xr = shard(xr, "batch", "seq", "ff")
+    a, u = _gates(p, xr, x.dtype)
+
+    # associative scan over time: (a2, b2) o (a1, b1) = (a1*a2, a2*b1 + b2)
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    y = (jax.nn.gelu(gate).astype(jnp.float32) * h).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    if return_state:
+        W = cfg.rglru_conv_width
+        S = x.shape[1]
+        state = RGLRUState(conv=xr_pre[:, S - (W - 1):, :], h=h[:, -1])
+        return out, state
+    return out
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array  # [B, W-1, R]
+    h: jax.Array     # [B, R] fp32
+
+
+def rglru_init_state(cfg, batch: int, dtype=jnp.bfloat16) -> RGLRUState:
+    R = cfg.rglru_expand * cfg.d_model
+    return RGLRUState(conv=jnp.zeros((batch, cfg.rglru_conv_width - 1, R), dtype),
+                      h=jnp.zeros((batch, R), jnp.float32))
+
+
+def rglru_decode_step(p: dict, x: jax.Array, state: RGLRUState, cfg):
+    """x: [B, 1, D] -> ([B, 1, D], state)."""
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ p["w_y"].astype(x.dtype))
+    xr = xt @ p["w_x"].astype(x.dtype)
+    hist = jnp.concatenate([state.conv, xr[:, None]], axis=1)
+    xr = jnp.einsum("bwc,wc->bc", hist, p["conv_w"].astype(x.dtype)) \
+        + p["conv_b"].astype(x.dtype)
+    a, u = _gates(p, xr[:, None], x.dtype)
+    h = a[:, 0] * state.h + u[:, 0]
+    y = (jax.nn.gelu(gate).astype(jnp.float32) * h).astype(x.dtype)
+    out = y @ p["w_out"].astype(x.dtype)
+    return out[:, None], RGLRUState(conv=hist[:, 1:], h=h)

@@ -1,0 +1,5 @@
+"""Serving plane: LM serve steps, generation, and the risk-scoring pipeline."""
+from repro.serving import engine, pipeline
+from repro.serving.engine import generate, make_serve_step
+
+__all__ = ["engine", "pipeline", "generate", "make_serve_step"]

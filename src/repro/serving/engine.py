@@ -1,0 +1,95 @@
+"""Serving plane: per-cell serve_step builders and a batched generate loop.
+
+``make_serve_step`` returns the pure function the multi-pod dry-run lowers
+for every inference cell:
+
+  prefill  (params, batch)                -> (last logits, DecodeState)
+  decode   (params, state, tokens[B,1])   -> (logits [B, Vp], DecodeState)
+  encode   (params, batch)                -> logits [B, S, Vp]  (audio/enc)
+
+``generate`` drives prefill + greedy/temperature decode for the examples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.models import backbone
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def make_serve_step(run: RunConfig, kind: str, *,
+                    compute_dtype=jnp.bfloat16, max_len: Optional[int] = None):
+    mcfg = run.model
+    if kind == "prefill":
+        if not mcfg.causal:
+            def encode_step(params, batch):
+                return backbone.encode(params, mcfg, batch,
+                                       compute_dtype=compute_dtype)
+            return encode_step
+
+        def prefill_step(params, batch):
+            return backbone.prefill(params, mcfg, batch, max_len=max_len,
+                                    compute_dtype=compute_dtype,
+                                    cache_dtype=compute_dtype)
+        return prefill_step
+
+    if kind == "decode":
+        assert mcfg.causal, "encoder-only archs have no decode step"
+
+        def decode_step(params, state, tokens):
+            return backbone.decode_step(params, mcfg, state, tokens,
+                                        compute_dtype=compute_dtype)
+        return decode_step
+
+    raise ValueError(kind)
+
+
+def sample_token(logits: jax.Array, rng: jax.Array, *, temperature: float,
+                 vocab_size: int) -> jax.Array:
+    """logits: [B, Vp] -> [B, 1] int32 (greedy at temperature 0)."""
+    Vp = logits.shape[-1]
+    if Vp > vocab_size:
+        logits = jnp.where(jnp.arange(Vp) >= vocab_size, -1e30, logits)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    tok = jax.random.categorical(rng, logits / temperature, axis=-1)
+    return tok.astype(jnp.int32)[:, None]
+
+
+def generate(run: RunConfig, params, prompt_tokens: jax.Array, *,
+             max_new_tokens: int, temperature: float = 0.0,
+             rng: Optional[jax.Array] = None,
+             compute_dtype=jnp.float32) -> jax.Array:
+    """Batched autoregressive generation.  prompt: [B, S] -> [B, S + new]."""
+    mcfg = run.model
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    B, S = prompt_tokens.shape
+    max_len = S + max_new_tokens
+
+    logits, state = backbone.prefill(
+        params, mcfg, {"tokens": prompt_tokens}, max_len=max_len,
+        compute_dtype=compute_dtype, cache_dtype=compute_dtype)
+    tok = sample_token(logits, rng, temperature=temperature,
+                       vocab_size=mcfg.vocab_size)
+
+    def body(carry, i):
+        state, tok, rng = carry
+        rng, sub = jax.random.split(rng)
+        logits, state = backbone.decode_step(params, mcfg, state, tok,
+                                             compute_dtype=compute_dtype)
+        nxt = sample_token(logits, sub, temperature=temperature,
+                           vocab_size=mcfg.vocab_size)
+        return (state, nxt, rng), tok[:, 0]
+
+    (_, last, _), toks = jax.lax.scan(
+        body, (state, tok, rng), jnp.arange(max_new_tokens - 1))
+    out = jnp.concatenate(
+        [prompt_tokens, toks.T, last], axis=1) if max_new_tokens > 1 else \
+        jnp.concatenate([prompt_tokens, tok], axis=1)
+    return out

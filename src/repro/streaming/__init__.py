@@ -1,0 +1,5 @@
+"""Streaming substrate: workload generation, byte-backed KV store with an
+LSM cost model, per-event workers, and closed-loop / fixed-rate replay."""
+from repro.streaming import kvstore, replay, worker, workload
+
+__all__ = ["kvstore", "replay", "worker", "workload"]

@@ -1,0 +1,136 @@
+"""Durable KV-store worker model with real SerDe and an LSM cost model.
+
+The paper's worker (§5.3) is a JVM process over embedded RocksDB; its costs
+are (a) serialization/deserialization of profile rows, (b) storage IOPS,
+(c) LSM write amplification from compaction.  On this CPU container we keep
+(a) *real* — profile rows are packed to/from bytes on every access — and
+model (b)/(c) explicitly:
+
+  * storage service time: get ~ Gamma(k, theta_r), put ~ Gamma(k, theta_w),
+    defaults shaped like SSD EBS latencies (~100us reads / ~300us writes);
+  * write amplification: leveled-compaction model following Dayan et al. —
+    WAF ~= 1 (WAL+L0) + sum over levels of the size-ratio amortization, with
+    level count driven by total ingested bytes, so lower ingest rates sit
+    below compaction thresholds exactly as Table 3 observes.
+
+The store counts every op and byte, which is what §Dry-run / Table 3
+benchmarks read out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+PROFILE_MAGIC = 0x5250      # 'RP'
+
+
+@dataclasses.dataclass
+class StorageModel:
+    """Service-time + LSM model (modeled, not measured — documented)."""
+    read_us: float = 100.0
+    write_us: float = 300.0
+    gamma_shape: float = 4.0
+    memtable_bytes: int = 1 << 16   # 64 KiB flush unit (CPU-scale streams)
+    size_ratio: int = 10            # leveled-compaction fanout T
+    bytes_per_entry: int = 128
+
+    def service_time_s(self, rng: np.random.Generator, write: bool) -> float:
+        mean = self.write_us if write else self.read_us
+        return rng.gamma(self.gamma_shape, mean / self.gamma_shape) * 1e-6
+
+    def waf(self, bytes_ingested: int) -> float:
+        """Leveled-compaction write amplification at this ingest volume.
+
+        Each level rewrite costs ~T/2 per level on average; number of levels
+        grows with log_T(total / memtable).  Matches the paper's observed
+        2.6 (full ingest) -> 1.7 (heavy thinning) range.
+        """
+        if bytes_ingested <= self.memtable_bytes:
+            return 1.0
+        levels = np.log(bytes_ingested / self.memtable_bytes) \
+            / np.log(self.size_ratio)
+        # WAL + memtable flush = 1; each populated level adds amortized
+        # (T/2) / T = 0.5 rewrite share under leveling.
+        return float(1.0 + 0.5 * min(levels, 4.0))
+
+
+class SerDe:
+    """Binary profile-row codec (the paper's SerDe bottleneck, made real).
+
+    Layout: magic u16, n_taus u16, last_t f64, v_f f64, then n_taus * 3 f32
+    aggregates, then v_full f64, last_t_full f64.
+    """
+
+    def __init__(self, n_taus: int):
+        self.n_taus = n_taus
+        self._head = struct.Struct("<HHdd")
+        self._tail = struct.Struct("<dd")
+
+    def row_bytes(self) -> int:
+        return self._head.size + self.n_taus * 3 * 4 + self._tail.size
+
+    def pack(self, last_t: float, v_f: float, agg: np.ndarray,
+             v_full: float, last_t_full: float) -> bytes:
+        return (self._head.pack(PROFILE_MAGIC, self.n_taus, last_t, v_f)
+                + agg.astype("<f4").tobytes()
+                + self._tail.pack(v_full, last_t_full))
+
+    def unpack(self, raw: bytes):
+        magic, n, last_t, v_f = self._head.unpack_from(raw, 0)
+        assert magic == PROFILE_MAGIC and n == self.n_taus, "corrupt row"
+        off = self._head.size
+        agg = np.frombuffer(raw, "<f4", count=n * 3, offset=off
+                            ).reshape(n, 3).copy()
+        v_full, last_t_full = self._tail.unpack_from(raw, off + n * 3 * 4)
+        return last_t, v_f, agg, v_full, last_t_full
+
+
+@dataclasses.dataclass
+class StoreCounters:
+    gets: int = 0
+    puts: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+    serde_s: float = 0.0
+    modeled_io_s: float = 0.0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class KVStore:
+    """One worker's embedded store (dict-backed, byte-valued)."""
+
+    def __init__(self, model: Optional[StorageModel] = None, seed: int = 0):
+        self.data: Dict[int, bytes] = {}
+        self.model = model or StorageModel()
+        self.rng = np.random.default_rng(seed)
+        self.counters = StoreCounters()
+
+    def get(self, key: int) -> Optional[bytes]:
+        self.counters.gets += 1
+        raw = self.data.get(key)
+        if raw is not None:
+            self.counters.bytes_read += len(raw)
+        self.counters.modeled_io_s += self.model.service_time_s(
+            self.rng, write=False)
+        return raw
+
+    def put(self, key: int, raw: bytes) -> None:
+        self.counters.puts += 1
+        self.counters.bytes_written += len(raw)
+        self.counters.modeled_io_s += self.model.service_time_s(
+            self.rng, write=True)
+        self.data[key] = raw
+
+    def waf(self) -> float:
+        return self.model.waf(self.counters.bytes_written)
+
+
+def partition_of(key: int, n_partitions: int) -> int:
+    """Deterministic key routing (fibonacci hash — stable across runs)."""
+    return ((key * 2654435761) & 0xFFFFFFFF) % n_partitions

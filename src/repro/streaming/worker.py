@@ -1,0 +1,173 @@
+"""Per-event feature-aggregation worker over a byte-backed KV store (§5).
+
+Implements the paper's worker loop literally:
+  (1) retrieve feature state + control statistics from storage (real SerDe)
+  (2) materialize features for inference
+  (3) derive an inclusion probability from disk-backed estimates only
+  (4) sample a Bernoulli decision
+  (5) execute a write-back only if selected
+Inference happens for every event; persistence is gated.
+
+This is the *measurement* engine for Table 3/4 benchmarks — per-event costs
+(SerDe seconds, modeled IO seconds, write ops, bytes) are all observable.
+The vectorized JAX engine (repro.core.engine) is the production compute
+path; tests pin both to the same per-event oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.types import EngineConfig
+from repro.streaming.kvstore import KVStore, SerDe, StorageModel
+
+
+@dataclasses.dataclass
+class WorkerMetrics:
+    events: int = 0
+    writes: int = 0
+    score_calls: int = 0
+    compute_s: float = 0.0
+    latencies_s: Optional[list] = None
+
+    def write_pct(self) -> float:
+        return 100.0 * self.writes / max(self.events, 1)
+
+
+class FeatureWorker:
+    """One partition worker: KV store + persistence-path control."""
+
+    def __init__(self, cfg: EngineConfig, store: Optional[KVStore] = None,
+                 seed: int = 0, record_latency: bool = True):
+        self.cfg = cfg
+        self.taus = np.asarray(cfg.taus, np.float64)
+        self.store = store or KVStore(seed=seed)
+        self.serde = SerDe(len(cfg.taus))
+        self.rng = np.random.default_rng(seed + 17)
+        self.metrics = WorkerMetrics(
+            latencies_s=[] if record_latency else None)
+
+    # -- decision math (mirrors core.reference; operates on unpacked rows) --
+    def _decide(self, row, q: float, t: float):
+        cfg = self.cfg
+        last_t, v_f, agg, v_full, last_t_full = row
+        dt = t - last_t
+        agg_now = agg * np.exp(-np.clip(dt, 0, None) / self.taus)[:, None] \
+            if math.isfinite(last_t) else np.zeros_like(agg)
+
+        if cfg.policy == "full":
+            beta = math.exp(-(t - last_t_full)) if False else (
+                math.exp(-max(t - last_t_full, 0.0) / cfg.h)
+                if math.isfinite(last_t_full) else 0.0)
+            lam = (1.0 + beta * v_full) / cfg.h
+        else:
+            beta = math.exp(-max(dt, 0.0) / cfg.h) \
+                if math.isfinite(last_t) else 0.0
+            lam = (1.0 + beta * v_f) / cfg.h
+
+        if cfg.policy == "unfiltered":
+            p = 1.0
+        elif cfg.policy == "fixed":
+            p = min(max(cfg.fixed_rate, cfg.min_p), 1.0)
+        elif cfg.policy == "pp_vr":
+            sel = agg_now[cfg.mu_tau_index]
+            cnt = max(sel[0], 1e-12)
+            mu = sel[1] / cnt
+            var = max(sel[2] / cnt - mu * mu, 0.0)
+            if sel[0] < 1.0:
+                mu, sigma = 0.0, 1e8
+            else:
+                sigma = math.sqrt(var) + 1e-8
+            base = min(1.0, cfg.budget / max(lam, 1e-30))
+            zs = float(np.clip((q - mu) / max(sigma, 1e-8), -8.0, 8.0))
+            b = float(np.clip(base, 1e-6, 1 - 1e-6))
+            logit = math.log(b) - math.log1p(-b) + cfg.alpha * zs
+            p = 1.0 / (1.0 + math.exp(-logit))
+            if base >= 1.0 - 1e-6:
+                p = 1.0
+            p = min(max(p, cfg.min_p), 1.0)
+        else:  # 'pp'
+            p = min(1.0, cfg.budget / max(lam, 1e-30))
+            p = min(max(p, cfg.min_p), 1.0)
+        return p, lam, agg_now
+
+    def process(self, key: int, q: float, t: float) -> dict:
+        """One event through the worker loop.  Returns observability dict."""
+        cfg, serde, store = self.cfg, self.serde, self.store
+        t0 = time.perf_counter()
+
+        # (1) retrieve + deserialize
+        raw = store.get(int(key))
+        ts0 = time.perf_counter()
+        if raw is None:
+            row = (-math.inf, 0.0, np.zeros((len(self.taus), 3), np.float32),
+                   0.0, -math.inf)
+        else:
+            row = serde.unpack(raw)
+        store.counters.serde_s += time.perf_counter() - ts0
+
+        # (2)+(3) materialize + decide (disk-backed stats only)
+        p, lam, agg_now = self._decide(row, q, t)
+        last_t, v_f, agg, v_full, last_t_full = row
+
+        # features for inference (every event)
+        cnt = agg_now[:, 0]
+        s = agg_now[:, 1]
+        mean = s / np.maximum(cnt, 1e-12)
+        features = np.concatenate([cnt, s, mean])
+        self.metrics.score_calls += 1
+
+        # (4) Bernoulli
+        z = bool(self.rng.random() < p)
+
+        # (5) conditional write-back (serialize + put)
+        full_stream = cfg.policy in ("full", "unfiltered")
+        if z or full_stream:
+            if z:
+                dt_f = t - last_t
+                beta_f = math.exp(-max(dt_f, 0.0) / cfg.h) \
+                    if math.isfinite(last_t) else 0.0
+                agg = agg_now + (1.0 / p) * np.array(
+                    [1.0, q, q * q], np.float32)[None, :]
+                v_f = 1.0 / p + beta_f * v_f
+                last_t = t
+                self.metrics.writes += 1
+            if full_stream:
+                beta_full = math.exp(-max(t - last_t_full, 0.0) / cfg.h) \
+                    if math.isfinite(last_t_full) else 0.0
+                v_full = 1.0 + beta_full * v_full
+                last_t_full = t
+            ts0 = time.perf_counter()
+            raw = serde.pack(last_t, v_f, agg, v_full, last_t_full)
+            store.counters.serde_s += time.perf_counter() - ts0
+            store.put(int(key), raw)
+
+        self.metrics.events += 1
+        compute = time.perf_counter() - t0
+        self.metrics.compute_s += compute
+        # latency = measured CPU + modeled storage service times (the latter
+        # accumulate inside store.get/put; replay.py combines them per event)
+        return {"p": p, "z": z, "lam": lam, "features": features,
+                "compute_s": compute}
+
+    def features_at(self, key: int, t: float) -> np.ndarray:
+        """Read-only feature materialization (scoring path, no write)."""
+        raw = self.store.get(int(key))
+        if raw is None:
+            agg_now = np.zeros((len(self.taus), 3), np.float32)
+        else:
+            last_t, v_f, agg, *_ = self.serde.unpack(raw)
+            dt = t - last_t
+            agg_now = agg * np.exp(
+                -np.clip(dt, 0, None) / self.taus)[:, None] \
+                if math.isfinite(last_t) else np.zeros_like(agg)
+        cnt = agg_now[:, 0]
+        s = agg_now[:, 1]
+        mean = s / np.maximum(cnt, 1e-12)
+        var = np.maximum(agg_now[:, 2] / np.maximum(cnt, 1e-12) - mean ** 2,
+                         0.0)
+        return np.concatenate([cnt, s, mean, np.sqrt(var)]).astype(np.float32)

@@ -1,0 +1,7 @@
+"""Training stack: optimizers, grad-accumulation trainer, HT-thinned
+gradient sync (beyond-paper), straggler-tolerant microbatching."""
+from repro.train import compression, optim, trainer
+from repro.train.trainer import TrainState, init_train_state, make_train_step
+
+__all__ = ["compression", "optim", "trainer", "TrainState",
+           "init_train_state", "make_train_step"]

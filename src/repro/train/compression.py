@@ -1,0 +1,131 @@
+"""Beyond-paper: HT-thinned gradient synchronization with error feedback.
+
+The paper's mechanism — Bernoulli-gate expensive persistence operations with
+Horvitz-Thompson reweighting, budget-constrained inclusion probabilities and
+variance-aware tilting (Eq. 4) — transplants directly onto the most expensive
+"persistence path" of distributed *training*: the cross-pod gradient
+all-reduce over DCN (25x slower than ICI).
+
+Per gradient block (contiguous chunk of each tensor):
+  p_blk = sigmoid( logit(budget) + alpha * (|g_blk| - mu)/sigma )   (Eq. 4)
+  Z_blk ~ Bernoulli(p_blk)
+with two reweighting modes:
+
+  mode='ht'  synced = Z * g / p  — Horvitz-Thompson, exactly unbiased per
+             step (the paper's estimator), variance instead of bias, NO
+             error feedback.
+  mode='ef'  synced = Z * (g + err); err' = (g + err) - synced — biased per
+             step, error feedback (Karimireddy et al.) recovers the signal
+             over steps.
+
+These must NOT be combined: error feedback assumes a *contractive*
+compressor (||x - C(x)|| <= (1-d)||x||), while HT reweighting is expansive
+(|1 - 1/p| > 1 for p < 1), so EF-on-HT is a positive feedback loop that
+diverges geometrically — we validated this empirically
+(tests/test_train.py::test_ht_plus_ef_diverges) and expose the two sound
+modes instead.
+
+In SPMD, the cross-pod reduction volume is what this shrinks: a zero block is
+never transmitted by a sparse collective; with dense collectives the
+compressed tensor is what a custom reducer would send.  We expose
+``sync_volume_fraction`` so benchmarks can report the traffic reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ThinnedSyncConfig:
+    budget: float = 0.25       # target synced fraction of blocks
+    alpha: float = 2.0         # variance-aware tilt (0 = uniform thinning)
+    block: int = 1024          # elements per block
+    min_p: float = 1e-3
+    mode: str = "ht"           # 'ht' (unbiased, no EF) | 'ef' (biased + EF)
+
+    def __post_init__(self):
+        assert self.mode in ("ht", "ef"), self.mode
+
+
+class SyncState(NamedTuple):
+    err: Any                   # error-feedback buffers, like grads (fp32)
+
+
+def init_state(grads) -> SyncState:
+    return SyncState(err=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def _logit(p):
+    p = jnp.clip(p, 1e-6, 1 - 1e-6)
+    return jnp.log(p) - jnp.log1p(-p)
+
+
+def _thin_one(g: jax.Array, err: jax.Array, u: jax.Array,
+              cfg: ThinnedSyncConfig):
+    """Thin one tensor.  Returns (synced, new_err, kept_blocks, n_blocks)."""
+    g32 = g.astype(jnp.float32) + (err if cfg.mode == "ef" else 0.0)
+    flat = g32.reshape(-1)
+    n = flat.shape[0]
+    nb = -(-n // cfg.block)
+    pad = nb * cfg.block - n
+    fp = jnp.pad(flat, (0, pad)).reshape(nb, cfg.block)
+
+    mag = jnp.sqrt(jnp.mean(fp * fp, axis=1))            # block RMS
+    mu = jnp.mean(mag)
+    sd = jnp.std(mag) + 1e-12
+    zscore = jnp.clip((mag - mu) / sd, -8.0, 8.0)
+    p = jax.nn.sigmoid(_logit(jnp.asarray(cfg.budget)) + cfg.alpha * zscore)
+    p = jnp.clip(p, cfg.min_p, 1.0)
+
+    z = u[:nb] < p
+    if cfg.mode == "ht":
+        scale = jnp.where(z, 1.0 / p, 0.0)               # HT: unbiased
+        synced = (fp * scale[:, None]).reshape(-1)[:n].reshape(g.shape)
+        new_err = jnp.zeros_like(err)                    # no feedback (see doc)
+    else:
+        sel = fp * z[:, None].astype(fp.dtype)           # EF: biased select
+        synced = sel.reshape(-1)[:n].reshape(g.shape)
+        new_err = g32 - synced.astype(jnp.float32)       # residual feedback
+    return synced.astype(g.dtype), new_err, jnp.sum(z), nb
+
+
+def thin_gradients(grads, state: SyncState, rng: jax.Array,
+                   cfg: ThinnedSyncConfig):
+    """Apply HT-thinned sync to a gradient pytree.
+
+    Returns (synced_grads, new_state, metrics) where metrics includes
+    ``sync_volume_fraction`` — the fraction of blocks actually transmitted.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(state.err)
+    keys = jax.random.split(rng, len(leaves))
+    out, errs, kept, total = [], [], 0, 0
+    for g, e, k in zip(leaves, err_leaves, keys):
+        nb = -(-g.size // cfg.block)
+        u = jax.random.uniform(k, (nb,))
+        s, ne, kb, b = _thin_one(g, e, u, cfg)
+        out.append(s)
+        errs.append(ne)
+        kept = kept + kb
+        total = total + b
+    metrics = {"sync_volume_fraction": kept / jnp.maximum(total, 1)}
+    return (jax.tree.unflatten(treedef, out),
+            SyncState(err=jax.tree.unflatten(treedef, errs)), metrics)
+
+
+# ------------------------------------------------- straggler mitigation
+def straggler_reweight(micro_grads_mean: jax.Array, keep: jax.Array,
+                       keep_prob: jax.Array) -> jax.Array:
+    """HT-reweight a microbatch gradient under straggler dropping.
+
+    keep: bool (this microbatch arrived in time); keep_prob: its inclusion
+    probability.  E[reweighted] equals the full-participation gradient —
+    the paper's estimator, applied to gradient accumulation (DESIGN.md §6).
+    """
+    w = jnp.where(keep, 1.0 / jnp.maximum(keep_prob, 1e-6), 0.0)
+    return micro_grads_mean * w

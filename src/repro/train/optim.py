@@ -1,0 +1,129 @@
+"""Optimizers: AdamW (fp32 master weights) and Adafactor (factored states).
+
+Adafactor is the memory posture for the 1T MoE (kimi-k2): AdamW's two fp32
+moments per parameter cannot fit 1T params on a 256x16GB pod; factored second
+moments are O(rows + cols) per matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int, min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+# ------------------------------------------------------------------ AdamW
+class AdamWState(NamedTuple):
+    mu: Any       # fp32, like params
+    nu: Any       # fp32, like params
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads, state: AdamWState, master, *, lr, beta1: float,
+                 beta2: float, eps: float, weight_decay: float,
+                 step: jax.Array):
+    """One AdamW step over fp32 master params.  Returns (new_master, state)."""
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - beta1 ** t
+    c2 = 1.0 - beta2 ** t
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = beta1 * mu + (1 - beta1) * g
+        nu = beta2 * nu + (1 - beta2) * g * g
+        step_ = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+        p = p - lr * (step_ + weight_decay * p)
+        return p, mu, nu
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, master)
+    # model param trees contain tuples (scanned group stacks), so unzip via
+    # tree.transpose rather than is_leaf=tuple tricks
+    new_master, new_mu, new_nu = jax.tree.transpose(
+        jax.tree.structure(grads), jax.tree.structure((0, 0, 0)), out)
+    return new_master, AdamWState(mu=new_mu, nu=new_nu)
+
+
+# --------------------------------------------------------------- Adafactor
+class AdafactorState(NamedTuple):
+    v_row: Any    # factored second moment (rows) or full v for <2D params
+    v_col: Any
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def row(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) \
+            else jnp.zeros(p.shape, jnp.float32)
+
+    def col(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+            if _factored(p) else jnp.zeros((), jnp.float32)
+
+    return AdafactorState(v_row=jax.tree.map(row, params),
+                          v_col=jax.tree.map(col, params))
+
+
+def adafactor_update(grads, state: AdafactorState, params, *, lr,
+                     decay: float = 0.8, eps: float = 1e-30,
+                     clip_threshold: float = 1.0, weight_decay: float = 0.0,
+                     step: jax.Array = None):
+    """Factored RMS update (Shazeer & Stern) in fp32 compute, params dtype out."""
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t ** (-decay)
+
+    def upd(g, vr, vc, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            # u = g / sqrt(v_hat), v_hat = outer(v_row, v_col) / mean(v_row)
+            v_hat = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True
+                                            )[..., None], eps))
+            u = g32 / jnp.maximum(jnp.sqrt(v_hat), eps)
+        else:
+            vr = beta2 * vr + (1 - beta2) * g2
+            u = g32 / jnp.maximum(jnp.sqrt(vr), eps)
+        # update clipping (RMS(u) <= clip_threshold)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (u + weight_decay * p32)
+        return p32.astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, grads, state.v_row, state.v_col, params)
+    new_p, new_vr, new_vc = jax.tree.transpose(
+        jax.tree.structure(grads), jax.tree.structure((0, 0, 0)), out)
+    return new_p, AdafactorState(v_row=new_vr, v_col=new_vc)

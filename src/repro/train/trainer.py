@@ -1,0 +1,167 @@
+"""Training step builder: grad accumulation, remat, mixed precision,
+optional HT-thinned gradient sync, straggler-tolerant microbatching.
+
+``make_train_step(run_cfg)`` returns a pure (state, batch, rng) ->
+(state, metrics) function suitable for jit/pjit under a mesh; the dry-run
+lowers exactly this function for every train cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.models import backbone
+from repro.train import compression, optim
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+class TrainState(NamedTuple):
+    step: jax.Array            # i32 scalar
+    params: Any                # param_dtype
+    master: Any                # fp32 master copy (adamw+master) or None
+    opt: Any                   # optimizer state
+    sync: Any                  # compression.SyncState or None
+
+
+def init_train_state(run: RunConfig, rng: jax.Array) -> TrainState:
+    mcfg, tcfg = run.model, run.train
+    pdtype = DTYPES[tcfg.param_dtype]
+    params = backbone.init_params(mcfg, rng, pdtype)
+    master = None
+    if tcfg.optimizer == "adamw":
+        # a separate fp32 master copy only makes sense for low-precision
+        # params; for fp32 params it would alias the same buffers (and
+        # break donation)
+        if tcfg.master_weights and pdtype != jnp.float32:
+            master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        opt = optim.adamw_init(params)
+    else:
+        opt = optim.adafactor_init(params)
+    sync = compression.init_state(params) if tcfg.thinned_sync else None
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      master=master, opt=opt, sync=sync)
+
+
+def train_state_shapes(run: RunConfig):
+    """ShapeDtypeStruct tree of the train state (no allocation; dry-run)."""
+    return jax.eval_shape(
+        lambda k: init_train_state(run, k), jax.random.PRNGKey(0))
+
+
+def _split_micro(batch: dict, n_micro: int) -> dict:
+    def sp(x):
+        B = x.shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        return x.reshape((n_micro, B // n_micro) + x.shape[1:])
+    return {k: sp(v) for k, v in batch.items()}
+
+
+def make_train_step(run: RunConfig, *, total_steps: int = 10_000,
+                    donate: bool = True):
+    mcfg, tcfg = run.model, run.train
+    cdtype = DTYPES[tcfg.compute_dtype]
+
+    def loss_fn(params, micro):
+        return backbone.train_loss(
+            params, mcfg, micro, compute_dtype=cdtype, remat=tcfg.remat,
+            moe_aux_weight=tcfg.moe_aux_weight,
+            moe_z_weight=tcfg.moe_z_weight)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict, rng: jax.Array,
+                   micro_keep: Optional[jax.Array] = None):
+        """One optimizer step.
+
+        micro_keep: optional [grad_accum] bool — straggler mask; missing
+        microbatches are dropped and survivors HT-reweighted (unbiased).
+        """
+        n_micro = tcfg.grad_accum
+        acc_dtype = jnp.float32 if (tcfg.master_weights
+                                    or tcfg.optimizer == "adamw") \
+            else jnp.bfloat16
+
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+            grads = jax.tree.map(lambda g: g.astype(acc_dtype), grads)
+        else:
+            micro = _split_micro(batch, n_micro)
+            keep = jnp.ones((n_micro,), bool) if micro_keep is None \
+                else micro_keep
+            keep_frac = jnp.mean(keep.astype(jnp.float32))
+
+            def body(carry, xs):
+                g_acc, loss_acc, met_acc = carry
+                mb, kp = xs
+                (loss, met), g = grad_fn(state.params, mb)
+                # straggler HT-reweighting: E[sum] = full-batch gradient
+                w = compression.straggler_reweight(
+                    jnp.float32(1.0), kp, jnp.maximum(keep_frac, 1e-6)
+                ) / n_micro
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + w.astype(acc_dtype)
+                    * gi.astype(acc_dtype), g_acc, g)
+                loss_acc = loss_acc + jnp.where(kp, loss, 0.0) / n_micro
+                met_acc = jax.tree.map(
+                    lambda a, m: a + jnp.where(kp, m, 0.0) / n_micro,
+                    met_acc, met)
+                return (g_acc, loss_acc, met_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), state.params)
+            met0 = jax.eval_shape(lambda: grad_fn(state.params,
+                                                  jax.tree.map(
+                                                      lambda x: x[0], micro)))
+            met0 = jax.tree.map(lambda s: jnp.zeros((), jnp.float32),
+                                met0[0][1])
+            (grads, loss, metrics), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32), met0),
+                (micro, keep))
+
+        # ---- optional beyond-paper thinned cross-pod sync ----------------
+        sync_state = state.sync
+        if tcfg.thinned_sync:
+            cfgc = compression.ThinnedSyncConfig(
+                budget=tcfg.thinned_sync_budget,
+                alpha=tcfg.thinned_sync_alpha)
+            grads, sync_state, cmetrics = compression.thin_gradients(
+                grads, state.sync, rng, cfgc)
+            metrics = {**metrics, **cmetrics}
+
+        grads, gnorm = optim.clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = optim.warmup_cosine(state.step, peak_lr=tcfg.learning_rate,
+                                 warmup_steps=tcfg.warmup_steps,
+                                 total_steps=total_steps)
+
+        if tcfg.optimizer == "adamw":
+            master = state.master if state.master is not None else \
+                jax.tree.map(lambda p: p.astype(jnp.float32), state.params)
+            new_master, opt = optim.adamw_update(
+                grads, state.opt, master, lr=lr, beta1=tcfg.beta1,
+                beta2=tcfg.beta2, eps=1e-8,
+                weight_decay=tcfg.weight_decay, step=state.step)
+            pdtype = DTYPES[tcfg.param_dtype]
+            params = jax.tree.map(lambda m, p: m.astype(p.dtype),
+                                  new_master, state.params)
+            master_out = new_master if state.master is not None else None
+        else:
+            params, opt = optim.adafactor_update(
+                grads, state.opt, state.params, lr=lr,
+                weight_decay=tcfg.weight_decay, step=state.step)
+            master_out = None
+
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        metrics["loss"] = loss if n_micro > 1 else metrics.get("loss", loss)
+        new_state = TrainState(step=state.step + 1, params=params,
+                               master=master_out, opt=opt, sync=sync_state)
+        return new_state, metrics
+
+    return train_step

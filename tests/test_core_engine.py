@@ -1,0 +1,151 @@
+"""Engine correctness: JAX vectorized modes vs the per-event Python oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, Event, init_state, make_step
+from repro.core.reference import ReferenceEngine
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _make_stream(rng, n_events, n_entities, skew=1.5, t_scale=50.0):
+    """Zipf-skewed keys, exponential inter-arrivals, lognormal marks."""
+    probs = (1.0 / np.arange(1, n_entities + 1) ** skew)
+    probs /= probs.sum()
+    keys = rng.choice(n_entities, size=n_events, p=probs)
+    ts = np.cumsum(rng.exponential(t_scale, size=n_events))
+    # strictly increasing distinct timestamps per key (paper assumes ordered
+    # streams; equality would make the RNG counter collide)
+    qs = rng.lognormal(3.0, 1.0, size=n_events)
+    return keys.astype(np.int32), qs.astype(np.float32), ts.astype(np.float32)
+
+
+POLICIES = ["pp", "pp_vr", "full", "fixed", "unfiltered"]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_exact_engine_matches_oracle(policy):
+    rng = np.random.default_rng(0)
+    n_events, n_entities, batch = 256, 12, 32
+    keys, qs, ts = _make_stream(rng, n_events, n_entities)
+    cfg = EngineConfig(taus=(60.0, 3600.0, 86400.0), h=600.0, budget=0.01,
+                       alpha=1.0, policy=policy, fixed_rate=0.3,
+                       mu_tau_index=1, exact_rounds=batch)
+    root = jax.random.PRNGKey(7)
+    ref = ReferenceEngine(cfg, n_entities, root)
+    for k, q, t in zip(keys, qs, ts):
+        ref.process(int(k), float(q), float(t))
+
+    step = jax.jit(make_step(cfg, "exact"))
+    state = init_state(n_entities, len(cfg.taus))
+    zs, ps = [], []
+    for i in range(0, n_events, batch):
+        ev = Event(key=jnp.asarray(keys[i:i + batch]),
+                   q=jnp.asarray(qs[i:i + batch]),
+                   t=jnp.asarray(ts[i:i + batch]),
+                   valid=jnp.ones(batch, bool))
+        state, info = step(state, ev, root)
+        zs.append(np.asarray(info.z))
+        ps.append(np.asarray(info.p))
+
+    ref_agg = np.stack([e.agg for e in ref.ents])
+    ref_vf = np.array([e.v_f for e in ref.ents])
+    ref_lt = np.array([e.last_t for e in ref.ents])
+    np.testing.assert_allclose(np.asarray(state.agg), ref_agg, rtol=2e-4,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(state.v_f), ref_vf, rtol=2e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.last_t), ref_lt, rtol=1e-6)
+    assert int(np.concatenate(zs).sum()) == ref.writes
+
+
+def test_exact_engine_padding_mask():
+    cfg = EngineConfig(taus=(60.0,), policy="unfiltered", exact_rounds=4)
+    state = init_state(4, 1)
+    step = jax.jit(make_step(cfg, "exact"))
+    ev = Event(key=jnp.array([1, 1, 2, 3], jnp.int32),
+               q=jnp.array([1.0, 2.0, 3.0, 4.0]),
+               t=jnp.array([1.0, 2.0, 3.0, 4.0]),
+               valid=jnp.array([True, True, True, False]))
+    state, info = step(state, ev, jax.random.PRNGKey(0))
+    assert int(info.writes) == 3
+    assert not bool(info.z[3])
+    assert np.asarray(state.agg)[3].sum() == 0.0
+
+
+def test_fast_mode_matches_exact_across_batches():
+    """With one event per key per batch, fast == exact exactly."""
+    rng = np.random.default_rng(1)
+    n_entities, batch, n_batches = 64, 32, 6
+    cfg = EngineConfig(taus=(60.0, 3600.0), h=600.0, budget=0.02,
+                       policy="pp", exact_rounds=4)
+    root = jax.random.PRNGKey(3)
+    step_e = jax.jit(make_step(cfg, "exact"))
+    step_f = jax.jit(make_step(cfg, "fast"))
+    se = init_state(n_entities, 2)
+    sf = init_state(n_entities, 2)
+    t0 = 0.0
+    for b in range(n_batches):
+        keys = rng.choice(n_entities, size=batch, replace=False).astype(np.int32)
+        ts = (t0 + np.sort(rng.uniform(1, 500, size=batch))).astype(np.float32)
+        t0 = float(ts.max()) + 1.0
+        ev = Event(key=jnp.asarray(keys),
+                   q=jnp.asarray(rng.lognormal(0, 1, batch).astype(np.float32)),
+                   t=jnp.asarray(ts), valid=jnp.ones(batch, bool))
+        se, ie = step_e(se, ev, root)
+        sf, if_ = step_f(sf, ev, root)
+        np.testing.assert_array_equal(np.asarray(ie.z), np.asarray(if_.z))
+        np.testing.assert_allclose(np.asarray(ie.p), np.asarray(if_.p),
+                                   rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(se.agg), np.asarray(sf.agg),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(se.v_f), np.asarray(sf.v_f),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_fast_mode_folds_multiple_events_per_key():
+    """Duplicate keys in one batch: final state must equal sequential folding
+    of the same decisions (fast mode's decisions are batch-start; given those
+    p/z, the fold must be exact)."""
+    cfg = EngineConfig(taus=(100.0,), h=50.0, policy="unfiltered")
+    state = init_state(2, 1)
+    step = jax.jit(make_step(cfg, "fast"))
+    ev = Event(key=jnp.array([0, 0, 0, 1], jnp.int32),
+               q=jnp.array([1.0, 2.0, 3.0, 5.0]),
+               t=jnp.array([10.0, 20.0, 30.0, 15.0]),
+               valid=jnp.ones(4, bool))
+    state, info = step(state, ev, jax.random.PRNGKey(0))
+    # entity 0 decayed sum at t=30: 1*e^-20/100*... contributions at final t:
+    expect_sum = 1.0 * np.exp(-20 / 100) + 2.0 * np.exp(-10 / 100) + 3.0
+    np.testing.assert_allclose(float(state.agg[0, 0, 1]), expect_sum, rtol=1e-5)
+    np.testing.assert_allclose(float(state.agg[1, 0, 1]), 5.0, rtol=1e-6)
+    assert float(state.last_t[0]) == 30.0
+    # v_f fold with h: 3 persisted events
+    expect_v = (np.exp(-20 / 50) + np.exp(-10 / 50) + 1.0)
+    np.testing.assert_allclose(float(state.v_f[0]), expect_v, rtol=1e-5)
+
+
+def test_decision_reproducibility_across_batching():
+    """Same events, different batch splits -> identical thinning decisions."""
+    rng = np.random.default_rng(2)
+    keys, qs, ts = _make_stream(rng, 128, 8)
+    cfg = EngineConfig(taus=(60.0,), h=600.0, budget=0.01, policy="pp",
+                       exact_rounds=64)
+    root = jax.random.PRNGKey(11)
+
+    def run(batch):
+        step = jax.jit(make_step(cfg, "exact"))
+        state = init_state(8, 1)
+        allz = []
+        for i in range(0, 128, batch):
+            ev = Event(key=jnp.asarray(keys[i:i + batch]),
+                       q=jnp.asarray(qs[i:i + batch]),
+                       t=jnp.asarray(ts[i:i + batch]),
+                       valid=jnp.ones(batch, bool))
+            state, info = step(state, ev, root)
+            allz.append(np.asarray(info.z))
+        return np.concatenate(allz)
+
+    np.testing.assert_array_equal(run(16), run(64))

@@ -1,0 +1,154 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ------------------------------------------------------------- decay_scan
+@pytest.mark.parametrize("T,C", [(8, 16), (64, 128), (100, 130), (256, 256),
+                                 (7, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_decay_scan_matches_ref(T, C, dtype):
+    rng = np.random.default_rng(hash((T, C)) % 2**31)
+    a = jnp.asarray(rng.uniform(0.0, 1.0, (T, C)), dtype)
+    u = jnp.asarray(rng.normal(size=(T, C)), dtype)
+    h0 = jnp.asarray(rng.normal(size=(C,)), dtype)
+    got = ops.decay_scan(a, u, h0, use_pallas="interpret", block_t=32,
+                         block_c=128)
+    want = ref.decay_scan_ref(a, u, h0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decay_scan_zero_decay_is_cumsum():
+    T, C = 32, 8
+    u = jnp.asarray(np.random.default_rng(0).normal(size=(T, C)), jnp.float32)
+    got = ops.decay_scan(jnp.ones((T, C)), u, use_pallas="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.cumsum(np.asarray(u), 0),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- thinning_rmw
+@pytest.mark.parametrize("B,T", [(16, 3), (256, 6), (100, 6), (512, 2)])
+@pytest.mark.parametrize("va", [False, True])
+def test_thinning_rmw_matches_ref(B, T, va):
+    rng = np.random.default_rng(hash((B, T, va)) % 2**31)
+    taus = jnp.asarray(np.geomspace(60, 86400, T), jnp.float32)
+    fresh = rng.random(B) < 0.3
+    last_t = jnp.asarray(np.where(fresh, -1e38, rng.uniform(0, 1e4, B)),
+                         jnp.float32)
+    v_f = jnp.asarray(np.where(fresh, 0, rng.uniform(0, 50, B)), jnp.float32)
+    agg = jnp.asarray(rng.uniform(0, 10, (B, 3 * T)), jnp.float32)
+    agg = agg * (~fresh[:, None])
+    q = jnp.asarray(rng.lognormal(3, 1, B), jnp.float32)
+    t = jnp.asarray(rng.uniform(1e4, 2e4, B), jnp.float32)
+    u = jnp.asarray(rng.random(B), jnp.float32)
+    valid = jnp.asarray((rng.random(B) < 0.9).astype(np.float32))
+    kw = dict(h=3600.0, budget=0.001, alpha=1.5, variance_aware=va,
+              mu_tau_index=min(2, T - 1))
+    got = ops.thinning_rmw(taus, last_t, v_f, agg, q, t, u, valid,
+                           use_pallas="interpret", block_b=64, **kw)
+    want = ref.thinning_rmw_ref(taus, last_t, v_f, agg, q, t, u, valid, **kw)
+    for g, w, name in zip(got, want,
+                          ["last_t", "v_f", "agg", "z", "p", "feats"]):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=2e-5, atol=1e-5, err_msg=name)
+
+
+def test_thinning_rmw_agrees_with_core_engine_math():
+    """Kernel oracle must match the core (types/estimators) decision math."""
+    from repro.core import EngineConfig, Event, init_state, make_step
+    B, T = 32, 3
+    taus = (60.0, 3600.0, 86400.0)
+    cfg = EngineConfig(taus=taus, h=600.0, budget=0.01, policy="pp",
+                       exact_rounds=B)
+    rng = np.random.default_rng(5)
+    keys = np.arange(B, dtype=np.int32)          # distinct keys: no conflicts
+    qs = rng.lognormal(3, 1, B).astype(np.float32)
+    ts = np.sort(rng.uniform(0, 1e4, B)).astype(np.float32)
+
+    state = init_state(B, T)
+    step = jax.jit(make_step(cfg, "fast"))
+    root = jax.random.PRNGKey(3)
+    ev = Event(key=jnp.asarray(keys), q=jnp.asarray(qs), t=jnp.asarray(ts),
+               valid=jnp.ones(B, bool))
+    new_state, info = step(state, ev, root)
+
+    # same decisions through the kernel (uniforms taken from the engine path)
+    from repro.core import thinning
+    u = thinning.uniform_for_events(
+        root, jnp.asarray(keys),
+        jax.lax.bitcast_convert_type(jnp.asarray(ts), jnp.uint32))
+    got = ref.thinning_rmw_ref(
+        jnp.asarray(taus, jnp.float32), jnp.full((B,), -1e38, jnp.float32),
+        jnp.zeros(B, jnp.float32), jnp.zeros((B, 3 * T), jnp.float32),
+        jnp.asarray(qs), jnp.asarray(ts), u, jnp.ones(B, jnp.float32),
+        h=cfg.h, budget=cfg.budget)
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(info.z))
+    np.testing.assert_allclose(np.asarray(got[4]), np.asarray(info.p),
+                               rtol=1e-5)
+
+
+# -------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("B,H,Kh,Sq,Skv,D", [
+    (2, 4, 4, 64, 64, 32),     # MHA
+    (2, 4, 2, 64, 64, 64),     # GQA
+    (1, 8, 1, 128, 128, 64),   # MQA
+    (2, 4, 2, 96, 96, 64),     # non-aligned seq (padded, causal)
+])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 32, 0.0), (True, 0, 20.0), (False, 0, 0.0),
+])
+def test_flash_attention_matches_ref(B, H, Kh, Sq, Skv, D, causal, window,
+                                     softcap):
+    if not causal and Sq % 32:
+        pytest.skip("non-causal requires aligned shapes")
+    rng = np.random.default_rng(hash((B, H, Sq, causal, window)) % 2**31)
+    q = jnp.asarray(rng.normal(size=(B, H, Sq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Kh, Skv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Kh, Skv, D)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, use_pallas="interpret",
+                              block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), dtype)
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), dtype)
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), dtype)
+    got = ops.flash_attention(q, k, v, use_pallas="interpret",
+                              block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_attention_path():
+    """The jnp chunked_attention (model path) and the Pallas kernel agree."""
+    from repro.models.attention import chunked_attention
+    rng = np.random.default_rng(13)
+    B, H, Kh, S, D = 2, 4, 2, 128, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Kh, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Kh, D)), jnp.float32)
+    pos = jnp.arange(S)
+    model_out = chunked_attention(q, k, v, pos, pos, causal=True,
+                                  q_chunk=32, kv_chunk=32)
+    kernel_out = ops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, use_pallas="interpret",
+        block_q=32, block_k=32).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(model_out), np.asarray(kernel_out),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,148 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import estimators, intensity, thinning
+from repro.core.types import EngineConfig
+
+finite_f = st.floats(min_value=1e-6, max_value=1e6, allow_nan=False)
+
+
+@given(lam=finite_f, budget=st.floats(1e-6, 1e3))
+@settings(max_examples=200, deadline=None)
+def test_naive_inclusion_bounds(lam, budget):
+    p = float(thinning.naive_inclusion(jnp.float32(lam), budget))
+    assert 0.99e-6 <= p <= 1.0      # fp32 rounding of the 1e-6 floor
+    # exact where unclamped
+    if 1e-6 < budget / lam < 1.0:
+        assert abs(p - budget / lam) < 1e-5 * max(1.0, p)
+
+
+@given(lam1=finite_f, lam2=finite_f, budget=st.floats(1e-6, 1e3))
+@settings(max_examples=200, deadline=None)
+def test_naive_inclusion_monotone_in_intensity(lam1, lam2, budget):
+    """Busier entities are thinned at least as hard (Eq. 2)."""
+    p1 = float(thinning.naive_inclusion(jnp.float32(min(lam1, lam2)), budget))
+    p2 = float(thinning.naive_inclusion(jnp.float32(max(lam1, lam2)), budget))
+    assert p2 <= p1 + 1e-7
+
+
+@given(lam=finite_f, w=st.floats(-1e4, 1e4), mu=st.floats(-1e3, 1e3),
+       sigma=st.floats(1e-3, 1e3), alpha=st.floats(0.0, 8.0))
+@settings(max_examples=200, deadline=None)
+def test_variance_aware_properties(lam, w, mu, sigma, alpha):
+    budget = 0.01
+    p = float(thinning.variance_aware_inclusion(
+        jnp.float32(lam), budget, jnp.float32(w), jnp.float32(mu),
+        jnp.float32(sigma), alpha))
+    assert 0.99e-6 <= p <= 1.0      # fp32 rounding of the 1e-6 floor
+    # mandatory events stay mandatory (base >= 1 -> p = 1)
+    if budget / lam >= 1.0:
+        assert p == 1.0
+    # monotone in the standardized contribution
+    p_hi = float(thinning.variance_aware_inclusion(
+        jnp.float32(lam), budget, jnp.float32(w + sigma), jnp.float32(mu),
+        jnp.float32(sigma), alpha))
+    assert p_hi >= p - 1e-6
+
+
+@given(key=st.integers(0, 2**31 - 1), t=st.floats(0, 1e8, allow_nan=False))
+@settings(max_examples=100, deadline=None)
+def test_thinning_rng_deterministic(key, t):
+    """Counter-based decisions are reproducible and order-independent."""
+    root = jax.random.PRNGKey(9)
+    bits = jax.lax.bitcast_convert_type(jnp.float32(t), jnp.uint32)
+    u1 = float(thinning.uniform_for_events(
+        root, jnp.uint32([key]), bits[None])[0])
+    # same event inside a different batch composition
+    u2 = float(thinning.uniform_for_events(
+        root, jnp.uint32([123, key]), jnp.stack(
+            [jnp.uint32(7), bits]))[1])
+    assert u1 == u2
+    assert 0.0 <= u1 < 1.0
+
+
+@given(t0=st.floats(0, 1e6), dt1=st.floats(0, 1e5), dt2=st.floats(0, 1e5),
+       val=st.floats(0, 1e6))
+@settings(max_examples=200, deadline=None)
+def test_lazy_decay_composes(t0, dt1, dt2, val):
+    """decay(t0->t1) then (t1->t2) == decay(t0->t2): the property that lets
+    skipped updates compose without writes (core of persistence-path
+    control)."""
+    taus = jnp.asarray([60.0, 3600.0, 86400.0])
+    agg = jnp.full((1, 3, 3), jnp.float32(val))
+    t1, t2 = t0 + dt1, t0 + dt1 + dt2
+    one = estimators.decay_to(
+        estimators.decay_to(agg, jnp.float32(t0), jnp.float32(t1), taus),
+        jnp.float32(t1), jnp.float32(t2), taus)
+    direct = estimators.decay_to(agg, jnp.float32(t0), jnp.float32(t2), taus)
+    np.testing.assert_allclose(np.asarray(one), np.asarray(direct),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(v=st.floats(0, 1e4), dt=st.floats(0, 1e5), p=st.floats(1e-3, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_filtered_update_unbiased_one_step(v, dt, p):
+    """E_Z[v_F'] = 1 + beta * v_F — the single-step identity behind the
+    martingale (Remark 4.1): p*(1/p + beta v) + (1-p)*(beta v) = 1 + beta v.
+    """
+    h = 3600.0
+    beta = math.exp(-dt / h)
+    expected = p * (1.0 / p + beta * v) + (1 - p) * (beta * v)
+    full = 1.0 + beta * v
+    assert abs(expected - full) < 1e-6 * max(1.0, full)
+
+
+@given(n=st.integers(2, 40), seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_kde_recurrence_matches_dense(n, seed):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.uniform(0, 1e4, n)).astype(np.float32)
+    h = 500.0
+    v = 0.0
+    last = None
+    rec = []
+    for t in ts:
+        beta = 0.0 if last is None else math.exp(-(t - last) / h)
+        lam = (1.0 + beta * v) / h
+        v = 1.0 + beta * v
+        last = t
+        rec.append(lam)
+    dense = intensity.kde_intensity_dense(jnp.asarray(ts), jnp.asarray(ts), h)
+    np.testing.assert_allclose(rec, np.asarray(dense), rtol=1e-4)
+
+
+@given(budget=st.floats(1e-5, 1e-2), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_engine_write_budget_bound(budget, seed):
+    """E[writes] <= budget * elapsed + n_keys (each key's first event has
+    p=1 when cold) — the paper's write-rate guarantee."""
+    from repro.core import Event, init_state, make_step
+    rng = np.random.default_rng(seed)
+    n, keys_n = 512, 8
+    keys = rng.integers(0, keys_n, n).astype(np.int32)
+    ts = np.sort(rng.uniform(0, 1e4, n)).astype(np.float32)
+    qs = np.ones(n, np.float32)
+    cfg = EngineConfig(taus=(3600.0,), h=100.0, budget=budget,
+                       mu_tau_index=0)
+    state = init_state(keys_n, 1)
+    step = jax.jit(make_step(cfg, "fast"))
+    writes = 0
+    for i in range(0, n, 64):
+        ev = Event(key=jnp.asarray(keys[i:i + 64]),
+                   q=jnp.asarray(qs[i:i + 64]),
+                   t=jnp.asarray(ts[i:i + 64]),
+                   valid=jnp.ones(64, bool))
+        state, info = step(state, ev, jax.random.PRNGKey(0))
+        writes += int(info.writes)
+    elapsed = float(ts[-1] - ts[0])
+    # generous slack for stochasticity + cold-start oversampling
+    bound = budget * elapsed * keys_n + 3 * keys_n + 5 * math.sqrt(n)
+    assert writes <= bound, (writes, bound)

@@ -1,0 +1,100 @@
+"""Streaming substrate: workload statistics, SerDe roundtrip, worker vs
+oracle decision math, replay drivers, partitioning."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.types import EngineConfig
+from repro.streaming import kvstore, replay, worker, workload
+
+
+@pytest.mark.parametrize("regime,anom,vol80_max,kurt_rng", [
+    ("fraud", 0.05, 8.0, (6, 16)),
+    ("ibm", 0.13, 4.0, (2.5, 5.5)),
+    ("iiot", 40.0, 4.0, (1.7, 3.0)),
+    ("wikipedia", 8.35, 60.0, (1.7, 3.0)),
+])
+def test_workload_matches_table2(regime, anom, vol80_max, kurt_rng):
+    s = workload.generate_regime(regime)
+    st = s.stats()
+    assert abs(st["anomaly_pct"] - anom) < 0.2 * anom + 0.1
+    assert st["vol80_pct"] <= vol80_max or regime == "wikipedia"
+    assert kurt_rng[0] <= st["kurtosis"] <= kurt_rng[1]
+    assert np.all(np.diff(s.t) >= 0)          # time-ordered
+
+
+def test_zipf_calibration():
+    a = workload.calibrate_zipf(7000, 0.041)
+    frac = workload.vol80_fraction(workload.zipf_weights(7000, a))
+    assert abs(frac - 0.041) < 0.005
+
+
+def test_serde_roundtrip():
+    sd = kvstore.SerDe(6)
+    agg = np.arange(18, dtype=np.float32).reshape(6, 3)
+    raw = sd.pack(123.5, 4.25, agg, 7.0, 99.0)
+    assert len(raw) == sd.row_bytes()
+    last_t, v_f, agg2, v_full, ltf = sd.unpack(raw)
+    assert (last_t, v_f, v_full, ltf) == (123.5, 4.25, 7.0, 99.0)
+    np.testing.assert_array_equal(agg, agg2)
+
+
+def test_serde_rejects_corrupt():
+    sd = kvstore.SerDe(3)
+    raw = sd.pack(0.0, 0.0, np.zeros((3, 3), np.float32), 0.0, 0.0)
+    with pytest.raises(AssertionError):
+        sd.unpack(b"\x00\x00" + raw[2:])
+
+
+def test_partition_deterministic_and_balanced():
+    parts = [kvstore.partition_of(k, 8) for k in range(10_000)]
+    assert parts == [kvstore.partition_of(k, 8) for k in range(10_000)]
+    counts = np.bincount(parts, minlength=8)
+    assert counts.min() > 0.8 * counts.mean()
+
+
+def test_worker_decision_matches_core_oracle():
+    """The byte-backed worker and the core ReferenceEngine implement the
+    same decision math (p and lambda agree on identical state)."""
+    from repro.core.reference import ReferenceEngine
+    import jax
+    cfg = EngineConfig(taus=(60.0, 3600.0), h=600.0, budget=0.01,
+                       policy="pp", mu_tau_index=1)
+    w = worker.FeatureWorker(cfg, seed=0)
+    ref = ReferenceEngine(cfg, 4, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    for i in range(200):
+        k = int(rng.integers(0, 4))
+        q = float(rng.lognormal(3, 1))
+        t = float(i * 37.0)
+        out = w.process(k, q, t)
+        p_ref, z_ref, lam_ref = ref.process(k, q, t)
+        # decisions use different RNG draws; the *probabilities* must agree
+        # while both stores saw identical histories — force agreement by
+        # syncing the reference's persistence decision to the worker's
+        assert abs(out["lam"] - lam_ref) < 2e-3 * max(lam_ref, 1e-9), i
+        assert abs(out["p"] - p_ref) < 2e-3, i
+        # re-sync states (overwrite reference with worker's decision)
+        e = ref.ents[k]
+        raw = w.store.get(k)
+        if raw is not None:
+            last_t, v_f, agg, v_full, ltf = w.serde.unpack(raw)
+            e.last_t, e.v_f, e.agg = last_t, v_f, agg.astype(np.float64)
+            e.v_full, e.last_t_full = v_full, ltf
+
+
+def test_closed_loop_thinning_raises_throughput():
+    s = workload.generate_regime("ibm", n_events=4000)
+    unf = replay.closed_loop(s, EngineConfig(policy="unfiltered"))
+    thin = replay.closed_loop(s, EngineConfig(budget=0.001 / 60, h=3600.0))
+    assert thin.write_pct < 40.0
+    assert thin.throughput_eps > 1.3 * unf.throughput_eps
+    assert thin.lat_avg_ms < unf.lat_avg_ms
+
+
+def test_waf_model_monotone():
+    m = kvstore.StorageModel()
+    wafs = [m.waf(b) for b in [10_000, 10_000_000, 10_000_000_000]]
+    assert wafs[0] <= wafs[1] <= wafs[2]
+    assert 1.0 <= wafs[0] and wafs[2] <= 3.0
