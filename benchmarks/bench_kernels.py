@@ -50,7 +50,7 @@ def run(seed: int = 0):
     t = jnp.asarray(rng.uniform(1e4, 2e4, B), jnp.float32)
     uu = jnp.asarray(rng.random(B), jnp.float32)
     valid = jnp.ones(B, jnp.float32)
-    kw = dict(h=3600.0, budget=0.001, variance_aware=True, alpha=1.5)
+    kw = dict(h=3600.0, budget=0.001, policy="pp_vr", alpha=1.5)
     got = ops.thinning_rmw(taus, last_t, v_f, agg, q, t, uu, valid,
                            use_pallas="interpret", **kw)
     want = ref.thinning_rmw_ref(taus, last_t, v_f, agg, q, t, uu, valid,

@@ -18,6 +18,7 @@ SUITES = {
     "fig7": ("bench_estimators", "Fig 7: estimator stability/oversampling"),
     "fig10": ("bench_fidelity", "Fig 10: approximation fidelity"),
     "kernels": ("bench_kernels", "Pallas kernels vs oracles"),
+    "engine": ("bench_engine", "Engine throughput (events/s, BENCH_engine.json)"),
     "roofline": ("bench_roofline", "Roofline terms from dry-run artifacts"),
 }
 
@@ -28,6 +29,7 @@ QUICK_KW = {
                anomaly_boost=10.0),
     "fig10": dict(n_events=20_000, lambdas_pm=(0.002, 0.02, 0.2)),
     "fig5": dict(alphas=(0.0, 1.0, 3.0)),
+    "engine": dict(n_events=16_384),
 }
 
 

@@ -3,16 +3,18 @@
 Public API:
   - ``EngineConfig``, ``ProfileState``, ``Event``, ``StepInfo`` (types)
   - ``init_state``, ``make_step``, ``materialize_features`` (engine)
+  - ``run_stream`` (donated-buffer block driver, core/stream.py)
   - thinning policies (Eq. 2 / Eq. 4), intensity estimators (Eq. 5, §4.2),
     Horvitz–Thompson decayed aggregates (§3.3)
 """
 from repro.core.types import (Event, EngineConfig, ProfileState, StepInfo,
                               init_state)
 from repro.core.engine import make_step, materialize_features
+from repro.core.stream import run_stream
 from repro.core import thinning, intensity, estimators, diagnostics
 
 __all__ = [
     "Event", "EngineConfig", "ProfileState", "StepInfo", "init_state",
-    "make_step", "materialize_features", "thinning", "intensity",
-    "estimators", "diagnostics",
+    "make_step", "materialize_features", "run_stream", "thinning",
+    "intensity", "estimators", "diagnostics",
 ]

@@ -17,6 +17,20 @@ becomes a micro-batched tensor program.  Two execution modes are provided:
   the production configuration (it is also what any asynchronous real system
   effectively does) and its staleness bias is bounded by the batch horizon.
 
+Both modes route the whole §5.1 decision + read-modify-write through the
+fused kernel ``repro.kernels.ops.thinning_rmw`` (Pallas on TPU, the fused
+jnp reference on CPU): one pass over the gathered profile rows covers lazy
+decay, feature materialization, intensity, inclusion probability, Bernoulli
+thresholding, the HT masked update *and* the full-stream control column,
+so nothing in this module re-derives the decision math.  Exact mode keeps
+its per-round outputs in-place in the scan carry (no [rounds, B, 4T]
+stacking), and the per-event uniforms / sort bookkeeping are computed once
+per step, not once per round.
+
+For steady-state streaming throughput use ``repro.core.stream.run_stream``,
+which scans [n_batches, B] event blocks through one jitted, state-donating
+dispatch (zero state copies between blocks).
+
 Both modes use counter-based RNG keyed on (entity, time-bits) so a given event
 receives the same thinning decision regardless of batching, ordering or shard
 placement.
@@ -32,8 +46,15 @@ import jax.numpy as jnp
 from repro.core import estimators, intensity, thinning
 from repro.core.types import (Event, EngineConfig, ProfileState, StepInfo,
                               init_state)
+from repro.kernels import ops
 
 __all__ = ["init_state", "make_step", "materialize_features"]
+
+# Finite stand-in for the -inf "never persisted" timestamps in ProfileState:
+# the fused kernel masks freshness on `< -1e30` because -inf breaks 0*inf
+# masking on the VPU.  exp(-(t + 1e38)/h) underflows to 0 exactly, so the
+# substitution is behaviour-preserving on the decay paths.
+_FRESH_SENTINEL = -1e38
 
 
 def _seq_bits(t: jax.Array) -> jax.Array:
@@ -41,83 +62,44 @@ def _seq_bits(t: jax.Array) -> jax.Array:
     return jax.lax.bitcast_convert_type(t.astype(jnp.float32), jnp.uint32)
 
 
-def _decide(cfg: EngineConfig, taus: jax.Array, state_cols, ev: Event, rng):
-    """Pure decision path: persistence-backed reads only (paper §4 design goal).
+def _fused_kw(cfg: EngineConfig) -> dict:
+    """Static kernel parameters derived from the engine config."""
+    return dict(h=cfg.h, budget=cfg.budget, alpha=cfg.alpha,
+                policy=cfg.policy, fixed_rate=cfg.fixed_rate,
+                mu_tau_index=cfg.mu_tau_index, min_p=cfg.min_p)
 
-    state_cols = (last_t, v_f, agg, v_full, last_t_full) gathered for ev.key.
-    Returns (p, z, lam_hat, features).
+
+def _gather_rows(state: ProfileState, key: jax.Array):
+    """Gather one profile row per event, sentinel-mapped for the kernel.
+
+    Returns (last_t, v_f, agg_flat[B, 3T], v_full, last_t_full).
     """
-    last_t, v_f, agg, v_full, last_t_full = state_cols
-    agg_now = estimators.decay_to(agg, last_t, ev.t, taus)
-    features = estimators.materialize(agg_now)
-
-    if cfg.policy == "full":
-        lam = intensity.lam_hat_from_state(v_full, last_t_full, ev.t, cfg.h)
-    else:
-        lam = intensity.lam_hat_from_state(v_f, last_t, ev.t, cfg.h)
-
-    if cfg.policy == "unfiltered":
-        p = jnp.ones_like(lam)
-    elif cfg.policy == "fixed":
-        p = thinning.fixed_rate_inclusion(lam.shape, cfg.fixed_rate, cfg.min_p)
-    elif cfg.policy == "pp_vr":
-        mu_w, sigma_w = estimators.contribution_moments(agg_now, cfg.mu_tau_index)
-        p = thinning.variance_aware_inclusion(
-            lam, cfg.budget, ev.q, mu_w, sigma_w, cfg.alpha, cfg.min_p)
-    else:  # 'pp' and the decision half of 'full'
-        p = thinning.naive_inclusion(lam, cfg.budget, cfg.min_p)
-
-    u = thinning.uniform_for_events(rng, ev.key, _seq_bits(ev.t))
-    z = (u < p) & ev.valid
-    return p, z, lam, features
+    fin = lambda x: jnp.where(jnp.isfinite(x), x, _FRESH_SENTINEL)
+    return (fin(state.last_t[key]), state.v_f[key],
+            state.agg[key].reshape(key.shape[0], -1),
+            state.v_full[key], fin(state.last_t_full[key]))
 
 
-def _scatter_updates(state: ProfileState, cfg: EngineConfig, taus, ev: Event,
-                     p, z, write_key) -> ProfileState:
-    """Apply one round of conflict-free per-key updates.
-
-    write_key: ev.key where the row must change, OOB sentinel otherwise
-    (mode='drop' scatters).  Aggregates/v_f/last_t change only when z; the
-    full-stream control column changes on every valid event.
-    """
-    num_e = state.num_entities
-    data_key = jnp.where(z, ev.key, num_e)  # persisted-path writes
-    ctrl_key = jnp.where(ev.valid, ev.key, num_e)  # full-stream column
-
-    # Persistence-path state (decay computed against stored last persisted t).
-    last_t_g = state.last_t[write_key.clip(0, num_e - 1)]
-    agg_g = state.agg[write_key.clip(0, num_e - 1)]
-    v_f_g = state.v_f[write_key.clip(0, num_e - 1)]
-
-    agg_new = estimators.ht_update(
-        estimators.decay_to(agg_g, last_t_g, ev.t, taus), ev.q, z, p)
-    v_f_new = intensity.update_v(
-        v_f_g, last_t_g, ev.t, cfg.h, jnp.where(z, 1.0 / p, 0.0))
-
-    state = state._replace(
-        agg=state.agg.at[data_key].set(agg_new, mode="drop"),
-        v_f=state.v_f.at[data_key].set(v_f_new, mode="drop"),
-        last_t=state.last_t.at[data_key].set(ev.t, mode="drop"),
-    )
-
-    # Full-stream (in-memory baseline) column: unconditional KDE update.
-    v_full_g = state.v_full[ctrl_key.clip(0, num_e - 1)]
-    last_tf_g = state.last_t_full[ctrl_key.clip(0, num_e - 1)]
-    v_full_new = intensity.update_v(v_full_g, last_tf_g, ev.t, cfg.h,
-                                    jnp.ones_like(ev.t))
-    state = state._replace(
-        v_full=state.v_full.at[ctrl_key].set(v_full_new, mode="drop"),
-        last_t_full=state.last_t_full.at[ctrl_key].set(ev.t, mode="drop"),
-    )
-    return state
+def _fused_rmw(cfg: EngineConfig, taus, state: ProfileState, key, q, t, u,
+               valid):
+    """One fused decision+update pass over gathered rows (whole profile row)."""
+    last_t, v_f, agg_flat, v_full, last_t_full = _gather_rows(state, key)
+    return ops.thinning_rmw(
+        taus, last_t, v_f, agg_flat, q, t, u,
+        valid.astype(jnp.float32), v_full, last_t_full, **_fused_kw(cfg))
 
 
 def _sort_by_key_time(ev: Event):
-    order = jnp.lexsort((ev.t, ev.key))
+    # Invalid (padding) lanes sort into their own trailing segment: otherwise
+    # a padded tail block's key=0/t=0 filler would occupy entity 0's first
+    # round slots and push its real events past exact_rounds.
+    sort_key = jnp.where(ev.valid, ev.key, jnp.iinfo(jnp.int32).max)
+    order = jnp.lexsort((ev.t, sort_key))
     ev_s = Event(*(x[order] for x in ev))
+    key_s = sort_key[order]
     idx = jnp.arange(ev.key.shape[0])
     is_start = jnp.concatenate(
-        [jnp.array([True]), ev_s.key[1:] != ev_s.key[:-1]])
+        [jnp.array([True]), key_s[1:] != key_s[:-1]])
     start_idx = jnp.where(is_start, idx, 0)
     seg_start = jax.lax.cummax(start_idx)
     round_id = idx - seg_start  # position within (key)-segment
@@ -129,35 +111,55 @@ def _step_exact(cfg: EngineConfig, state: ProfileState, ev: Event, rng):
     ev_s, order, round_id, _ = _sort_by_key_time(ev)
     B = ev.key.shape[0]
     num_e = state.num_entities
+    n_taus = taus.shape[0]
+
+    # Round-invariant bookkeeping, hoisted out of the scan: the counter-based
+    # uniforms depend only on (key, t) and the inverse sort permutation only
+    # on the batch — neither needs recomputation per round.
+    u_s = thinning.uniform_for_events(rng, ev_s.key, _seq_bits(ev_s.t))
+    inv = jnp.argsort(order)
 
     def round_body(carry, r):
-        state = carry
+        state, p_o, z_o, lam_o, feats_o = carry
         active = (round_id == r) & ev_s.valid
-        # Mask inactive lanes to a harmless OOB key so gathers stay in-bounds
-        # and scatters drop.
-        evr = Event(key=jnp.where(active, ev_s.key, 0),
-                    q=ev_s.q, t=ev_s.t, valid=active)
-        cols = (state.last_t[evr.key], state.v_f[evr.key],
-                state.agg[evr.key], state.v_full[evr.key],
-                state.last_t_full[evr.key])
-        p, z, lam, feats = _decide(cfg, taus, cols, evr, rng)
-        state = _scatter_updates(state, cfg, taus, evr, p, z,
-                                 jnp.where(active, evr.key, num_e))
-        return state, (p, z, lam, feats, active)
+        # Mask inactive lanes to a harmless key-0 gather; their updates are
+        # discarded by the OOB-key 'drop' scatters below.
+        key = jnp.where(active, ev_s.key, 0)
+        (_, new_v_f, new_agg, z, p, feats, lam, new_v_full, _) = _fused_rmw(
+            cfg, taus, state, key, ev_s.q, ev_s.t, u_s, active)
 
-    state, (p_r, z_r, lam_r, feats_r, act_r) = jax.lax.scan(
-        round_body, state, jnp.arange(cfg.exact_rounds))
+        # Conflict-free scatters: within a round each active key occurs once.
+        # Persisted columns change only on z; the full-stream control column
+        # changes on every active event.
+        data_key = jnp.where(z, key, num_e)
+        ctrl_key = jnp.where(active, key, num_e)
+        state = state._replace(
+            agg=state.agg.at[data_key].set(
+                new_agg.reshape(B, n_taus, 3), mode="drop"),
+            v_f=state.v_f.at[data_key].set(new_v_f, mode="drop"),
+            last_t=state.last_t.at[data_key].set(ev_s.t, mode="drop"),
+            v_full=state.v_full.at[ctrl_key].set(new_v_full, mode="drop"),
+            last_t_full=state.last_t_full.at[ctrl_key].set(ev_s.t,
+                                                           mode="drop"),
+        )
 
-    # Collapse the per-round outputs back to per-(sorted)-event vectors, then
-    # invert the sort.
-    sel = jnp.argmax(act_r, axis=0)  # [B] which round handled each event
-    gather = lambda a: a[sel, jnp.arange(B)]
-    p_s, z_s, lam_s = gather(p_r), gather(z_r), gather(lam_r)
-    feats_s = feats_r[sel, jnp.arange(B), :]
-    inv = jnp.argsort(order)
+        # In-place per-round outputs (each event is active in exactly one
+        # round, so overwrite-under-mask is exact and nothing is stacked).
+        p_o = jnp.where(active, p, p_o)
+        z_o = z_o | z
+        lam_o = jnp.where(active, lam, lam_o)
+        feats_o = jnp.where(active[:, None], feats, feats_o)
+        return (state, p_o, z_o, lam_o, feats_o), None
+
+    init = (state, jnp.zeros((B,), jnp.float32), jnp.zeros((B,), bool),
+            jnp.zeros((B,), jnp.float32), jnp.zeros((B, 4 * n_taus),
+                                                    jnp.float32))
+    (state, p_s, z_s, lam_s, feats_s), _ = jax.lax.scan(
+        round_body, init, jnp.arange(cfg.exact_rounds))
+
     info = StepInfo(z=z_s[inv] & ev.valid, p=p_s[inv], lam_hat=lam_s[inv],
                     features=feats_s[inv],
-                    writes=jnp.sum(z_s & ev_s.valid).astype(jnp.int32))
+                    writes=jnp.sum(z_s).astype(jnp.int32))
     return state, info
 
 
@@ -165,10 +167,14 @@ def _step_fast(cfg: EngineConfig, state: ProfileState, ev: Event, rng):
     taus = jnp.asarray(cfg.taus, jnp.float32)
     num_e = state.num_entities
     safe_key = jnp.where(ev.valid, ev.key, 0)
-    cols = (state.last_t[safe_key], state.v_f[safe_key], state.agg[safe_key],
-            state.v_full[safe_key], state.last_t_full[safe_key])
-    evm = Event(key=safe_key, q=ev.q, t=ev.t, valid=ev.valid)
-    p, z, lam, feats = _decide(cfg, taus, cols, evm, rng)
+
+    # Decision stage: one fused pass against the batch-start state.  Only the
+    # decision outputs (p, z, lam, features) are consumed here — the state
+    # fold below is the closed-form segment reduction, which subsumes the
+    # kernel's single-event RMW when keys repeat within the batch.
+    u = thinning.uniform_for_events(rng, safe_key, _seq_bits(ev.t))
+    (_, _, _, z, p, feats, lam, _, _) = _fused_rmw(
+        cfg, taus, state, safe_key, ev.q, ev.t, u, ev.valid)
 
     # --- closed-form segment fold of persisted contributions -------------
     # Final per-key timestamp among persisted events:

@@ -55,13 +55,14 @@ class ProfileState(NamedTuple):
 
 
 def init_state(num_entities: int, num_taus: int, dtype=jnp.float32) -> ProfileState:
-    neg_inf = jnp.full((num_entities,), -jnp.inf, dtype)
+    # Distinct buffers per field (no aliasing): donated-state drivers
+    # (core/stream.py) require every leaf to own its storage.
     return ProfileState(
-        last_t=neg_inf,
+        last_t=jnp.full((num_entities,), -jnp.inf, dtype),
         v_f=jnp.zeros((num_entities,), dtype),
         agg=jnp.zeros((num_entities, num_taus, NUM_AGG_COLS), dtype),
         v_full=jnp.zeros((num_entities,), dtype),
-        last_t_full=neg_inf,
+        last_t_full=jnp.full((num_entities,), -jnp.inf, dtype),
     )
 
 
@@ -102,6 +103,9 @@ class EngineConfig:
             raise ValueError(f"unknown policy {self.policy!r}")
         if not self.taus:
             raise ValueError("need at least one decay constant")
+        # Normalize to a hashable tuple: configs are used as cache / static
+        # jit keys (core/stream.py), which a list-valued taus would break.
+        object.__setattr__(self, "taus", tuple(self.taus))
         if not 0 <= self.mu_tau_index < len(self.taus):
             # standardization window defaults to the longest maintained
             # decay when the configured index exceeds the tau list (the

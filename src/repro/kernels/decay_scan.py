@@ -25,6 +25,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 spells the TPU compiler-params class TPUCompilerParams.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams",
+                           getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _decay_scan_kernel(a_ref, u_ref, h0_ref, out_ref, carry_ref, *,
                        block_t: int):
@@ -49,7 +53,7 @@ def _decay_scan_kernel(a_ref, u_ref, h0_ref, out_ref, carry_ref, *,
 
 def decay_scan_pallas(a: jax.Array, u: jax.Array, h0: jax.Array | None = None,
                       *, block_t: int = 256, block_c: int = 128,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool = False) -> jax.Array:
     """h[t] = a[t]*h[t-1] + u[t] over [T, C] inputs (f32).
 
     T must divide by block_t and C by block_c (ops.py pads otherwise).
@@ -74,7 +78,7 @@ def decay_scan_pallas(a: jax.Array, u: jax.Array, h0: jax.Array | None = None,
         out_specs=pl.BlockSpec((block_t, block_c), lambda c, t: (t, c)),
         out_shape=jax.ShapeDtypeStruct((T, C), a.dtype),
         scratch_shapes=[pltpu.VMEM((1, block_c), a.dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, u, h0[None, :])

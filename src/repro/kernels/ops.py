@@ -62,34 +62,58 @@ def decay_scan(a, u, h0=None, *, use_pallas: Union[bool, str] = "auto",
 
 # ----------------------------------------------------------- thinning_rmw
 @functools.partial(jax.jit, static_argnames=(
-    "h", "budget", "alpha", "variance_aware", "mu_tau_index", "min_p",
-    "use_pallas", "block_b"))
-def thinning_rmw(taus, last_t, v_f, agg_flat, q, t, u, valid, *,
+    "h", "budget", "alpha", "variance_aware", "policy", "fixed_rate",
+    "mu_tau_index", "min_p", "use_pallas", "block_b"))
+def thinning_rmw(taus, last_t, v_f, agg_flat, q, t, u, valid,
+                 v_full=None, last_t_full=None, *,
                  h: float, budget: float, alpha: float = 0.0,
-                 variance_aware: bool = False, mu_tau_index: int = 2,
+                 variance_aware: bool = False, policy: str = None,
+                 fixed_rate: float = 0.1, mu_tau_index: int = 2,
                  min_p: float = 1e-6, use_pallas: Union[bool, str] = "auto",
                  block_b: int = 256):
-    """Fused persistence-path RMW decision + update over gathered rows."""
+    """Fused persistence-path RMW decision + update over gathered rows.
+
+    This is the single decision+update implementation: core/engine.py routes
+    both execution modes through it.  ``policy`` selects the inclusion rule
+    ('pp', 'pp_vr', 'full', 'fixed', 'unfiltered'); ``variance_aware`` is the
+    legacy spelling of policy='pp_vr' and is honoured when ``policy`` is None.
+    ``v_full`` / ``last_t_full`` carry the full-stream control column through
+    the same fused pass; omit them (None) for decision-only callers and the
+    column defaults to fresh rows.
+
+    Returns (new_last_t, new_v_f, new_agg_flat, z, p, features, lam,
+    new_v_full, new_last_t_full).
+    """
+    if policy is None:
+        policy = "pp_vr" if variance_aware else "pp"
+    if policy not in _tr.POLICIES:   # same check on every backend path
+        raise ValueError(f"unknown policy {policy!r}; expected one of "
+                         f"{_tr.POLICIES}")
     mode = _resolve(use_pallas)
-    kw = dict(h=h, budget=budget, alpha=alpha,
-              variance_aware=variance_aware, mu_tau_index=mu_tau_index,
-              min_p=min_p)
+    kw = dict(h=h, budget=budget, alpha=alpha, policy=policy,
+              fixed_rate=fixed_rate, mu_tau_index=mu_tau_index, min_p=min_p)
+    if v_full is None:
+        v_full = jnp.zeros_like(last_t)
+    if last_t_full is None:
+        last_t_full = jnp.full_like(last_t, -1e38)
     if mode == "ref":
         return ref.thinning_rmw_ref(taus, last_t, v_f, agg_flat, q, t, u,
-                                    valid, **kw)
+                                    valid, v_full, last_t_full, **kw)
     B = last_t.shape[0]
     pads = [_pad_to(x, block_b, 0) for x in
-            (last_t, v_f, agg_flat, q, t, u, valid)]
+            (last_t, v_f, agg_flat, q, t, u, valid, v_full, last_t_full)]
     (last_t_p, _), (v_f_p, _), (agg_p, _), (q_p, _), (t_p, _), (u_p, _), \
-        (valid_p, _) = pads
+        (valid_p, _), (v_full_p, _), (last_tf_p, _) = pads
     # padded rows: mark invalid + fresh sentinel so they are no-ops
     if last_t_p.shape[0] != B:
         mask = jnp.arange(last_t_p.shape[0]) >= B
         last_t_p = jnp.where(mask, -1e38, last_t_p)
+        last_tf_p = jnp.where(mask, -1e38, last_tf_p)
         u_p = jnp.where(mask, 2.0, u_p)          # u > p -> never selected
         valid_p = jnp.where(mask, 0.0, valid_p)
     outs = _tr.thinning_rmw_pallas(taus, last_t_p, v_f_p, agg_p, q_p, t_p,
-                                   u_p, valid_p, block_b=block_b,
+                                   u_p, valid_p, v_full_p, last_tf_p,
+                                   block_b=block_b,
                                    interpret=(mode == "interpret"), **kw)
     return tuple(o[:B] for o in outs)
 

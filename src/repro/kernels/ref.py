@@ -20,13 +20,22 @@ def decay_scan_ref(a: jax.Array, u: jax.Array,
     return hs
 
 
-def thinning_rmw_ref(taus, last_t, v_f, agg_flat, q, t, u, valid, *,
+def thinning_rmw_ref(taus, last_t, v_f, agg_flat, q, t, u, valid,
+                     v_full=None, last_t_full=None, *,
                      h: float, budget: float, alpha: float = 0.0,
-                     variance_aware: bool = False, mu_tau_index: int = 2,
-                     min_p: float = 1e-6):
-    """Oracle for the fused RMW kernel (same sentinel conventions)."""
+                     policy: str = "pp", fixed_rate: float = 0.1,
+                     mu_tau_index: int = 2, min_p: float = 1e-6):
+    """Oracle for the fused RMW kernel (same sentinel conventions).
+
+    ``v_full`` / ``last_t_full`` default to an empty (fresh) control column
+    so decision-only callers need not materialize it.
+    """
     B = last_t.shape[0]
     T = taus.shape[0]
+    if v_full is None:
+        v_full = jnp.zeros_like(last_t)
+    if last_t_full is None:
+        last_t_full = jnp.full_like(last_t, -1e38)
     agg = agg_flat.reshape(B, T, 3)
     fresh = last_t < -1e30
     dt = jnp.where(fresh, 0.0, jnp.maximum(t - last_t, 0.0))
@@ -40,9 +49,19 @@ def thinning_rmw_ref(taus, last_t, v_f, agg_flat, q, t, u, valid, *,
     feats = jnp.concatenate([cnt, sm, mean, jnp.sqrt(var)], axis=1)
 
     beta_h = jnp.where(fresh, 0.0, jnp.exp(-dt / h))
-    lam = (1.0 + beta_h * v_f) / h
+    fresh_full = last_t_full < -1e30
+    dt_full = jnp.where(fresh_full, 0.0, jnp.maximum(t - last_t_full, 0.0))
+    beta_hf = jnp.where(fresh_full, 0.0, jnp.exp(-dt_full / h))
+    if policy == "full":
+        lam = (1.0 + beta_hf * v_full) / h
+    else:
+        lam = (1.0 + beta_h * v_f) / h
     base = jnp.minimum(1.0, budget / jnp.maximum(lam, 1e-30))
-    if variance_aware:
+    if policy == "unfiltered":
+        p = jnp.ones_like(lam)
+    elif policy == "fixed":
+        p = jnp.full_like(lam, fixed_rate)
+    elif policy == "pp_vr":
         cold = cnt[:, mu_tau_index] < 1.0
         mu_w = jnp.where(cold, 0.0, mean[:, mu_tau_index])
         sg = jnp.where(cold, 1e8, jnp.sqrt(var[:, mu_tau_index]) + 1e-8)
@@ -50,18 +69,22 @@ def thinning_rmw_ref(taus, last_t, v_f, agg_flat, q, t, u, valid, *,
         b = jnp.clip(base, 1e-6, 1.0 - 1e-6)
         logit = jnp.log(b) - jnp.log1p(-b) + alpha * zs
         p = jnp.where(base >= 1.0 - 1e-6, 1.0, jax.nn.sigmoid(logit))
-    else:
+    else:  # 'pp' and the decision half of 'full'
         p = base
     p = jnp.clip(p, min_p, 1.0)
 
-    z = (u < p) & (valid > 0.5)
+    valid_b = valid > 0.5
+    z = (u < p) & valid_b
     inv_p = jnp.where(z, 1.0 / p, 0.0)
     w = jnp.stack([jnp.ones_like(q), q, q * q], axis=-1)       # [B, 3]
     agg_new = agg_now + inv_p[:, None, None] * w[:, None, :]
     new_agg = jnp.where(z[:, None, None], agg_new, agg)
     new_v_f = jnp.where(z, inv_p + beta_h * v_f, v_f)
     new_last_t = jnp.where(z, t, last_t)
-    return (new_last_t, new_v_f, new_agg.reshape(B, 3 * T), z, p, feats)
+    new_v_full = jnp.where(valid_b, 1.0 + beta_hf * v_full, v_full)
+    new_last_t_full = jnp.where(valid_b, t, last_t_full)
+    return (new_last_t, new_v_f, new_agg.reshape(B, 3 * T), z, p, feats,
+            lam, new_v_full, new_last_t_full)
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,

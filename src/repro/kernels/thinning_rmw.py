@@ -3,9 +3,16 @@
 One pass over a tile of gathered profile rows performs the paper's whole
 worker step (§5.1 steps 2-5): lazy decay of the aggregates, feature
 materialization, intensity estimate, inclusion probability (Eq. 2 or Eq. 4),
-Bernoulli thresholding of pre-supplied uniforms, and the Horvitz-Thompson
-masked update — without materializing the five intermediate [B, T, 3]
-tensors a naive composition round-trips through HBM (DESIGN.md §4).
+Bernoulli thresholding of pre-supplied uniforms, the Horvitz-Thompson
+masked update, *and* the full-stream control-column update (Eq. 5 numerator
+``v_full`` / ``last_t_full``) — without materializing the five intermediate
+[B, T, 3] tensors a naive composition round-trips through HBM (DESIGN.md §4).
+Carrying the control column means one fused pass covers the entire profile
+row: the engine needs a single gather before and a single scatter after.
+
+All five engine policies are compiled in statically via ``policy``:
+'pp' (Eq. 2), 'pp_vr' (Eq. 4), 'full' (intensity from the full-stream
+column), 'fixed' (constant rate) and 'unfiltered' (p = 1).
 
 Layout: rows (events) on the sublane axis, the 3T aggregate columns +
 control scalars on the lane axis.  All math is elementwise/broadcast over
@@ -23,13 +30,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+POLICIES = ("pp", "pp_vr", "full", "fixed", "unfiltered")
+
 
 def _kernel(taus_ref, last_t_ref, v_f_ref, agg_ref, q_ref, t_ref, u_ref,
-            valid_ref,
-            new_last_t_ref, new_v_f_ref, new_agg_ref, z_ref, p_ref,
-            feat_ref, *,
-            h: float, budget: float, alpha: float, variance_aware: bool,
-            mu_tau_index: int, min_p: float, n_taus: int):
+            valid_ref, v_full_ref, last_t_full_ref,
+            new_last_t_ref, new_v_f_ref, new_agg_ref, new_v_full_ref,
+            new_last_t_full_ref, z_ref, p_ref, lam_ref, feat_ref, *,
+            h: float, budget: float, alpha: float, policy: str,
+            fixed_rate: float, mu_tau_index: int, min_p: float, n_taus: int):
     taus = taus_ref[0]                       # [T]
     last_t = last_t_ref[...]                 # [bb, 1]
     v_f = v_f_ref[...]                       # [bb, 1]
@@ -37,8 +46,9 @@ def _kernel(taus_ref, last_t_ref, v_f_ref, agg_ref, q_ref, t_ref, u_ref,
     t = t_ref[...]                           # [bb, 1]
     u = u_ref[...]                           # [bb, 1]
     valid = valid_ref[...] > 0.5             # [bb, 1]
+    v_full = v_full_ref[...]                 # [bb, 1]
+    last_t_full = last_t_full_ref[...]       # [bb, 1]
     agg = agg_ref[...]                       # [bb, T*3]
-    bb = agg.shape[0]
 
     fresh = last_t < -1e30                   # sentinel for "never persisted"
     dt = jnp.where(fresh, 0.0, jnp.maximum(t - last_t, 0.0))
@@ -56,11 +66,22 @@ def _kernel(taus_ref, last_t_ref, v_f_ref, agg_ref, q_ref, t_ref, u_ref,
     var = jnp.maximum(sq / jnp.maximum(cnt, 1e-12) - mean * mean, 0.0)
     feat_ref[...] = jnp.concatenate([cnt, sm, mean, jnp.sqrt(var)], axis=1)
 
-    # ---- intensity estimate + inclusion probability (Eq. 2 / Eq. 4)
+    # ---- intensity estimate + inclusion probability (Eq. 2 / Eq. 4 / Eq. 5)
     beta_h = jnp.where(fresh, 0.0, jnp.exp(-dt / h))
-    lam = (1.0 + beta_h * v_f) / h                             # [bb, 1]
+    fresh_full = last_t_full < -1e30
+    dt_full = jnp.where(fresh_full, 0.0, jnp.maximum(t - last_t_full, 0.0))
+    beta_hf = jnp.where(fresh_full, 0.0, jnp.exp(-dt_full / h))
+    if policy == "full":
+        lam = (1.0 + beta_hf * v_full) / h                     # [bb, 1]
+    else:
+        lam = (1.0 + beta_h * v_f) / h
+    lam_ref[...] = lam
     base = jnp.minimum(1.0, budget / jnp.maximum(lam, 1e-30))
-    if variance_aware:
+    if policy == "unfiltered":
+        p = jnp.ones_like(lam)
+    elif policy == "fixed":
+        p = jnp.full_like(lam, fixed_rate)
+    elif policy == "pp_vr":
         cold = cnt[:, mu_tau_index:mu_tau_index + 1] < 1.0
         mu_w = jnp.where(cold, 0.0, mean[:, mu_tau_index:mu_tau_index + 1])
         sg = jnp.where(cold, 1e8,
@@ -69,7 +90,7 @@ def _kernel(taus_ref, last_t_ref, v_f_ref, agg_ref, q_ref, t_ref, u_ref,
         b = jnp.clip(base, 1e-6, 1.0 - 1e-6)
         logit = jnp.log(b) - jnp.log1p(-b) + alpha * zs
         p = jnp.where(base >= 1.0 - 1e-6, 1.0, jax.nn.sigmoid(logit))
-    else:
+    else:  # 'pp' and the decision half of 'full'
         p = base
     p = jnp.clip(p, min_p, 1.0)
 
@@ -88,20 +109,29 @@ def _kernel(taus_ref, last_t_ref, v_f_ref, agg_ref, q_ref, t_ref, u_ref,
     new_v_f_ref[...] = jnp.where(z, inv_p + beta_h * v_f, v_f)
     new_last_t_ref[...] = jnp.where(z, t, last_t)
 
+    # ---- full-stream control column (every valid event, unconditional)
+    new_v_full_ref[...] = jnp.where(valid, 1.0 + beta_hf * v_full, v_full)
+    new_last_t_full_ref[...] = jnp.where(valid, t, last_t_full)
 
-def thinning_rmw_pallas(taus, last_t, v_f, agg_flat, q, t, u, valid, *,
+
+def thinning_rmw_pallas(taus, last_t, v_f, agg_flat, q, t, u, valid,
+                        v_full, last_t_full, *,
                         h: float, budget: float, alpha: float = 0.0,
-                        variance_aware: bool = False, mu_tau_index: int = 2,
+                        policy: str = "pp", fixed_rate: float = 0.1,
+                        mu_tau_index: int = 2,
                         min_p: float = 1e-6, block_b: int = 256,
-                        interpret: bool = True):
+                        interpret: bool = False):
     """Fused decision+update over gathered rows.
 
-    Shapes: taus [T]; last_t, v_f, q, t, u, valid: [B]; agg_flat: [B, 3T]
-    (tau-major: [c0,s0,q0, c1,s1,q1, ...]).  Fresh rows are signalled by
-    last_t = -1e38 (finite sentinel; -inf breaks 0*inf masking on the VPU).
+    Shapes: taus [T]; last_t, v_f, q, t, u, valid, v_full, last_t_full: [B];
+    agg_flat: [B, 3T] (tau-major: [c0,s0,q0, c1,s1,q1, ...]).  Fresh rows are
+    signalled by last_t = -1e38 (finite sentinel; -inf breaks 0*inf masking
+    on the VPU); same sentinel for last_t_full.
 
-    Returns (new_last_t, new_v_f, new_agg_flat, z, p, features[B, 4T]).
+    Returns (new_last_t, new_v_f, new_agg_flat, z, p, features[B, 4T],
+    lam[B], new_v_full, new_last_t_full).
     """
+    assert policy in POLICIES, policy
     B = last_t.shape[0]
     n_taus = taus.shape[0]
     block_b = min(block_b, B)
@@ -111,8 +141,8 @@ def thinning_rmw_pallas(taus, last_t, v_f, agg_flat, q, t, u, valid, *,
     as_col = lambda x: x[:, None].astype(jnp.float32)
 
     kernel = functools.partial(
-        _kernel, h=h, budget=budget, alpha=alpha,
-        variance_aware=variance_aware, mu_tau_index=mu_tau_index,
+        _kernel, h=h, budget=budget, alpha=alpha, policy=policy,
+        fixed_rate=fixed_rate, mu_tau_index=mu_tau_index,
         min_p=min_p, n_taus=n_taus)
 
     outs = pl.pallas_call(
@@ -127,14 +157,19 @@ def thinning_rmw_pallas(taus, last_t, v_f, agg_flat, q, t, u, valid, *,
             pl.BlockSpec((block_b, 1), col),                   # t
             pl.BlockSpec((block_b, 1), col),                   # u
             pl.BlockSpec((block_b, 1), col),                   # valid
+            pl.BlockSpec((block_b, 1), col),                   # v_full
+            pl.BlockSpec((block_b, 1), col),                   # last_t_full
         ],
         out_specs=[
-            pl.BlockSpec((block_b, 1), col),
-            pl.BlockSpec((block_b, 1), col),
-            pl.BlockSpec((block_b, 3 * n_taus), col),
-            pl.BlockSpec((block_b, 1), col),
-            pl.BlockSpec((block_b, 1), col),
-            pl.BlockSpec((block_b, 4 * n_taus), col),
+            pl.BlockSpec((block_b, 1), col),                   # new_last_t
+            pl.BlockSpec((block_b, 1), col),                   # new_v_f
+            pl.BlockSpec((block_b, 3 * n_taus), col),          # new_agg
+            pl.BlockSpec((block_b, 1), col),                   # new_v_full
+            pl.BlockSpec((block_b, 1), col),                   # new_last_t_full
+            pl.BlockSpec((block_b, 1), col),                   # z
+            pl.BlockSpec((block_b, 1), col),                   # p
+            pl.BlockSpec((block_b, 1), col),                   # lam
+            pl.BlockSpec((block_b, 4 * n_taus), col),          # features
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
@@ -142,12 +177,17 @@ def thinning_rmw_pallas(taus, last_t, v_f, agg_flat, q, t, u, valid, *,
             jax.ShapeDtypeStruct((B, 3 * n_taus), jnp.float32),
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
             jax.ShapeDtypeStruct((B, 4 * n_taus), jnp.float32),
         ],
         interpret=interpret,
     )(taus[None, :].astype(jnp.float32), as_col(last_t), as_col(v_f),
       agg_flat.astype(jnp.float32), as_col(q), as_col(t), as_col(u),
-      as_col(valid))
-    new_last_t, new_v_f, new_agg, z, p, feats = outs
+      as_col(valid), as_col(v_full), as_col(last_t_full))
+    (new_last_t, new_v_f, new_agg, new_v_full, new_last_t_full, z, p, lam,
+     feats) = outs
     return (new_last_t[:, 0], new_v_f[:, 0], new_agg, z[:, 0] > 0.5,
-            p[:, 0], feats)
+            p[:, 0], feats, lam[:, 0], new_v_full[:, 0],
+            new_last_t_full[:, 0])

@@ -60,9 +60,8 @@ class FeatureWorker:
             if math.isfinite(last_t) else np.zeros_like(agg)
 
         if cfg.policy == "full":
-            beta = math.exp(-(t - last_t_full)) if False else (
-                math.exp(-max(t - last_t_full, 0.0) / cfg.h)
-                if math.isfinite(last_t_full) else 0.0)
+            beta = (math.exp(-max(t - last_t_full, 0.0) / cfg.h)
+                    if math.isfinite(last_t_full) else 0.0)
             lam = (1.0 + beta * v_full) / cfg.h
         else:
             beta = math.exp(-max(dt, 0.0) / cfg.h) \

@@ -1,4 +1,6 @@
 """Engine correctness: JAX vectorized modes vs the per-event Python oracle."""
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -125,6 +127,127 @@ def test_fast_mode_folds_multiple_events_per_key():
     # v_f fold with h: 3 persisted events
     expect_v = (np.exp(-20 / 50) + np.exp(-10 / 50) + 1.0)
     np.testing.assert_allclose(float(state.v_f[0]), expect_v, rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["exact", "fast"])
+def test_step_info_matches_oracle_per_event(mode):
+    """The fused-kernel routing must leave make_step's *outputs* unchanged:
+    per-event p / z / lam / decision-time features pinned to the per-event
+    oracle (exact mode; fast mode is pinned on a conflict-free stream where
+    batch-start decisions coincide with sequential ones)."""
+    rng = np.random.default_rng(42)
+    n_entities, batch, n_batches = 24, 16, 6
+    cfg = EngineConfig(taus=(60.0, 3600.0), h=600.0, budget=0.02, alpha=1.0,
+                       policy="pp_vr", mu_tau_index=1, exact_rounds=batch)
+    root = jax.random.PRNGKey(13)
+    ref = ReferenceEngine(cfg, n_entities, root)
+    step = jax.jit(make_step(cfg, mode))
+    state = init_state(n_entities, len(cfg.taus))
+
+    t0 = 0.0
+    for b in range(n_batches):
+        if mode == "fast":  # conflict-free batches: fast == exact == oracle
+            keys = rng.choice(n_entities, size=batch,
+                              replace=False).astype(np.int32)
+        else:
+            keys = rng.choice(n_entities, size=batch).astype(np.int32)
+        ts = (t0 + np.sort(rng.uniform(1, 400, size=batch))).astype(np.float32)
+        t0 = float(ts.max()) + 1.0
+        qs = rng.lognormal(3, 1, batch).astype(np.float32)
+
+        # oracle decision-time features (pre-update, full [cnt,sum,mean,std])
+        want_feats = []
+        order = np.lexsort((ts, keys)) if mode == "exact" else np.arange(batch)
+        ps, zs, lams = np.zeros(batch), np.zeros(batch, bool), np.zeros(batch)
+        for i in order:
+            e = ref.ents[keys[i]]
+            agg_now = (e.agg * np.exp(-np.clip(ts[i] - e.last_t, 0, None)
+                                      / ref.taus)[:, None]
+                       if math.isfinite(e.last_t) else np.zeros_like(e.agg))
+            cnt = np.maximum(agg_now[:, 0], 1e-12)
+            mean = agg_now[:, 1] / cnt
+            var = np.maximum(agg_now[:, 2] / cnt - mean ** 2, 0.0)
+            want_feats.append((i, np.concatenate(
+                [agg_now[:, 0], agg_now[:, 1], mean, np.sqrt(var)])))
+            ps[i], zs[i], lams[i] = ref.process(int(keys[i]), float(qs[i]),
+                                                float(ts[i]))
+
+        ev = Event(key=jnp.asarray(keys), q=jnp.asarray(qs),
+                   t=jnp.asarray(ts), valid=jnp.ones(batch, bool))
+        state, info = step(state, ev, root)
+        np.testing.assert_array_equal(np.asarray(info.z), zs)
+        np.testing.assert_allclose(np.asarray(info.p), ps, rtol=2e-4,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(info.lam_hat), lams, rtol=2e-4)
+        T = len(cfg.taus)
+        for i, feats in want_feats:
+            got = np.asarray(info.features[i])
+            np.testing.assert_allclose(got[:3 * T], feats[:3 * T],
+                                       rtol=2e-3, atol=1e-3)
+            # std suffers fp32 cancellation in sq/cnt - mean^2: error scales
+            # with the mean magnitude, not the (possibly ~0) std itself.
+            scale = 1.0 + np.abs(feats[2 * T:3 * T])
+            err = np.abs(got[3 * T:] - feats[3 * T:])
+            assert np.all(err <= 5e-3 * scale + 2e-2 * np.abs(feats[3 * T:])), \
+                (got[3 * T:], feats[3 * T:])
+
+
+@pytest.mark.parametrize("mode", ["exact", "fast"])
+def test_run_stream_matches_per_batch_loop(mode):
+    """The donated-buffer block driver must be a pure driver change: same
+    final state and same per-event info as the per-batch dispatch loop,
+    including the padded (non-block-multiple) tail."""
+    from repro.core import run_stream
+    rng = np.random.default_rng(3)
+    n_events, n_entities, batch = 200, 16, 64   # 200 % 64 != 0 -> padded tail
+    keys, qs, ts = _make_stream(rng, n_events, n_entities)
+    cfg = EngineConfig(taus=(60.0, 3600.0), h=600.0, budget=0.05,
+                       policy="pp", exact_rounds=32)
+    root = jax.random.PRNGKey(5)
+
+    step = jax.jit(make_step(cfg, mode))
+    state_l = init_state(n_entities, len(cfg.taus))
+    zs, ps = [], []
+    for i in range(0, n_events, batch):
+        j = min(i + batch, n_events)
+        pad = batch - (j - i)
+        ev = Event(key=jnp.asarray(np.pad(keys[i:j], (0, pad))),
+                   q=jnp.asarray(np.pad(qs[i:j], (0, pad))),
+                   t=jnp.asarray(np.pad(ts[i:j], (0, pad))),
+                   valid=jnp.asarray(np.pad(np.ones(j - i, bool), (0, pad))))
+        state_l, info = step(state_l, ev, root)
+        zs.append(np.asarray(info.z[:j - i]))
+        ps.append(np.asarray(info.p[:j - i]))
+
+    state_s, info_s = run_stream(cfg, init_state(n_entities, len(cfg.taus)),
+                                 keys, qs, ts, batch=batch, mode=mode,
+                                 rng=root)
+    np.testing.assert_array_equal(np.asarray(info_s.z), np.concatenate(zs))
+    np.testing.assert_allclose(np.asarray(info_s.p), np.concatenate(ps),
+                               rtol=1e-6)
+    assert int(info_s.writes) == int(np.concatenate(zs).sum())
+    for a, b, name in zip(state_l, state_s, state_l._fields):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   err_msg=name)
+
+
+def test_exact_padding_does_not_consume_round_slots():
+    """key=0/t=0 padding in a partial block must not occupy entity 0's early
+    rounds: its real events would silently overflow exact_rounds and drop."""
+    from repro.core import run_stream
+    n = 5
+    keys = np.zeros(n, np.int32)                       # all events on key 0
+    ts = np.arange(1, n + 1, dtype=np.float32)
+    qs = np.ones(n, np.float32)
+    cfg = EngineConfig(taus=(60.0,), policy="unfiltered", exact_rounds=8)
+    # batch=16 -> 11 padding lanes with key 0, t 0 that sort ahead of the
+    # real events unless padding is segregated.
+    state, info = run_stream(cfg, init_state(2, 1), keys, qs, ts,
+                             batch=16, mode="exact",
+                             rng=jax.random.PRNGKey(0))
+    assert int(info.writes) == n
+    assert np.asarray(info.z).all()
+    np.testing.assert_allclose(float(state.last_t[0]), float(ts[-1]))
 
 
 def test_decision_reproducibility_across_batching():

@@ -32,10 +32,13 @@ def test_decay_scan_zero_decay_is_cumsum():
 
 
 # ----------------------------------------------------------- thinning_rmw
-@pytest.mark.parametrize("B,T", [(16, 3), (256, 6), (100, 6), (512, 2)])
-@pytest.mark.parametrize("va", [False, True])
-def test_thinning_rmw_matches_ref(B, T, va):
-    rng = np.random.default_rng(hash((B, T, va)) % 2**31)
+_TRMW_NAMES = ["last_t", "v_f", "agg", "z", "p", "feats", "lam",
+               "v_full", "last_t_full"]
+
+
+def _trmw_inputs(rng, B, T):
+    """Random gathered rows with a mix of fresh (sentinel) and warm entities,
+    for both the persistence-path and the full-stream control columns."""
     taus = jnp.asarray(np.geomspace(60, 86400, T), jnp.float32)
     fresh = rng.random(B) < 0.3
     last_t = jnp.asarray(np.where(fresh, -1e38, rng.uniform(0, 1e4, B)),
@@ -47,16 +50,99 @@ def test_thinning_rmw_matches_ref(B, T, va):
     t = jnp.asarray(rng.uniform(1e4, 2e4, B), jnp.float32)
     u = jnp.asarray(rng.random(B), jnp.float32)
     valid = jnp.asarray((rng.random(B) < 0.9).astype(np.float32))
-    kw = dict(h=3600.0, budget=0.001, alpha=1.5, variance_aware=va,
-              mu_tau_index=min(2, T - 1))
-    got = ops.thinning_rmw(taus, last_t, v_f, agg, q, t, u, valid,
-                           use_pallas="interpret", block_b=64, **kw)
-    want = ref.thinning_rmw_ref(taus, last_t, v_f, agg, q, t, u, valid, **kw)
-    for g, w, name in zip(got, want,
-                          ["last_t", "v_f", "agg", "z", "p", "feats"]):
+    # full-stream column is warmer than the persisted one (fresh subset)
+    fresh_full = fresh & (rng.random(B) < 0.5)
+    last_t_full = jnp.asarray(
+        np.where(fresh_full, -1e38, rng.uniform(0, 1.2e4, B)), jnp.float32)
+    v_full = jnp.asarray(np.where(fresh_full, 0, rng.uniform(0, 80, B)),
+                         jnp.float32)
+    return taus, last_t, v_f, agg, q, t, u, valid, v_full, last_t_full
+
+
+# B=100 / B=250: padded, non-block-multiple batches.
+@pytest.mark.parametrize("B,T", [(16, 3), (256, 6), (100, 6), (512, 2),
+                                 (250, 3)])
+@pytest.mark.parametrize("policy", ["pp", "pp_vr", "full", "fixed",
+                                    "unfiltered"])
+def test_thinning_rmw_matches_ref(B, T, policy):
+    rng = np.random.default_rng(hash((B, T, policy)) % 2**31)
+    args = _trmw_inputs(rng, B, T)
+    kw = dict(h=3600.0, budget=0.001, alpha=1.5, policy=policy,
+              fixed_rate=0.3, mu_tau_index=min(2, T - 1))
+    got = ops.thinning_rmw(*args, use_pallas="interpret", block_b=64, **kw)
+    want = ref.thinning_rmw_ref(*args, **kw)
+    assert len(got) == len(want) == len(_TRMW_NAMES)
+    for g, w, name in zip(got, want, _TRMW_NAMES):
         np.testing.assert_allclose(np.asarray(g, np.float32),
                                    np.asarray(w, np.float32),
                                    rtol=2e-5, atol=1e-5, err_msg=name)
+
+
+def test_thinning_rmw_control_column_semantics():
+    """v_full/last_t_full update on every *valid* event, persisted or not;
+    fresh sentinel rows start their control column from zero mass."""
+    T = 2
+    taus = jnp.asarray([60.0, 3600.0], jnp.float32)
+    h = 100.0
+    last_t = jnp.asarray([-1e38, -1e38, 50.0], jnp.float32)
+    v_f = jnp.zeros(3, jnp.float32)
+    agg = jnp.zeros((3, 3 * T), jnp.float32)
+    q = jnp.ones(3, jnp.float32)
+    t = jnp.asarray([100.0, 100.0, 100.0], jnp.float32)
+    u = jnp.asarray([2.0, 2.0, 2.0], jnp.float32)   # u > 1: never persisted
+    valid = jnp.asarray([1.0, 0.0, 1.0], jnp.float32)
+    v_full = jnp.asarray([0.0, 3.0, 5.0], jnp.float32)
+    last_t_full = jnp.asarray([-1e38, 40.0, 0.0], jnp.float32)
+    (new_last_t, _, _, z, _, _, _, new_v_full, new_ltf) = ops.thinning_rmw(
+        taus, last_t, v_f, agg, q, t, u, valid, v_full, last_t_full,
+        h=h, budget=1.0, use_pallas="interpret", block_b=4)
+    assert not bool(z.any())
+    # persisted column untouched (no z), fresh sentinel preserved
+    np.testing.assert_array_equal(np.asarray(new_last_t), np.asarray(last_t))
+    # row 0: fresh control column -> v_full = 1 exactly (no decayed carry)
+    np.testing.assert_allclose(float(new_v_full[0]), 1.0, rtol=1e-6)
+    assert float(new_ltf[0]) == 100.0
+    # row 1: invalid -> control column unchanged
+    np.testing.assert_allclose(float(new_v_full[1]), 3.0, rtol=1e-6)
+    assert float(new_ltf[1]) == 40.0
+    # row 2: valid warm row -> 1 + e^{-dt/h} * v_full
+    np.testing.assert_allclose(float(new_v_full[2]),
+                               1.0 + np.exp(-1.0) * 5.0, rtol=1e-5)
+    assert float(new_ltf[2]) == 100.0
+
+
+def test_thinning_rmw_padded_batch_is_noop_on_pad():
+    """Non-block-multiple batches: padded rows must not leak into outputs."""
+    rng = np.random.default_rng(7)
+    B, T = 70, 3
+    args = _trmw_inputs(rng, B, T)
+    kw = dict(h=3600.0, budget=0.01, policy="pp")
+    got = ops.thinning_rmw(*args, use_pallas="interpret", block_b=64, **kw)
+    want = ref.thinning_rmw_ref(*args, **kw)
+    for g, w, name in zip(got, want, _TRMW_NAMES):
+        assert g.shape == w.shape, name
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=2e-5, atol=1e-5, err_msg=name)
+
+
+def test_thinning_rmw_decision_only_defaults():
+    """Omitting the control column defaults it to fresh rows (decision-only
+    callers) without changing the persisted-path outputs."""
+    rng = np.random.default_rng(9)
+    B, T = 64, 3
+    taus, last_t, v_f, agg, q, t, u, valid, _, _ = _trmw_inputs(rng, B, T)
+    full = ops.thinning_rmw(taus, last_t, v_f, agg, q, t, u, valid,
+                            jnp.zeros(B), jnp.full((B,), -1e38),
+                            h=600.0, budget=0.01, use_pallas="interpret",
+                            block_b=64)
+    dec = ops.thinning_rmw(taus, last_t, v_f, agg, q, t, u, valid,
+                           h=600.0, budget=0.01, use_pallas="interpret",
+                           block_b=64)
+    for f, d, name in zip(full, dec, _TRMW_NAMES):
+        np.testing.assert_allclose(np.asarray(f, np.float32),
+                                   np.asarray(d, np.float32),
+                                   rtol=1e-6, err_msg=name)
 
 
 def test_thinning_rmw_agrees_with_core_engine_math():

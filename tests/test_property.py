@@ -1,12 +1,14 @@
 """Property-based tests (hypothesis) for the system's core invariants."""
 import math
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import estimators, intensity, thinning
