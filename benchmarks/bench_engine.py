@@ -2,15 +2,39 @@
 
 Drives the vectorized JAX engine (repro.core.engine) over synthetic streams
 with uniform and Zipf-skewed key distributions, through the donated-buffer
-``run_stream`` driver.  Results land both on stdout (``emit`` rows) and in
-``BENCH_engine.json`` at the repo root so successive PRs record a throughput
-trajectory.
+``run_stream`` driver.  Two suites:
+
+* ``engine``  — local engine.  Exact mode runs under its default
+  segment-compacted round schedule; a ``masked`` baseline row (the
+  O(exact_rounds x B) reference schedule) is recorded alongside so the JSON
+  shows the compaction win directly.
+* ``sharded`` — ``ShardedFeatureEngine.run_stream`` on an 8-way fake-device
+  mesh (subprocess, so the forced device count never leaks into the caller's
+  jax).  On this CPU-only container the 8 "devices" share the same cores, so
+  the number records dispatch overhead, not scale-out speedup.
+
+Results land both on stdout (``emit`` rows) and in ``BENCH_engine.json`` at
+the repo root so successive PRs record a throughput trajectory.
+
+    PYTHONPATH=src python benchmarks/bench_engine.py --suite engine
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import subprocess
+import sys
+import textwrap
 import time
+
+if __package__ in (None, ""):
+    # executed as `python benchmarks/bench_engine.py`: put the repo root and
+    # src/ on the path so benchmarks.common / repro import without env setup
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_root, os.path.join(_root, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 import jax
 import numpy as np
@@ -36,7 +60,8 @@ def _make_stream(rng, n_events: int, n_keys: int, skew: float):
 
 
 def _drive(cfg: EngineConfig, mode: str, keys, qs, ts, batch: int,
-           n_keys: int, repeats: int = 3) -> float:
+           n_keys: int, repeats: int = 3, exact_impl: str = "compact"
+           ) -> float:
     """Best-of-repeats events/s over the full stream (compile excluded)."""
     from repro.core import init_state
     from repro.core.stream import run_stream
@@ -47,7 +72,8 @@ def _drive(cfg: EngineConfig, mode: str, keys, qs, ts, batch: int,
         state = init_state(n_keys, len(cfg.taus))
         state, _ = run_stream(
             cfg, state, keys[:n], qs[:n], ts[:n], batch=batch,
-            mode=mode, rng=jax.random.PRNGKey(0), collect_info=False)
+            mode=mode, rng=jax.random.PRNGKey(0), collect_info=False,
+            exact_impl=exact_impl)
         jax.block_until_ready(state.agg)
         return state
 
@@ -60,9 +86,7 @@ def _drive(cfg: EngineConfig, mode: str, keys, qs, ts, batch: int,
     return n / best
 
 
-def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
-        exact_rounds: int = 16, seed: int = 0):
-    rng = np.random.default_rng(seed)
+def _run_engine_suite(rng, n_events, n_keys, batch, exact_rounds):
     rows = []
     for skew_name, skew in (("uniform", 0.0), ("zipf", 1.2)):
         keys, qs, ts = _make_stream(rng, n_events, n_keys, skew)
@@ -70,20 +94,120 @@ def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
             cfg = EngineConfig(taus=(60.0, 3600.0, 86400.0), h=600.0,
                                budget=0.05, alpha=1.0, policy=policy,
                                exact_rounds=exact_rounds)
-            for mode in ("exact", "fast"):
-                eps = _drive(cfg, mode, keys, qs, ts, batch, n_keys)
+            variants = [("exact", "compact"), ("fast", None)]
+            if policy == "pp":   # masked baseline once per skew: the row
+                variants.insert(1, ("exact", "masked"))  # pair shows the win
+            for mode, impl in variants:
+                eps = _drive(cfg, mode, keys, qs, ts, batch, n_keys,
+                             exact_impl=impl or "compact")
                 row = {"mode": mode, "policy": policy, "skew": skew_name,
                        "batch": batch, "n_events": n_events,
                        "events_per_s": round(eps, 1)}
+                if impl is not None:
+                    row["impl"] = impl
                 rows.append(row)
                 emit("engine", row)
+    return rows
+
+
+_SHARDED_CODE = """
+    import jax, numpy as np, json, time
+    from repro.core import EngineConfig
+    from repro.features.engine import ShardedFeatureEngine
+    from benchmarks.bench_engine import _make_stream
+
+    n_events, n_keys, batch, exact_rounds, seed = {args}
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(seed)
+    rows = []
+    for skew_name, skew in (("uniform", 0.0), ("zipf", 1.2)):
+        keys, qs, ts = _make_stream(rng, n_events, n_keys, skew)
+        cfg = EngineConfig(taus=(60.0, 3600.0, 86400.0), h=600.0,
+                           budget=0.05, policy="pp",
+                           exact_rounds=exact_rounds)
+        for mode in ("exact", "fast"):
+            eng = ShardedFeatureEngine(cfg, n_keys, mesh=mesh, mode=mode)
+
+            def once():
+                st, _ = eng.run_stream(eng.init_state(), keys, qs, ts,
+                                       batch_per_shard=batch // 8,
+                                       rng=jax.random.PRNGKey(0),
+                                       collect_info=False)
+                jax.block_until_ready(st.agg)
+
+            once()
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                once()
+                best = min(best, time.perf_counter() - t0)
+            rows.append({{"mode": mode, "policy": "pp", "skew": skew_name,
+                          "batch": batch, "n_events": n_events,
+                          "mesh": "8xcpu",
+                          "events_per_s": round(n_events / best, 1)}})
+    print("ROWS", json.dumps(rows))
+"""
+
+
+def _run_sharded_suite(n_events, n_keys, batch, exact_rounds, seed):
+    """Sharded run_stream throughput on 8 fake devices (subprocess)."""
+    env = {"PYTHONPATH": "src:" + os.path.dirname(os.path.dirname(
+               os.path.abspath(__file__))),
+           "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "JAX_PLATFORMS": "cpu"}
+    code = textwrap.dedent(_SHARDED_CODE.format(
+        args=(n_events, n_keys, batch, exact_rounds, seed)))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    if r.returncode != 0:
+        print("sharded suite failed:", r.stderr[-2000:])
+        return []
+    rows = json.loads(r.stdout.split("ROWS", 1)[1])
+    for row in rows:
+        emit("engine_sharded", row)
+    return rows
+
+
+def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
+        exact_rounds: int = 16, seed: int = 0, suites=("engine",)):
+    rng = np.random.default_rng(seed)
+    rows = []
+    if "engine" in suites:
+        rows += _run_engine_suite(rng, n_events, n_keys, batch, exact_rounds)
+    if "sharded" in suites:
+        rows += _run_sharded_suite(n_events, n_keys, batch, exact_rounds,
+                                   seed)
     try:
+        # merge with the suite(s) NOT run this invocation so a partial run
+        # never clobbers the other suite's trajectory (sharded rows carry a
+        # 'mesh' field, local engine rows don't)
+        kept = []
+        if os.path.exists(_OUT_PATH):
+            try:
+                with open(_OUT_PATH) as f:
+                    old = json.load(f).get("rows", [])
+                kept = [r for r in old
+                        if ("mesh" in r and "sharded" not in suites)
+                        or ("mesh" not in r and "engine" not in suites)]
+            except (ValueError, OSError):
+                kept = []
         with open(_OUT_PATH, "w") as f:
-            json.dump({"bench": "engine", "rows": rows}, f, indent=1)
+            json.dump({"bench": "engine", "rows": kept + rows}, f, indent=1)
     except OSError:
         pass
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=("engine", "sharded", "all"),
+                    help="engine: local throughput (+ masked-vs-compact "
+                         "exact rows); sharded: 8-fake-device run_stream")
+    ap.add_argument("--n-events", type=int, default=65_536)
+    args = ap.parse_args()
+    suites = ("engine", "sharded") if args.suite == "all" else (args.suite,)
+    run(n_events=args.n_events, suites=suites)

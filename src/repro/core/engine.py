@@ -8,6 +8,18 @@ becomes a micro-batched tensor program.  Two execution modes are provided:
   by (key, t) and processed in *rounds*: round r handles every key's r-th
   event, so all rounds are conflict-free scatters and the loop length is the
   max events-per-key in the batch (static bound), not the batch size.
+  The default round schedule is *segment-compacted*: instead of running every
+  round over all B lanes under a mask (O(exact_rounds x B) gathers and kernel
+  work), the sorted events are re-packed into chunks of ``exact_chunk`` lanes
+  such that each chunk holds events of exactly one round (rounds are padded to
+  chunk multiples), and a scan walks only the ceil(B/C) + exact_rounds chunks
+  that can be non-empty — O(B + exact_rounds * C) total work.  Chunks inherit
+  the rounds' conflict-freedom (one event per key per round) and their
+  round-major order, so the schedule is a pure re-packing of the same per-lane
+  kernel invocations: decisions and state are bit-identical to the masked
+  schedule (``exact_impl='masked'`` keeps the reference implementation;
+  derived features may differ by 1 ulp where XLA reassociates the std tail
+  across the two compiled programs).
 
 * ``fast``   — decisions for the whole micro-batch are taken against the
   batch-start state (decision staleness <= one batch), after which persisted
@@ -33,7 +45,10 @@ dispatch (zero state copies between blocks).
 
 Both modes use counter-based RNG keyed on (entity, time-bits) so a given event
 receives the same thinning decision regardless of batching, ordering or shard
-placement.
+placement.  The step callables accept an optional ``rng_entity`` column for
+callers whose ``Event.key`` is a *local* row index rather than the global
+entity id (the sharded engine passes ``local_row * n_shards + shard``), which
+is what makes shard placement genuinely decision-invariant.
 """
 from __future__ import annotations
 
@@ -106,18 +121,84 @@ def _sort_by_key_time(ev: Event):
     return ev_s, order, round_id, seg_start
 
 
-def _step_exact(cfg: EngineConfig, state: ProfileState, ev: Event, rng):
+def _compact_schedule(round_id, valid_s, rounds: int, chunk: int):
+    """Re-pack sorted lanes into single-round chunks of ``chunk`` lanes.
+
+    Returns an int32 [n_chunks, chunk] table of sorted-lane indices (B marks
+    an empty slot).  Each round's lanes are laid out contiguously, padded up
+    to a chunk multiple, so no chunk ever spans two rounds — within a chunk
+    every key occurs at most once (rounds are conflict-free) and chunks in
+    scan order preserve round order.  sum_r ceil(n_r/C) <= floor(B/C) +
+    rounds bounds the static chunk count.
+    """
+    B = round_id.shape[0]
+    n_chunks = -(-B // chunk) + rounds
+    rid = jnp.where(valid_s & (round_id < rounds), round_id, rounds)
+    comp = jnp.argsort(rid)                      # stable: keeps lane order
+    rid_c = rid[comp]
+    counts = jnp.bincount(rid_c, length=rounds + 1)[:rounds]
+    start = jnp.cumsum(counts) - counts          # exclusive, per round
+    padded = -(-counts // chunk) * chunk
+    poff = jnp.cumsum(padded) - padded
+    rid_cl = jnp.minimum(rid_c, rounds - 1)
+    slot = jnp.where(rid_c < rounds,
+                     poff[rid_cl] + (jnp.arange(B) - start[rid_cl]),
+                     n_chunks * chunk)
+    lane_of_slot = jnp.full((n_chunks * chunk,), B, jnp.int32).at[slot].set(
+        comp.astype(jnp.int32), mode="drop")
+    return lane_of_slot.reshape(n_chunks, chunk)
+
+
+def _step_exact(cfg: EngineConfig, impl: str, chunk: int, state: ProfileState,
+                ev: Event, rng, rng_entity=None):
     taus = jnp.asarray(cfg.taus, jnp.float32)
+    ent = ev.key if rng_entity is None else rng_entity
     ev_s, order, round_id, _ = _sort_by_key_time(ev)
     B = ev.key.shape[0]
     num_e = state.num_entities
     n_taus = taus.shape[0]
 
     # Round-invariant bookkeeping, hoisted out of the scan: the counter-based
-    # uniforms depend only on (key, t) and the inverse sort permutation only
-    # on the batch — neither needs recomputation per round.
-    u_s = thinning.uniform_for_events(rng, ev_s.key, _seq_bits(ev_s.t))
+    # uniforms depend only on (entity, t) and the inverse sort permutation
+    # only on the batch — neither needs recomputation per round.
+    u_s = thinning.uniform_for_events(rng, ent[order], _seq_bits(ev_s.t))
     inv = jnp.argsort(order)
+
+    init = (state, jnp.zeros((B,), jnp.float32), jnp.zeros((B,), bool),
+            jnp.zeros((B,), jnp.float32), jnp.zeros((B, 4 * n_taus),
+                                                    jnp.float32))
+
+    def chunk_body(carry, lanes):
+        # Compacted schedule: each chunk gathers only its (single-round)
+        # active lanes, so the kernel pass is C-wide, not B-wide.
+        state, p_o, z_o, lam_o, feats_o = carry
+        active = lanes < B
+        lane = jnp.where(active, lanes, 0)
+        key = jnp.where(active, ev_s.key[lane], 0)
+        t_lane = ev_s.t[lane]
+        (_, new_v_f, new_agg, z, p, feats, lam, new_v_full, _) = _fused_rmw(
+            cfg, taus, state, key, ev_s.q[lane], t_lane, u_s[lane], active)
+
+        data_key = jnp.where(z, key, num_e)
+        ctrl_key = jnp.where(active, key, num_e)
+        state = state._replace(
+            agg=state.agg.at[data_key].set(
+                new_agg.reshape(lanes.shape[0], n_taus, 3), mode="drop"),
+            v_f=state.v_f.at[data_key].set(new_v_f, mode="drop"),
+            last_t=state.last_t.at[data_key].set(t_lane, mode="drop"),
+            v_full=state.v_full.at[ctrl_key].set(new_v_full, mode="drop"),
+            last_t_full=state.last_t_full.at[ctrl_key].set(t_lane,
+                                                           mode="drop"),
+        )
+
+        # Scatter per-event outputs back to their sorted lane (each event is
+        # active in exactly one chunk, so single-write scatters are exact).
+        out_lane = jnp.where(active, lane, B)
+        p_o = p_o.at[out_lane].set(p, mode="drop")
+        z_o = z_o.at[out_lane].set(z, mode="drop")
+        lam_o = lam_o.at[out_lane].set(lam, mode="drop")
+        feats_o = feats_o.at[out_lane].set(feats, mode="drop")
+        return (state, p_o, z_o, lam_o, feats_o), None
 
     def round_body(carry, r):
         state, p_o, z_o, lam_o, feats_o = carry
@@ -151,11 +232,14 @@ def _step_exact(cfg: EngineConfig, state: ProfileState, ev: Event, rng):
         feats_o = jnp.where(active[:, None], feats, feats_o)
         return (state, p_o, z_o, lam_o, feats_o), None
 
-    init = (state, jnp.zeros((B,), jnp.float32), jnp.zeros((B,), bool),
-            jnp.zeros((B,), jnp.float32), jnp.zeros((B, 4 * n_taus),
-                                                    jnp.float32))
-    (state, p_s, z_s, lam_s, feats_s), _ = jax.lax.scan(
-        round_body, init, jnp.arange(cfg.exact_rounds))
+    if impl == "compact":
+        schedule = _compact_schedule(round_id, ev_s.valid, cfg.exact_rounds,
+                                     max(8, min(chunk, B)))
+        (state, p_s, z_s, lam_s, feats_s), _ = jax.lax.scan(
+            chunk_body, init, schedule)
+    else:  # 'masked' — the O(exact_rounds x B) reference schedule
+        (state, p_s, z_s, lam_s, feats_s), _ = jax.lax.scan(
+            round_body, init, jnp.arange(cfg.exact_rounds))
 
     info = StepInfo(z=z_s[inv] & ev.valid, p=p_s[inv], lam_hat=lam_s[inv],
                     features=feats_s[inv],
@@ -163,16 +247,19 @@ def _step_exact(cfg: EngineConfig, state: ProfileState, ev: Event, rng):
     return state, info
 
 
-def _step_fast(cfg: EngineConfig, state: ProfileState, ev: Event, rng):
+def _step_fast(cfg: EngineConfig, state: ProfileState, ev: Event, rng,
+               rng_entity=None):
     taus = jnp.asarray(cfg.taus, jnp.float32)
     num_e = state.num_entities
+    ent = ev.key if rng_entity is None else rng_entity
     safe_key = jnp.where(ev.valid, ev.key, 0)
 
     # Decision stage: one fused pass against the batch-start state.  Only the
     # decision outputs (p, z, lam, features) are consumed here — the state
     # fold below is the closed-form segment reduction, which subsumes the
     # kernel's single-event RMW when keys repeat within the batch.
-    u = thinning.uniform_for_events(rng, safe_key, _seq_bits(ev.t))
+    u = thinning.uniform_for_events(rng, jnp.where(ev.valid, ent, 0),
+                                    _seq_bits(ev.t))
     (_, _, _, z, p, feats, lam, _, _) = _fused_rmw(
         cfg, taus, state, safe_key, ev.q, ev.t, u, ev.valid)
 
@@ -227,10 +314,23 @@ def _step_fast(cfg: EngineConfig, state: ProfileState, ev: Event, rng):
     return state, info
 
 
-def make_step(cfg: EngineConfig, mode: str = "exact") -> Callable:
-    """Build a jit-able engine step: (state, Event, rng) -> (state, StepInfo)."""
+def make_step(cfg: EngineConfig, mode: str = "exact", *,
+              exact_impl: str = "compact", exact_chunk: int = 256) -> Callable:
+    """Build a jit-able engine step: (state, Event, rng) -> (state, StepInfo).
+
+    The step also accepts an optional ``rng_entity`` int32 [B] keyword: the
+    entity ids fed to the counter-based thinning RNG when ``Event.key`` is a
+    local row index rather than the global entity id (sharded callers).
+
+    ``exact_impl`` selects the exact-mode round schedule: 'compact' (default,
+    segment-compacted O(B + rounds * exact_chunk) work) or 'masked' (the
+    O(rounds * B) reference).  Both produce bit-identical outputs; 'masked'
+    exists as the equivalence oracle and for benchmarking the compaction win.
+    """
     if mode == "exact":
-        return functools.partial(_step_exact, cfg)
+        if exact_impl not in ("compact", "masked"):
+            raise ValueError(f"unknown exact_impl {exact_impl!r}")
+        return functools.partial(_step_exact, cfg, exact_impl, exact_chunk)
     if mode == "fast":
         return functools.partial(_step_fast, cfg)
     raise ValueError(f"unknown mode {mode!r}")

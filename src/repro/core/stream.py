@@ -12,6 +12,26 @@ This is the paper's decoupling argument applied to the driver itself: the
 per-event worker loop (streaming/worker.py) pays retrieve/serde/dispatch
 per event; the vectorized engine pays it per micro-batch; ``run_stream``
 pays it once per block of micro-batches.
+
+Donation / aliasing contract
+----------------------------
+``donate_argnums=(0,)`` hands the caller's state buffers to XLA for in-place
+reuse, which imposes two invariants on every caller:
+
+* **No aliased leaves.**  Every ``ProfileState`` leaf must own distinct
+  storage.  Two fields sharing one buffer (e.g. a state built by reusing the
+  same ``jnp.zeros`` array for ``v_f`` and ``v_full``) make XLA raise
+  "Attempt to donate the same buffer twice" at dispatch time —
+  ``core.types.init_state`` therefore allocates each leaf separately, and any
+  hand-built state must do the same before entering a donating driver.
+* **The input state is dead after the call.**  Donation invalidates the
+  caller's arrays even on backends that fall back to copying; reusing them
+  raises a deleted-buffer error.  Callers that need the pre-stream state must
+  copy it first (or pass ``donate=False``).
+
+The same contract applies to ``features.engine.ShardedFeatureEngine.run_stream``,
+which drives its mesh-sharded state through the same ``block_runner_for``
+machinery below — donation then applies per device shard.
 """
 from __future__ import annotations
 
@@ -25,15 +45,20 @@ import numpy as np
 from repro.core.engine import make_step
 from repro.core.types import EngineConfig, Event, ProfileState, StepInfo
 
-__all__ = ["run_stream"]
+__all__ = ["run_stream", "block_runner_for"]
 
 
-@functools.lru_cache(maxsize=None)
-def _block_runner(cfg: EngineConfig, mode: str, collect_info: bool,
-                  donate: bool):
-    """Compile one scan-over-blocks program per (cfg, mode, flags)."""
-    step = make_step(cfg, mode)
+def block_runner_for(step, collect_info: bool = True, donate: bool = True):
+    """Build a scan-over-blocks driver for an arbitrary engine step.
 
+    ``step``: jit-able (state, Event, rng) -> (state, StepInfo); events are
+    [n_blocks, B] pytrees scanned along axis 0 with the state as the
+    (donated) carry.  Each call returns a *fresh* jit wrapper — callers must
+    hold on to it across dispatches or they retrace every time
+    (``_block_runner`` below memoizes per (cfg, mode, flags);
+    ``ShardedFeatureEngine.run_stream`` memoizes per engine instance, so the
+    runner's lifetime matches its engine rather than pinning it globally).
+    """
     def run(state: ProfileState, events: Event, rng):
         def body(st, ev):
             st, info = step(st, ev, rng)
@@ -43,10 +68,18 @@ def _block_runner(cfg: EngineConfig, mode: str, collect_info: bool,
     return jax.jit(run, donate_argnums=(0,) if donate else ())
 
 
+@functools.lru_cache(maxsize=None)
+def _block_runner(cfg: EngineConfig, mode: str, collect_info: bool,
+                  donate: bool, exact_impl: str):
+    """One scan-over-blocks program per (cfg, mode, flags)."""
+    return block_runner_for(make_step(cfg, mode, exact_impl=exact_impl),
+                            collect_info, donate)
+
+
 def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
                *, batch: int = 4096, mode: str = "fast",
                rng: Optional[jax.Array] = None, collect_info: bool = True,
-               donate: bool = True
+               donate: bool = True, exact_impl: str = "compact"
                ) -> Tuple[ProfileState, Union[StepInfo, jax.Array]]:
     """Drive the engine over a flat stream in ``[n_batches, batch]`` blocks.
 
@@ -58,7 +91,9 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
 
     ``donate=True`` donates the input state's buffers to the call; do not
     reuse ``state`` afterwards.  (On backends without donation support JAX
-    silently falls back to copying.)
+    silently falls back to copying.)  ``exact_impl`` selects the exact-mode
+    round schedule (see ``core.engine.make_step``); benchmarks use 'masked'
+    to measure the segment-compaction win.
     """
     if rng is None:
         rng = jax.random.PRNGKey(0)
@@ -73,7 +108,7 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
         t=blocks(np.asarray(ts, np.float32), 0.0),
         valid=blocks(np.ones(n, bool), False))
 
-    state, info = _block_runner(cfg, mode, collect_info, donate)(
+    state, info = _block_runner(cfg, mode, collect_info, donate, exact_impl)(
         state, events, rng)
     if not collect_info:
         return state, info

@@ -41,7 +41,11 @@ def mesh_context(mesh: Mesh, rules: dict):
     prev = (_get().mesh, _get().rules)
     set_mesh(mesh, rules)
     try:
-        with jax.sharding.set_mesh(mesh):
+        # jax >= 0.5 spells the global-mesh scope jax.sharding.use_mesh /
+        # set_mesh; on 0.4.x the Mesh object is itself the context manager.
+        scope = getattr(jax.sharding, "use_mesh", None) \
+            or getattr(jax.sharding, "set_mesh", None)
+        with (scope(mesh) if scope is not None else mesh):
             yield
     finally:
         set_mesh(*prev)

@@ -82,6 +82,17 @@ def make_rules(*, fsdp: bool = True, seq_parallel: bool = False,
     return rules
 
 
+def axis_sizes(mesh, axes) -> Tuple[int, ...]:
+    """Sizes of the named mesh axes, in the given order.
+
+    The entity-partitioned engine uses this both to count shards and to
+    compute a shard's flat index inside ``shard_map`` (nested
+    ``idx * size + axis_index`` over the same order).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return tuple(int(sizes[a]) for a in axes)
+
+
 def data_axis_size(mesh) -> int:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return sizes.get("data", 1) * sizes.get("pod", 1)

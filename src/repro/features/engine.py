@@ -1,28 +1,48 @@
 """Entity-partitioned (sharded) feature engine.
 
 The paper's partitioned workers (§5.3) map to SPMD shards: shard ``s`` of
-the ``data`` mesh axis owns entities with ``key % n_shards == s`` and runs
+the ``data`` mesh axes owns entities with ``key % n_shards == s`` and runs
 the vectorized core engine over its own event partition inside a
-``shard_map`` — deterministic key routing, per-key ordering within a shard,
-no cross-shard collectives on the decision or update path (the paper's
-no-coordination design goal, realized in mesh form).
+``jax.experimental.shard_map`` — deterministic key routing, per-key ordering
+within a shard, no cross-shard collectives on the decision or update path
+(the paper's no-coordination design goal, realized in mesh form).  Every
+shard routes its decision + read-modify-write through the same fused
+``kernels.ops.thinning_rmw`` pass as the local engine (this module holds no
+decision math of its own — it only routes events and composes the core
+step).
+
+Determinism: the shard body rebuilds each event's *global* entity id
+(``local_row * n_shards + shard``) and feeds it to the core step's
+``rng_entity`` hook, so the counter-based thinning RNG sees exactly the
+counters an unsharded engine would — decisions are bit-identical to
+``core.engine`` on the same stream, for any mesh shape (and across elastic
+resharding, since the counter depends only on the global id).
+
+Streaming: ``run_stream`` is the donated-buffer block driver for the
+sharded path — the host routes the flat stream into ``[n_blocks,
+n_shards * B]`` event blocks (each block row lands shard-aligned on the
+mesh) and one jitted dispatch scans all blocks with the mesh-sharded state
+as donated carry.  The ``core.stream`` donation contract applies: state
+leaves must each own their storage, and the input state is dead after the
+call.
 
 Without a mesh the engine degrades to a single local shard (CPU tests).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import EngineConfig, Event, ProfileState, StepInfo
 from repro.core import engine as core_engine
+from repro.core import stream as core_stream
 from repro.core.types import init_state
+from repro.distributed.sharding import axis_sizes
 
 
 class ShardedFeatureEngine:
@@ -35,15 +55,15 @@ class ShardedFeatureEngine:
         self.mesh = mesh
         self.data_axes = data_axes
         self.mode = mode
-        if mesh is not None:
-            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-            self.n_shards = int(np.prod([sizes[a] for a in data_axes]))
-        else:
-            self.n_shards = 1
+        self.axis_sizes = axis_sizes(mesh, data_axes) if mesh is not None \
+            else (1,)
+        self.n_shards = int(np.prod(self.axis_sizes))
         # round entities up so every shard owns the same row count
         self.entities_per_shard = -(-num_entities // self.n_shards)
         self.num_entities = self.entities_per_shard * self.n_shards
         self._local_step = core_engine.make_step(cfg, mode)
+        self._step = None   # built lazily; cached so jit/block-runner reuse
+        self._runners = {}  # (collect_info, donate) -> compiled block driver
 
     # ------------------------------------------------------------ state
     def init_state(self) -> ProfileState:
@@ -78,40 +98,90 @@ class ShardedFeatureEngine:
             out_t[sl] = t[sel]
             out_valid[sl] = True
             # unrouted overflow events are dropped from this micro-batch;
-            # production would re-queue them (drivers do)
+            # production would re-queue them (run_stream does not drop)
         return Event(key=jnp.asarray(out_key), q=jnp.asarray(out_q),
                      t=jnp.asarray(out_t), valid=jnp.asarray(out_valid))
 
+    def partition_stream(self, key, q, t, batch_per_shard: int
+                         ) -> Tuple[Event, np.ndarray]:
+        """Route a flat host stream into ``[n_blocks, n_shards * B]`` blocks.
+
+        Unlike ``partition_events`` (fixed micro-batch, drops per-batch
+        overflow) every event is retained: shard ``s`` owns block columns
+        ``[s*B, (s+1)*B)`` and its events are packed in stream order across
+        however many blocks its load requires, so per-key ordering is
+        preserved (all events of a key live in one shard).  Skew shows up as
+        padding: n_blocks follows the most loaded shard.
+
+        Returns (events, slot) where ``slot`` is the flat block-major slot
+        of every input event, for mapping per-event outputs back to stream
+        order.
+        """
+        key = np.asarray(key, np.int32)
+        q = np.asarray(q, np.float32)
+        t = np.asarray(t, np.float32)
+        n, B = self.n_shards, int(batch_per_shard)
+        shard = key % n
+        counts = np.bincount(shard, minlength=n)
+        n_blocks = max(1, -(-int(counts.max()) // B)) if key.size else 1
+        W = n * B
+        out_key = np.zeros(n_blocks * W, np.int32)
+        out_q = np.zeros(n_blocks * W, np.float32)
+        out_t = np.zeros(n_blocks * W, np.float32)
+        out_valid = np.zeros(n_blocks * W, bool)
+        # rank of each event within its shard, in stream order
+        order = np.argsort(shard, kind="stable")
+        starts = np.cumsum(counts) - counts
+        rank = np.empty(key.size, np.int64)
+        rank[order] = np.arange(key.size) - starts[shard[order]]
+        slot = (rank // B) * W + shard * B + rank % B
+        out_key[slot] = key // n
+        out_q[slot] = q
+        out_t[slot] = t
+        out_valid[slot] = True
+        blocks = lambda x: jnp.asarray(x.reshape(n_blocks, W))
+        ev = Event(key=blocks(out_key), q=blocks(out_q), t=blocks(out_t),
+                   valid=blocks(out_valid))
+        if self.mesh is not None:
+            sh = NamedSharding(self.mesh, P(None, self.data_axes))
+            ev = Event(*(jax.device_put(x, sh) for x in ev))
+        return ev, slot
+
     # ------------------------------------------------------------- step
     def make_step(self):
-        """jit-able (state, Event, rng) -> (state, StepInfo).
+        """jit-able (state, Event, rng) -> (state, StepInfo), memoized.
 
-        Under a mesh: shard_map over the data axes — each shard applies the
-        local engine step to its own [B_local] slice against its own
-        [E_local] state rows.  No collectives are emitted on the decision or
-        update path (only the scalar write counter is summed for metrics).
+        Under a mesh: ``shard_map`` over the data axes — each shard applies
+        the local (fused-kernel) engine step to its own [B_local] slice
+        against its own [E_local] state rows.  No collectives are emitted on
+        the decision or update path (only the scalar write counter is summed
+        for metrics).
 
-        Thinning RNG: the shard folds its mesh position into the root key so
-        local row ids never collide across shards.  Decisions are therefore
-        deterministic for a fixed mesh; cross-mesh determinism under elastic
-        resharding would require folding global entity ids instead
-        (checkpoint.elastic notes the trade-off).
+        Thinning RNG: the shard reconstructs global entity ids and passes
+        them as the core step's ``rng_entity``, so decisions match the
+        unsharded engine bit-for-bit and never collide across shards.
         """
+        if self._step is None:
+            self._step = self._build_step()
+        return self._step
+
+    def _build_step(self):
         if self.mesh is None:
             return self._local_step
 
-        axes = self.data_axes
+        axes, sizes, n = self.data_axes, self.axis_sizes, self.n_shards
         local_step = self._local_step
 
         def local(st, e, r):
             idx = jnp.zeros((), jnp.int32)
-            for a in axes:
-                idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
-            st2, info = local_step(st, e, jax.random.fold_in(r, idx))
+            for a, sz in zip(axes, sizes):
+                idx = idx * sz + jax.lax.axis_index(a)
+            # local row l of shard s is global entity l * n + s
+            st2, info = local_step(st, e, r, rng_entity=e.key * n + idx)
             return st2, info._replace(writes=info.writes[None])
 
         def sharded(state, ev, rng):
-            st2, info = jax.shard_map(
+            st2, info = shard_map(
                 local,
                 mesh=self.mesh,
                 in_specs=(jax.tree.map(lambda _: P(axes), state),
@@ -120,10 +190,45 @@ class ShardedFeatureEngine:
                 out_specs=(jax.tree.map(lambda _: P(axes), state),
                            StepInfo(z=P(axes), p=P(axes), lam_hat=P(axes),
                                     features=P(axes), writes=P(axes))),
+                check_rep=False,
             )(state, ev, rng)
             return st2, info._replace(writes=info.writes.sum())
 
         return sharded
+
+    # ----------------------------------------------------------- stream
+    def run_stream(self, state: ProfileState, keys, qs, ts, *,
+                   batch_per_shard: int = 1024,
+                   rng: Optional[jax.Array] = None,
+                   collect_info: bool = True, donate: bool = True
+                   ) -> Tuple[ProfileState, Union[StepInfo, jax.Array]]:
+        """Drive the sharded engine over a flat stream in one dispatch.
+
+        The stream is routed shard-aligned on the host
+        (``partition_stream``), then all blocks are scanned through the
+        sharded step inside a single jitted, state-donating program — one
+        dispatch per mesh for the whole stream, zero state copies between
+        blocks (see the ``core.stream`` donation contract; ``state`` is dead
+        after the call when ``donate=True``).
+
+        Returns the final state plus either a StepInfo in *stream order*
+        (``collect_info=True``) or per-block write counts.
+        """
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        events, slot = self.partition_stream(keys, qs, ts, batch_per_shard)
+        key = (collect_info, donate)
+        if key not in self._runners:
+            self._runners[key] = core_stream.block_runner_for(
+                self.make_step(), collect_info, donate)
+        state, info = self._runners[key](state, events, rng)
+        if not collect_info:
+            return state, info
+        flat = lambda x: jnp.reshape(x, (-1,) + x.shape[2:])[slot]
+        return state, StepInfo(
+            z=flat(info.z), p=flat(info.p), lam_hat=flat(info.lam_hat),
+            features=flat(info.features),
+            writes=jnp.sum(info.writes).astype(jnp.int32))
 
     def materialize(self, state: ProfileState, keys: jax.Array,
                     t: jax.Array) -> jax.Array:

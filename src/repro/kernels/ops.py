@@ -5,6 +5,26 @@ container) and through ``pallas_call`` on TPU backends; 'interpret' forces
 the Pallas kernel body in interpret mode (how tests validate the kernels on
 CPU); True/False force the respective paths.  Inputs are padded to block
 multiples here so the kernels can assume aligned shapes.
+
+``thinning_rmw`` is the single decision+update implementation for the
+persistence path: ``core/engine.py`` (both modes) and, through it, the
+sharded ``features/engine.py`` route every §5.1 decision through this one
+fused pass — no caller re-derives the decision math.  Two contracts every
+caller inherits:
+
+* **Full-stream control column.**  ``v_full`` / ``last_t_full`` thread the
+  unfiltered KDE numerator (the paper's Eq. 5 'full' baseline) through the
+  same fused pass as the thinned columns: they advance on *every* valid
+  event, while the persisted columns advance only on ``z``.  Decision-only
+  callers may omit them (the column defaults to fresh rows), but any caller
+  that persists state must scatter both returned columns back or the
+  'full' policy silently decays to cold estimates.
+
+* **Functional RMW, donation downstream.**  The wrappers are functional
+  (gather rows -> new rows); in-place reuse happens only at the driver
+  level via ``jit(..., donate_argnums=...)`` (core/stream.py).  That is
+  what imposes the no-aliased-leaves rule documented there: these wrappers
+  never alias outputs to inputs themselves.
 """
 from __future__ import annotations
 

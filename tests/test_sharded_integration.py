@@ -102,6 +102,110 @@ def test_sharded_engine_matches_unsharded_statistics():
     assert abs(float(sum_sh) - float(sum_un)) / max(float(sum_un), 1) < 0.5
 
 
+def test_sharded_engine_bitwise_parity_with_local():
+    """Global-entity RNG keying makes shard placement decision-invariant:
+    the same routed micro-batches through the sharded engine and through
+    core.engine (global keys) yield bit-identical StepInfo on valid lanes
+    and bit-identical state, in both execution modes."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.features.engine import ShardedFeatureEngine
+        from repro.core import EngineConfig, Event, init_state, make_step
+
+        mesh = jax.make_mesh((8,), ("data",))
+        cfg = EngineConfig(taus=(60., 3600.), h=600., budget=0.0005,
+                           policy="pp", exact_rounds=16)
+        rng = np.random.default_rng(0)
+        N, E = 1024, 64
+        keys = rng.integers(0, E, N).astype(np.int32)
+        qs = rng.lognormal(3, 1, N).astype(np.float32)
+        ts = np.sort(rng.uniform(0, 2e5, N)).astype(np.float32)
+        root = jax.random.PRNGKey(5)
+        k = np.arange(E)
+        perm = (k % 8) * 8 + k // 8       # sharded row of global entity k
+
+        for mode in ("exact", "fast"):
+            eng = ShardedFeatureEngine(cfg, E, mesh=mesh, mode=mode)
+            st_sh = eng.init_state()
+            st_lo = init_state(eng.num_entities, 2)
+            step_sh = jax.jit(eng.make_step())
+            step_lo = jax.jit(make_step(cfg, mode))
+            writes = 0
+            for i in range(0, N, 64):
+                ev = eng.partition_events(keys[i:i+64], qs[i:i+64],
+                                          ts[i:i+64], 8)
+                gkey = np.asarray(ev.key) * 8 + np.repeat(np.arange(8), 8)
+                ev_g = Event(key=jnp.asarray(gkey), q=ev.q, t=ev.t,
+                             valid=ev.valid)
+                st_sh, i_sh = step_sh(st_sh, ev, root)
+                st_lo, i_lo = step_lo(st_lo, ev_g, root)
+                v = np.asarray(ev.valid)
+                # z is valid-gated -> equal everywhere; p/features compare
+                # on valid lanes (padding lanes gather different rows)
+                assert np.array_equal(np.asarray(i_sh.z), np.asarray(i_lo.z))
+                assert np.array_equal(np.asarray(i_sh.p)[v],
+                                      np.asarray(i_lo.p)[v])
+                assert np.allclose(np.asarray(i_sh.features)[v],
+                                   np.asarray(i_lo.features)[v],
+                                   rtol=1e-6, atol=1e-6)
+                assert int(i_sh.writes) == int(i_lo.writes)
+                writes += int(i_sh.writes)
+            for a, b, name in zip(st_sh, st_lo, st_sh._fields):
+                assert np.array_equal(np.asarray(a)[perm], np.asarray(b)), \\
+                    (mode, name)
+            assert 0 < writes < N            # thinning actually engaged
+            print("PARITY", mode, writes)
+    """)
+    assert "PARITY exact" in out and "PARITY fast" in out
+
+
+def test_sharded_run_stream_matches_local_stream():
+    """The sharded donated-buffer stream driver: one dispatch for the whole
+    partitioned stream, bit-identical (exact mode) to core.stream.run_stream
+    on the same flat stream, with per-event info mapped back to stream
+    order."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.features.engine import ShardedFeatureEngine
+        from repro.core import EngineConfig, init_state
+        from repro.core.stream import run_stream as local_run_stream
+
+        mesh = jax.make_mesh((8,), ("data",))
+        cfg = EngineConfig(taus=(60., 3600.), h=600., budget=0.0005,
+                           policy="pp", exact_rounds=32)
+        rng = np.random.default_rng(1)
+        N, E = 1500, 64                      # non-block-multiple tail
+        keys = rng.integers(0, E, N).astype(np.int32)
+        qs = rng.lognormal(3, 1, N).astype(np.float32)
+        ts = np.sort(rng.uniform(0, 2e5, N)).astype(np.float32)
+        root = jax.random.PRNGKey(5)
+
+        eng = ShardedFeatureEngine(cfg, E, mesh=mesh, mode="exact")
+        st_sh, info_sh = eng.run_stream(eng.init_state(), keys, qs, ts,
+                                        batch_per_shard=64, rng=root)
+        st_lo, info_lo = local_run_stream(cfg, init_state(E, 2), keys, qs,
+                                          ts, batch=64, mode="exact",
+                                          rng=root)
+        assert np.array_equal(np.asarray(info_sh.z), np.asarray(info_lo.z))
+        assert np.array_equal(np.asarray(info_sh.p), np.asarray(info_lo.p))
+        assert int(info_sh.writes) == int(info_lo.writes)
+        k = np.arange(E)
+        perm = (k % 8) * 8 + k // 8
+        for a, b, name in zip(st_sh, st_lo, st_sh._fields):
+            assert np.array_equal(np.asarray(a)[perm], np.asarray(b)), name
+
+        # cheapest path: per-block write counts only, donated state
+        eng2 = ShardedFeatureEngine(cfg, E, mesh=mesh, mode="exact")
+        st2, wr = eng2.run_stream(eng2.init_state(), keys, qs, ts,
+                                  batch_per_shard=64, rng=root,
+                                  collect_info=False)
+        assert int(jnp.sum(wr)) == int(info_lo.writes)
+        print("STREAM", int(info_sh.writes), N)
+    """)
+    writes, n = map(int, out.split("STREAM")[1].split()[:2])
+    assert 0 < writes < n
+
+
 def test_dryrun_cell_small_mesh():
     """run_cell logic end to end on an 8-device mesh (fast smoke of the
     512-device dry-run path)."""
