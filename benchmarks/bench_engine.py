@@ -2,7 +2,7 @@
 
 Drives the vectorized JAX engine (repro.core.engine) over synthetic streams
 with uniform and Zipf-skewed key distributions, through the donated-buffer
-``run_stream`` driver.  Two suites:
+``run_stream`` driver.  Three suites:
 
 * ``engine``  — local engine.  Exact mode runs under its default
   segment-compacted round schedule; a ``masked`` baseline row (the
@@ -12,6 +12,15 @@ with uniform and Zipf-skewed key distributions, through the donated-buffer
   mesh (subprocess, so the forced device count never leaks into the caller's
   jax).  On this CPU-only container the 8 "devices" share the same cores, so
   the number records dispatch overhead, not scale-out speedup.
+* ``skew``    — the ``layout="block"`` vs ``layout="virtual"`` pair
+  (distributed/rebalance.py) over the Table 2 workload regimes
+  (streaming/workload.py), recording each layout's padded-vs-useful block
+  slot fraction and throughput on the same 8-fake-device mesh.
+
+Every row also carries a peak-memory watermark column
+(``benchmarks.common.memory_watermark``: device allocator stats where the
+backend reports them, host peak RSS on CPU) so donation/zero-copy
+regressions are visible between JSON snapshots.
 
 Results land both on stdout (``emit`` rows) and in ``BENCH_engine.json`` at
 the repo root so successive PRs record a throughput trajectory.
@@ -39,7 +48,7 @@ if __package__ in (None, ""):
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, memory_watermark
 from repro.core import EngineConfig
 
 _OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
@@ -105,6 +114,7 @@ def _run_engine_suite(rng, n_events, n_keys, batch, exact_rounds):
                        "events_per_s": round(eps, 1)}
                 if impl is not None:
                     row["impl"] = impl
+                row.update(memory_watermark())
                 rows.append(row)
                 emit("engine", row)
     return rows
@@ -115,6 +125,7 @@ _SHARDED_CODE = """
     from repro.core import EngineConfig
     from repro.features.engine import ShardedFeatureEngine
     from benchmarks.bench_engine import _make_stream
+    from benchmarks.common import memory_watermark
 
     n_events, n_keys, batch, exact_rounds, seed = {args}
     mesh = jax.make_mesh((8,), ("data",))
@@ -141,34 +152,106 @@ _SHARDED_CODE = """
                 t0 = time.perf_counter()
                 once()
                 best = min(best, time.perf_counter() - t0)
-            rows.append({{"mode": mode, "policy": "pp", "skew": skew_name,
-                          "batch": batch, "n_events": n_events,
-                          "mesh": "8xcpu",
-                          "events_per_s": round(n_events / best, 1)}})
+            row = {{"mode": mode, "policy": "pp", "skew": skew_name,
+                    "batch": batch, "n_events": n_events,
+                    "mesh": "8xcpu",
+                    "events_per_s": round(n_events / best, 1)}}
+            row.update(memory_watermark())
+            rows.append(row)
     print("ROWS", json.dumps(rows))
 """
 
 
-def _run_sharded_suite(n_events, n_keys, batch, exact_rounds, seed):
-    """Sharded run_stream throughput on 8 fake devices (subprocess)."""
+_SKEW_CODE = """
+    import jax, numpy as np, json, time
+    from repro.core import EngineConfig
+    from repro.features.engine import ShardedFeatureEngine
+    from repro.streaming.workload import generate_regime
+    from benchmarks.common import memory_watermark
+
+    regimes, n_events, batch, seed = {args}
+    mesh = jax.make_mesh((8,), ("data",))
+    rows = []
+    for regime in regimes:
+        stream = generate_regime(regime, seed=seed, n_events=n_events)
+        weights = np.bincount(stream.key, minlength=stream.spec.n_keys)
+        for layout in ("block", "virtual"):
+            eng = ShardedFeatureEngine(
+                EngineConfig(taus=(60.0, 3600.0, 86400.0), h=600.0,
+                             budget=0.05, policy="pp"),
+                stream.spec.n_keys, mesh=mesh, mode="fast", layout=layout,
+                key_weights=weights if layout == "virtual" else None)
+            stats = eng.stream_layout_stats(stream.key, batch // 8)
+
+            def once():
+                st, _ = eng.run_stream(eng.init_state(), stream.key,
+                                       stream.q, stream.t,
+                                       batch_per_shard=batch // 8,
+                                       rng=jax.random.PRNGKey(0),
+                                       collect_info=False)
+                jax.block_until_ready(st.agg)
+
+            once()
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                once()
+                best = min(best, time.perf_counter() - t0)
+            row = {{"suite": "skew", "regime": regime, "layout": layout,
+                    "mode": "fast", "batch": batch, "n_events": n_events,
+                    "mesh": "8xcpu", "n_blocks": stats["n_blocks"],
+                    "padded_fraction": round(stats["padded_fraction"], 4),
+                    "useful_fraction":
+                        round(1.0 - stats["padded_fraction"], 4),
+                    "events_per_s": round(n_events / best, 1)}}
+            row.update(memory_watermark())
+            rows.append(row)
+    print("ROWS", json.dumps(rows))
+"""
+
+
+def _run_mesh_subprocess(code_tmpl: str, args, table: str):
+    """Run a suite body on 8 fake devices (subprocess, so the forced device
+    count never leaks into the caller's jax) and emit its rows."""
     env = {"PYTHONPATH": "src:" + os.path.dirname(os.path.dirname(
                os.path.abspath(__file__))),
            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
            "JAX_PLATFORMS": "cpu"}
-    code = textwrap.dedent(_SHARDED_CODE.format(
-        args=(n_events, n_keys, batch, exact_rounds, seed)))
+    code = textwrap.dedent(code_tmpl.format(args=args))
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, env=env,
                        cwd=os.path.dirname(os.path.dirname(
                            os.path.abspath(__file__))))
     if r.returncode != 0:
-        print("sharded suite failed:", r.stderr[-2000:])
+        print(f"{table} suite failed:", r.stderr[-2000:])
         return []
     rows = json.loads(r.stdout.split("ROWS", 1)[1])
     for row in rows:
-        emit("engine_sharded", row)
+        emit(table, row)
     return rows
+
+
+def _run_sharded_suite(n_events, n_keys, batch, exact_rounds, seed):
+    """Sharded run_stream throughput on 8 fake devices (subprocess)."""
+    return _run_mesh_subprocess(
+        _SHARDED_CODE, (n_events, n_keys, batch, exact_rounds, seed),
+        "engine_sharded")
+
+
+def _run_skew_suite(n_events, batch, seed,
+                    regimes=("fraud", "ibm", "iiot", "wikipedia")):
+    """block-vs-virtual layout padding + throughput over the Table 2 Zipf
+    regimes (8 fake devices, subprocess)."""
+    return _run_mesh_subprocess(
+        _SKEW_CODE, (tuple(regimes), n_events, batch, seed), "engine_skew")
+
+
+def _suite_of_row(row: dict) -> str:
+    """Which suite produced a JSON row (for partial-run merging)."""
+    if row.get("suite") == "skew":
+        return "skew"
+    return "sharded" if "mesh" in row else "engine"
 
 
 def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
@@ -180,18 +263,17 @@ def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
     if "sharded" in suites:
         rows += _run_sharded_suite(n_events, n_keys, batch, exact_rounds,
                                    seed)
+    if "skew" in suites:
+        rows += _run_skew_suite(n_events, batch, seed)
     try:
         # merge with the suite(s) NOT run this invocation so a partial run
-        # never clobbers the other suite's trajectory (sharded rows carry a
-        # 'mesh' field, local engine rows don't)
+        # never clobbers the other suites' trajectories
         kept = []
         if os.path.exists(_OUT_PATH):
             try:
                 with open(_OUT_PATH) as f:
                     old = json.load(f).get("rows", [])
-                kept = [r for r in old
-                        if ("mesh" in r and "sharded" not in suites)
-                        or ("mesh" not in r and "engine" not in suites)]
+                kept = [r for r in old if _suite_of_row(r) not in suites]
             except (ValueError, OSError):
                 kept = []
         with open(_OUT_PATH, "w") as f:
@@ -204,10 +286,13 @@ def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
-                    choices=("engine", "sharded", "all"),
+                    choices=("engine", "sharded", "skew", "all"),
                     help="engine: local throughput (+ masked-vs-compact "
-                         "exact rows); sharded: 8-fake-device run_stream")
+                         "exact rows); sharded: 8-fake-device run_stream; "
+                         "skew: block-vs-virtual layout padding over the "
+                         "Table 2 regimes")
     ap.add_argument("--n-events", type=int, default=65_536)
     args = ap.parse_args()
-    suites = ("engine", "sharded") if args.suite == "all" else (args.suite,)
+    suites = ("engine", "sharded", "skew") if args.suite == "all" \
+        else (args.suite,)
     run(n_events=args.n_events, suites=suites)

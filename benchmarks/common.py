@@ -21,6 +21,37 @@ def ci95(xs) -> float:
     return 1.96 * xs.std(ddof=1) / np.sqrt(len(xs))
 
 
+def memory_watermark() -> dict:
+    """Peak-memory columns for bench rows: donation observability.
+
+    Donating stream drivers should hold device memory flat at ~one state
+    copy; a zero-copy regression shows up as a watermark jump between
+    successive BENCH_engine.json snapshots.  Backends that report allocator
+    stats (TPU/GPU) give ``peak_bytes_in_use`` per device; the CPU backend
+    reports none, so we fall back to the host's peak RSS (which still moves
+    when donation breaks, since XLA:CPU buffers live in host memory).
+
+    Semantics: both sources are **process-lifetime cumulative peaks** — they
+    never reset, so within one JSON snapshot later rows inherit earlier
+    rows' peaks and rows are only comparable *across* snapshots (same row,
+    previous commit), not against each other.  A per-row attribution would
+    need one subprocess per row; the cross-snapshot trajectory is what the
+    regression check needs.
+    """
+    try:
+        stats = jax.local_devices()[0].memory_stats() or {}
+        peak = stats.get("peak_bytes_in_use")
+        if peak:
+            return {"mem_watermark_bytes": int(peak),
+                    "mem_watermark_src": "device"}
+    except Exception:
+        pass
+    import resource
+    rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return {"mem_watermark_bytes": int(rss_kb) * 1024,
+            "mem_watermark_src": "host_rss"}
+
+
 def emit(table: str, row: dict, file=None):
     """One CSV-ish line per result; benchmarks/run.py tees these."""
     kv = ",".join(f"{k}={v}" for k, v in row.items())

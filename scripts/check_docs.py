@@ -5,10 +5,14 @@ resolve to a real file or directory in the repo.
     python scripts/check_docs.py [files...]     # default: README.md,
                                                 # benchmarks/README.md
 
-Checks two things:
+Checks three things:
   * markdown links `[text](target)` whose target is not an URL/anchor;
   * backtick-quoted repo paths in tables (e.g. `src/repro/core/engine.py`)
-    — the paper-to-code crosswalk must never drift from the tree.
+    — the paper-to-code crosswalk must never drift from the tree;
+  * `layout="..."` option names: every name the docs mention must exist in
+    `features/engine.py`'s LAYOUTS, and every LAYOUTS entry must be
+    documented somewhere in the checked files (no dangling layout options
+    in either direction).
 Exits non-zero listing every unresolved reference.
 """
 from __future__ import annotations
@@ -27,6 +31,46 @@ _LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
 _TICKED = re.compile(
     r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_.-]+"
     r"\.(?:py|md|json|ya?ml|txt|toml|sh))`")
+# sharded-layout option names as the docs spell them (`layout="virtual"`)
+_LAYOUT_MD = re.compile(r'layout="([A-Za-z0-9_]+)"')
+_LAYOUTS_SRC = "src/repro/features/engine.py"
+
+
+def code_layouts() -> set:
+    """The LAYOUTS tuple of features/engine.py, read from source (the lint
+    must not import jax)."""
+    src = open(os.path.join(ROOT, _LAYOUTS_SRC)).read()
+    m = re.search(r"^LAYOUTS\s*=\s*\(([^)]*)\)", src, re.M)
+    return set(re.findall(r'"([A-Za-z0-9_]+)"', m.group(1))) if m else set()
+
+
+def check_layout_options(files) -> list:
+    """No dangling `layout=` names between the docs and the engine.
+
+    docs -> code runs over the files being linted; code -> docs
+    ("every LAYOUTS entry is documented") always consults the full
+    DEFAULT_FILES set, so linting a single file never blames another file
+    for a name that is in fact documented there.
+    """
+    code = code_layouts()
+    bad = []
+
+    def names_in(f):
+        path = os.path.join(ROOT, f)
+        return _LAYOUT_MD.findall(open(path).read()) \
+            if os.path.exists(path) else []
+
+    for f in files:
+        for name in names_in(f):
+            if name not in code:
+                bad.append((f, f'layout="{name}" not in '
+                               f'{_LAYOUTS_SRC} LAYOUTS'))
+    documented = {n for f in DEFAULT_FILES for n in names_in(f)}
+    for name in sorted(code - documented):
+        bad.append((DEFAULT_FILES[0],
+                    f'layout="{name}" in {_LAYOUTS_SRC} LAYOUTS but '
+                    f'undocumented'))
+    return bad
 
 
 def check(md_path: str) -> list:
@@ -57,6 +101,7 @@ def main(argv) -> int:
             bad.append((f, "<file missing>"))
             continue
         bad += check(f)
+    bad += check_layout_options(files)
     for md, target in bad:
         print(f"UNRESOLVED {md}: {target}")
     print(f"checked {len(files)} file(s): "

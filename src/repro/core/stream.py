@@ -51,17 +51,29 @@ __all__ = ["run_stream", "block_runner_for"]
 def block_runner_for(step, collect_info: bool = True, donate: bool = True):
     """Build a scan-over-blocks driver for an arbitrary engine step.
 
-    ``step``: jit-able (state, Event, rng) -> (state, StepInfo); events are
-    [n_blocks, B] pytrees scanned along axis 0 with the state as the
-    (donated) carry.  Each call returns a *fresh* jit wrapper — callers must
-    hold on to it across dispatches or they retrace every time
-    (``_block_runner`` below memoizes per (cfg, mode, flags);
-    ``ShardedFeatureEngine.run_stream`` memoizes per engine instance, so the
-    runner's lifetime matches its engine rather than pinning it globally).
+    ``step``: jit-able (state, Event, rng, *consts) -> (state, StepInfo);
+    events are [n_blocks, B] pytrees scanned along axis 0 with the state as
+    the (donated) carry.  The block *width* B is the step's layout contract,
+    not the runner's: the local engine feeds ``[n_batches, batch]`` blocks,
+    the sharded engine ``[n_blocks, n_shards * batch_per_shard]`` blocks
+    whose columns are shard-aligned — the runner only fixes the scan axis.
+
+    Trailing ``*consts`` operands are layout side inputs threaded unchanged
+    to every step invocation (e.g. the virtual layout's ``gid_of_row``
+    table, see ``distributed.rebalance``).  They are ordinary jit arguments
+    — **never donated** — so a const may be reused across calls, but it must
+    not alias a state leaf (the donation contract above would then donate
+    the same buffer twice).
+
+    Each call returns a *fresh* jit wrapper — callers must hold on to it
+    across dispatches or they retrace every time (``_block_runner`` below
+    memoizes per (cfg, mode, flags); ``ShardedFeatureEngine.run_stream``
+    memoizes per engine instance, so the runner's lifetime matches its
+    engine rather than pinning it globally).
     """
-    def run(state: ProfileState, events: Event, rng):
+    def run(state: ProfileState, events: Event, rng, *consts):
         def body(st, ev):
-            st, info = step(st, ev, rng)
+            st, info = step(st, ev, rng, *consts)
             return st, (info if collect_info else info.writes)
         return jax.lax.scan(body, state, events)
 

@@ -1,4 +1,4 @@
-"""Distribution: mesh context, logical-axis rules, gradient compression."""
-from repro.distributed import context, sharding
+"""Distribution: mesh context, logical-axis rules, skew rebalancing."""
+from repro.distributed import context, rebalance, sharding
 
-__all__ = ["context", "sharding"]
+__all__ = ["context", "rebalance", "sharding"]

@@ -1,8 +1,8 @@
 """Entity-partitioned (sharded) feature engine.
 
-The paper's partitioned workers (§5.3) map to SPMD shards: shard ``s`` of
-the ``data`` mesh axes owns entities with ``key % n_shards == s`` and runs
-the vectorized core engine over its own event partition inside a
+The paper's partitioned workers (§5.3) map to SPMD shards: each shard of
+the ``data`` mesh axes owns a subset of entities and runs the vectorized
+core engine over its own event partition inside a
 ``jax.experimental.shard_map`` — deterministic key routing, per-key ordering
 within a shard, no cross-shard collectives on the decision or update path
 (the paper's no-coordination design goal, realized in mesh form).  Every
@@ -11,12 +11,27 @@ shard routes its decision + read-modify-write through the same fused
 decision math of its own — it only routes events and composes the core
 step).
 
-Determinism: the shard body rebuilds each event's *global* entity id
-(``local_row * n_shards + shard``) and feeds it to the core step's
-``rng_entity`` hook, so the counter-based thinning RNG sees exactly the
-counters an unsharded engine would — decisions are bit-identical to
-``core.engine`` on the same stream, for any mesh shape (and across elastic
-resharding, since the counter depends only on the global id).
+Layouts (``layout=`` constructor option, names in ``LAYOUTS``):
+
+* ``layout="block"`` (default) — shard ``s`` owns entities with
+  ``key % n_shards == s`` at local row ``key // n_shards``.  Zero routing
+  state, but under heavy key skew the hottest shard sets the stream's block
+  count and every other shard pads up to it.
+* ``layout="virtual"`` — keys map onto ``V >> n_shards`` virtual shards
+  placed with volume-weighted power-of-two-choices
+  (``distributed.rebalance``), cutting the padded-block waste on skewed
+  streams; an inverse gather at ``materialize`` keeps user-visible entity
+  ids unchanged.  See the ``rebalance`` module docstring for the full
+  layout contract.
+
+Determinism: the shard body feeds each event's *global* entity id to the
+core step's ``rng_entity`` hook — reconstructed arithmetically
+(``local_row * n_shards + shard``) under the block layout, gathered from
+the layout's ``gid_of_row`` table under the virtual layout — so the
+counter-based thinning RNG sees exactly the counters an unsharded engine
+would: decisions are bit-identical to ``core.engine`` on the same stream,
+for any mesh shape, any layout, and across elastic resharding (the counter
+depends only on the global id).
 
 Streaming: ``run_stream`` is the donated-buffer block driver for the
 sharded path — the host routes the flat stream into ``[n_blocks,
@@ -24,7 +39,8 @@ n_shards * B]`` event blocks (each block row lands shard-aligned on the
 mesh) and one jitted dispatch scans all blocks with the mesh-sharded state
 as donated carry.  The ``core.stream`` donation contract applies: state
 leaves must each own their storage, and the input state is dead after the
-call.
+call.  Layout tables ride along as non-donated trailing consts (see
+``core.stream.block_runner_for``).
 
 Without a mesh the engine degrades to a single local shard (CPU tests).
 """
@@ -42,7 +58,65 @@ from repro.core import EngineConfig, Event, ProfileState, StepInfo
 from repro.core import engine as core_engine
 from repro.core import stream as core_stream
 from repro.core.types import init_state
+from repro.distributed import rebalance
 from repro.distributed.sharding import axis_sizes
+
+# The sharded layouts this engine supports; README.md documents the
+# contract of each and scripts/check_docs.py lints the two lists against
+# each other.
+LAYOUTS = ("block", "virtual")
+
+
+def stream_block_counts(shard: np.ndarray, n_shards: int,
+                        batch_per_shard: int) -> Tuple[np.ndarray, int]:
+    """(per-shard event counts, n_blocks) for a routed stream — the single
+    definition of the packer's block-count rule (n_blocks follows the most
+    loaded shard), shared by ``route_stream_blocks`` and the
+    ``stream_layout_stats`` accounting so they can never diverge."""
+    counts = np.bincount(shard, minlength=n_shards)
+    n_blocks = max(1, -(-int(counts.max()) // int(batch_per_shard))) \
+        if shard.size else 1
+    return counts, n_blocks
+
+
+def route_stream_blocks(shard: np.ndarray, local: np.ndarray, q: np.ndarray,
+                        t: np.ndarray, n_shards: int, batch_per_shard: int
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray, np.ndarray, int]:
+    """Pack routed events into flat ``[n_blocks * n_shards * B]`` blocks.
+
+    Pure host-side layout step shared by every layout: shard ``s`` owns
+    block columns ``[s*B, (s+1)*B)`` and its events are packed in stream
+    order across however many blocks its load requires, so per-key ordering
+    is preserved (a key's events all carry the same ``(shard, local)``).
+    Every event is retained exactly once — no drops, no duplicates — and
+    skew shows up purely as padding: ``n_blocks`` follows the most loaded
+    shard.
+
+    Returns ``(key, q, t, valid, slot, n_blocks)`` where the first four are
+    flat arrays of length ``n_blocks * n_shards * B`` (``key`` holds local
+    rows) and ``slot`` is each input event's flat block-major slot, for
+    mapping per-event outputs back to stream order.
+    """
+    shard = np.asarray(shard)
+    n, B = int(n_shards), int(batch_per_shard)
+    counts, n_blocks = stream_block_counts(shard, n, B)
+    W = n * B
+    out_key = np.zeros(n_blocks * W, np.int32)
+    out_q = np.zeros(n_blocks * W, np.float32)
+    out_t = np.zeros(n_blocks * W, np.float32)
+    out_valid = np.zeros(n_blocks * W, bool)
+    # rank of each event within its shard, in stream order
+    order = np.argsort(shard, kind="stable")
+    starts = np.cumsum(counts) - counts
+    rank = np.empty(shard.size, np.int64)
+    rank[order] = np.arange(shard.size) - starts[shard[order]]
+    slot = (rank // B) * W + shard * B + rank % B
+    out_key[slot] = local
+    out_q[slot] = q
+    out_t[slot] = t
+    out_valid[slot] = True
+    return out_key, out_q, out_t, out_valid, slot, n_blocks
 
 
 class ShardedFeatureEngine:
@@ -50,19 +124,46 @@ class ShardedFeatureEngine:
 
     def __init__(self, cfg: EngineConfig, num_entities: int,
                  mesh: Optional[Mesh] = None, data_axes: Tuple[str, ...] =
-                 ("data",), mode: str = "fast"):
+                 ("data",), mode: str = "fast", layout: str = "block",
+                 key_weights: Optional[np.ndarray] = None,
+                 n_virtual: Optional[int] = None, seed: int = 0):
+        if layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {layout!r}; choose from "
+                             f"{LAYOUTS}")
         self.cfg = cfg
         self.mesh = mesh
         self.data_axes = data_axes
         self.mode = mode
+        self.layout = layout
         self.axis_sizes = axis_sizes(mesh, data_axes) if mesh is not None \
             else (1,)
         self.n_shards = int(np.prod(self.axis_sizes))
-        # round entities up so every shard owns the same row count
-        self.entities_per_shard = -(-num_entities // self.n_shards)
-        self.num_entities = self.entities_per_shard * self.n_shards
+        if layout == "virtual":
+            # Frozen skew-aware layout: key -> (shard, row) via weighted
+            # power-of-two-choices over virtual shards; see
+            # distributed/rebalance.py for the contract.
+            self.vlayout = rebalance.build_layout(
+                num_entities, self.n_shards, key_weights=key_weights,
+                n_virtual=n_virtual, seed=seed)
+            self.entities_per_shard = self.vlayout.entities_per_shard
+            self.num_entities = self.vlayout.num_rows
+            gid = jnp.asarray(self.vlayout.gid_of_row)
+            row_of_key = jnp.asarray(self.vlayout.row_of_key)
+            if mesh is not None:
+                gid = jax.device_put(
+                    gid, NamedSharding(mesh, P(data_axes)))
+            self._row_of_key = row_of_key
+            self._step_consts = (gid,)
+        else:
+            self.vlayout = None
+            # round entities up so every shard owns the same row count
+            self.entities_per_shard = -(-num_entities // self.n_shards)
+            self.num_entities = self.entities_per_shard * self.n_shards
+            self._row_of_key = None
+            self._step_consts = ()
         self._local_step = core_engine.make_step(cfg, mode)
-        self._step = None   # built lazily; cached so jit/block-runner reuse
+        self._step_raw = None  # (state, ev, rng, *consts); cached
+        self._step = None      # public (state, ev, rng) wrapper
         self._runners = {}  # (collect_info, donate) -> compiled block driver
 
     # ------------------------------------------------------------ state
@@ -75,15 +176,22 @@ class ShardedFeatureEngine:
             lambda s: NamedSharding(self.mesh, s), spec))
 
     # ------------------------------------------------ host-side routing
+    def route(self, key: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(shard, local row) of each key under the active layout."""
+        key = np.asarray(key)
+        if self.layout == "virtual":
+            return (self.vlayout.shard_of_key[key],
+                    self.vlayout.local_of_key[key])
+        return key % self.n_shards, key // self.n_shards
+
     def partition_events(self, key: np.ndarray, q: np.ndarray,
                          t: np.ndarray, batch_per_shard: int) -> Event:
-        """Route a host batch to shards: key % n_shards picks the shard,
-        key // n_shards is the local row.  Returns a *global* Event whose
-        flat layout is [shard0 rows..., shard1 rows...] so a plain
-        ('data',)-sharded batch dimension lands each event on its owner."""
+        """Route a host batch to shards under the active layout.  Returns a
+        *global* Event whose flat layout is [shard0 rows..., shard1 rows...]
+        so a plain ('data',)-sharded batch dimension lands each event on its
+        owner."""
         n = self.n_shards
-        shard = key % n
-        local = key // n
+        shard, local = self.route(key)
         B = batch_per_shard
         out_key = np.zeros(n * B, np.int32)
         out_q = np.zeros(n * B, np.float32)
@@ -107,38 +215,31 @@ class ShardedFeatureEngine:
         """Route a flat host stream into ``[n_blocks, n_shards * B]`` blocks.
 
         Unlike ``partition_events`` (fixed micro-batch, drops per-batch
-        overflow) every event is retained: shard ``s`` owns block columns
-        ``[s*B, (s+1)*B)`` and its events are packed in stream order across
-        however many blocks its load requires, so per-key ordering is
-        preserved (all events of a key live in one shard).  Skew shows up as
-        padding: n_blocks follows the most loaded shard.
+        overflow) every event is retained exactly once, packed by
+        ``route_stream_blocks`` under the active layout's ``route`` map.
+        Skew shows up as padding — n_blocks follows the most loaded shard —
+        which is precisely what ``layout="virtual"`` rebalances away (see
+        ``stream_layout_stats`` for the accounting).
 
         Returns (events, slot) where ``slot`` is the flat block-major slot
         of every input event, for mapping per-event outputs back to stream
         order.
+
+        Donation / aliasing: the returned blocks are freshly allocated and
+        the gathered-materialization side tables (``gid_of_row`` /
+        ``row_of_key``) live outside the event pytree, so feeding the
+        result straight into the donating ``run_stream`` driver never
+        aliases a donated ``ProfileState`` leaf; only the *state* is dead
+        after that call, never the blocks or the layout tables.
         """
         key = np.asarray(key, np.int32)
         q = np.asarray(q, np.float32)
         t = np.asarray(t, np.float32)
         n, B = self.n_shards, int(batch_per_shard)
-        shard = key % n
-        counts = np.bincount(shard, minlength=n)
-        n_blocks = max(1, -(-int(counts.max()) // B)) if key.size else 1
+        shard, local = self.route(key)
+        out_key, out_q, out_t, out_valid, slot, n_blocks = \
+            route_stream_blocks(shard, local, q, t, n, B)
         W = n * B
-        out_key = np.zeros(n_blocks * W, np.int32)
-        out_q = np.zeros(n_blocks * W, np.float32)
-        out_t = np.zeros(n_blocks * W, np.float32)
-        out_valid = np.zeros(n_blocks * W, bool)
-        # rank of each event within its shard, in stream order
-        order = np.argsort(shard, kind="stable")
-        starts = np.cumsum(counts) - counts
-        rank = np.empty(key.size, np.int64)
-        rank[order] = np.arange(key.size) - starts[shard[order]]
-        slot = (rank // B) * W + shard * B + rank % B
-        out_key[slot] = key // n
-        out_q[slot] = q
-        out_t[slot] = t
-        out_valid[slot] = True
         blocks = lambda x: jnp.asarray(x.reshape(n_blocks, W))
         ev = Event(key=blocks(out_key), q=blocks(out_q), t=blocks(out_t),
                    valid=blocks(out_valid))
@@ -146,6 +247,24 @@ class ShardedFeatureEngine:
             sh = NamedSharding(self.mesh, P(None, self.data_axes))
             ev = Event(*(jax.device_put(x, sh) for x in ev))
         return ev, slot
+
+    def stream_layout_stats(self, key, batch_per_shard: int) -> dict:
+        """Host-side padding accounting for a stream under the active layout.
+
+        ``padded_fraction`` is the share of block slots that carry no real
+        event — the dispatch work wasted to shard-load imbalance (plus the
+        final partial block).  ``bench_engine --suite skew`` records this
+        per layout.
+        """
+        shard, _ = self.route(np.asarray(key, np.int64))
+        B = int(batch_per_shard)
+        counts, n_blocks = stream_block_counts(shard, self.n_shards, B)
+        slots = n_blocks * self.n_shards * B
+        return {"n_blocks": n_blocks, "slots": slots,
+                "events": int(shard.size),
+                "padded_fraction": float(1.0 - shard.size / slots),
+                "max_shard_events": int(counts.max()) if shard.size else 0,
+                "mean_shard_events": float(counts.mean())}
 
     # ------------------------------------------------------------- step
     def make_step(self):
@@ -157,41 +276,71 @@ class ShardedFeatureEngine:
         the decision or update path (only the scalar write counter is summed
         for metrics).
 
-        Thinning RNG: the shard reconstructs global entity ids and passes
-        them as the core step's ``rng_entity``, so decisions match the
-        unsharded engine bit-for-bit and never collide across shards.
+        Thinning RNG: the shard reconstructs global entity ids — block
+        layout arithmetically, virtual layout via the ``gid_of_row`` table —
+        and passes them as the core step's ``rng_entity``, so decisions
+        match the unsharded engine bit-for-bit and never collide across
+        shards.  Layout tables are bound as closure constants here; the
+        streaming driver passes them as explicit non-donated operands
+        instead (``run_stream``).
         """
         if self._step is None:
-            self._step = self._build_step()
+            raw = self._raw_step()
+            consts = self._step_consts
+            if consts:
+                self._step = lambda st, ev, rng: raw(st, ev, rng, *consts)
+            else:
+                self._step = raw
         return self._step
 
+    def _raw_step(self):
+        """The layout-aware step taking consts explicitly, memoized."""
+        if self._step_raw is None:
+            self._step_raw = self._build_step()
+        return self._step_raw
+
     def _build_step(self):
+        local_step = self._local_step
         if self.mesh is None:
-            return self._local_step
+            if self.layout == "virtual":
+                def local1(st, e, r, gid):
+                    # single local shard: rows are permuted, ids via gid
+                    return local_step(st, e, r, rng_entity=gid[e.key])
+                return local1
+            def local0(st, e, r):
+                return local_step(st, e, r)
+            return local0
 
         axes, sizes, n = self.data_axes, self.axis_sizes, self.n_shards
-        local_step = self._local_step
+        virtual = self.layout == "virtual"
 
-        def local(st, e, r):
-            idx = jnp.zeros((), jnp.int32)
-            for a, sz in zip(axes, sizes):
-                idx = idx * sz + jax.lax.axis_index(a)
-            # local row l of shard s is global entity l * n + s
-            st2, info = local_step(st, e, r, rng_entity=e.key * n + idx)
+        def local(st, e, r, *consts):
+            if virtual:
+                (gid,) = consts
+                ent = gid[e.key]
+            else:
+                idx = jnp.zeros((), jnp.int32)
+                for a, sz in zip(axes, sizes):
+                    idx = idx * sz + jax.lax.axis_index(a)
+                # local row l of shard s is global entity l * n + s
+                ent = e.key * n + idx
+            st2, info = local_step(st, e, r, rng_entity=ent)
             return st2, info._replace(writes=info.writes[None])
 
-        def sharded(state, ev, rng):
+        const_specs = (P(axes),) if virtual else ()
+
+        def sharded(state, ev, rng, *consts):
             st2, info = shard_map(
                 local,
                 mesh=self.mesh,
                 in_specs=(jax.tree.map(lambda _: P(axes), state),
                           jax.tree.map(lambda _: P(axes), ev),
-                          P()),
+                          P()) + const_specs,
                 out_specs=(jax.tree.map(lambda _: P(axes), state),
                            StepInfo(z=P(axes), p=P(axes), lam_hat=P(axes),
                                     features=P(axes), writes=P(axes))),
                 check_rep=False,
-            )(state, ev, rng)
+            )(state, ev, rng, *consts)
             return st2, info._replace(writes=info.writes.sum())
 
         return sharded
@@ -209,7 +358,8 @@ class ShardedFeatureEngine:
         sharded step inside a single jitted, state-donating program — one
         dispatch per mesh for the whole stream, zero state copies between
         blocks (see the ``core.stream`` donation contract; ``state`` is dead
-        after the call when ``donate=True``).
+        after the call when ``donate=True``; layout tables ride as
+        non-donated trailing consts and stay live).
 
         Returns the final state plus either a StepInfo in *stream order*
         (``collect_info=True``) or per-block write counts.
@@ -220,8 +370,9 @@ class ShardedFeatureEngine:
         key = (collect_info, donate)
         if key not in self._runners:
             self._runners[key] = core_stream.block_runner_for(
-                self.make_step(), collect_info, donate)
-        state, info = self._runners[key](state, events, rng)
+                self._raw_step(), collect_info, donate)
+        state, info = self._runners[key](state, events, rng,
+                                         *self._step_consts)
         if not collect_info:
             return state, info
         flat = lambda x: jnp.reshape(x, (-1,) + x.shape[2:])[slot]
@@ -234,9 +385,15 @@ class ShardedFeatureEngine:
                     t: jax.Array) -> jax.Array:
         """Read-only global feature materialization (scoring path).
 
-        Key k lives at flat row (k % n_shards) * E_local + (k // n_shards).
+        Block layout: key k lives at flat row
+        (k % n_shards) * E_local + (k // n_shards).  Virtual layout: the
+        inverse gather through ``row_of_key`` — user-visible entity ids are
+        unchanged by rebalancing.
         """
-        flat = (keys % self.n_shards) * self.entities_per_shard \
-            + keys // self.n_shards
+        if self.layout == "virtual":
+            flat = self._row_of_key[keys]
+        else:
+            flat = (keys % self.n_shards) * self.entities_per_shard \
+                + keys // self.n_shards
         return core_engine.materialize_features(state, flat, t,
                                                 self.cfg.taus)

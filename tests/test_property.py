@@ -121,6 +121,48 @@ def test_kde_recurrence_matches_dense(n, seed):
     np.testing.assert_allclose(rec, np.asarray(dense), rtol=1e-4)
 
 
+@given(seed=st.integers(0, 10_000), n=st.integers(0, 400),
+       n_keys=st.integers(1, 64), n_shards=st.sampled_from([1, 2, 8]),
+       batch=st.integers(1, 32), layout=st.sampled_from(["block", "virtual"]),
+       weighted=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_partition_stream_no_drop_no_dup(seed, n, n_keys, n_shards, batch,
+                                         layout, weighted):
+    """The stream block packer drops and duplicates nothing, for either
+    layout's route map: every event occupies exactly one valid slot with
+    its values intact, and per-shard column order replays stream order."""
+    from repro.distributed import rebalance
+    from repro.features.engine import route_stream_blocks
+
+    rng = np.random.default_rng(seed)
+    key = rng.integers(0, n_keys, n).astype(np.int32)
+    q = rng.uniform(1.0, 2.0, n).astype(np.float32)
+    t = np.sort(rng.uniform(0, 1e4, n)).astype(np.float32)
+    if layout == "virtual":
+        w = np.bincount(key, minlength=n_keys) if weighted else None
+        lay = rebalance.build_layout(n_keys, n_shards, key_weights=w,
+                                     seed=seed)
+        shard, local = lay.shard_of_key[key], lay.local_of_key[key]
+    else:
+        shard, local = key % n_shards, key // n_shards
+    out_key, out_q, out_t, out_valid, slot, n_blocks = \
+        route_stream_blocks(shard, local, q, t, n_shards, batch)
+    W = n_shards * batch
+    assert out_key.shape == (n_blocks * W,)
+    assert int(out_valid.sum()) == n                  # nothing dropped
+    assert len(np.unique(slot)) == n                  # nothing duplicated
+    assert np.array_equal(out_key[slot], local)
+    assert np.array_equal(out_q[slot], q)
+    assert np.array_equal(out_t[slot], t)
+    # per-shard column slices replay that shard's events in stream order
+    tb = out_t.reshape(n_blocks, W)
+    vb = out_valid.reshape(n_blocks, W)
+    for s in range(n_shards):
+        cols = tb[:, s * batch:(s + 1) * batch].ravel()
+        valid = vb[:, s * batch:(s + 1) * batch].ravel()
+        assert np.array_equal(cols[valid], t[shard == s])
+
+
 @given(budget=st.floats(1e-5, 1e-2), seed=st.integers(0, 100))
 @settings(max_examples=20, deadline=None)
 def test_engine_write_budget_bound(budget, seed):

@@ -1,0 +1,100 @@
+"""Host-side invariants of the skew-aware virtual-shard layout
+(distributed/rebalance.py) and the shared stream block packer — no mesh
+needed, so these run in the plain tier-1 process."""
+import numpy as np
+import pytest
+
+from repro.distributed import rebalance
+from repro.features.engine import route_stream_blocks
+from repro.streaming.workload import generate_regime
+
+
+def _padded_fraction(shard, n, B):
+    counts = np.bincount(shard, minlength=n)
+    n_blocks = max(1, -(-int(counts.max()) // B))
+    return 1.0 - shard.size / (n_blocks * n * B)
+
+
+def test_placement_deterministic_and_complete():
+    w = np.random.default_rng(0).pareto(1.1, 512) + 1
+    p1 = rebalance.place_virtual_shards(w, 8, seed=3)
+    p2 = rebalance.place_virtual_shards(w, 8, seed=3)
+    assert np.array_equal(p1, p2)
+    assert p1.min() >= 0 and p1.max() < 8
+    # a different seed draws different candidates
+    assert not np.array_equal(p1, rebalance.place_virtual_shards(w, 8,
+                                                                 seed=4))
+
+
+def test_placement_balances_weighted_load():
+    """Greedy weighted power-of-two-choices lands far closer to the mean
+    than the worst candidate assignment would."""
+    rng = np.random.default_rng(1)
+    w = rng.pareto(1.2, 1024) + 1
+    place = rebalance.place_virtual_shards(w, 8)
+    load = np.bincount(place, weights=w, minlength=8)
+    # near-LPT: max load within a few percent of mean + one heavy item
+    assert load.max() <= load.mean() + w.max() + 0.05 * load.mean()
+
+
+def test_layout_rows_are_a_bijection():
+    E, n = 1000, 8
+    lay = rebalance.build_layout(E, n, key_weights=np.arange(E)[::-1])
+    rows = lay.row_of_key
+    assert rows.shape == (E,)
+    assert len(np.unique(rows)) == E                     # injective
+    assert rows.max() < lay.num_rows
+    # gid is the exact inverse; padding rows carry the sentinel E
+    assert np.array_equal(lay.gid_of_row[rows], np.arange(E))
+    pad = np.setdiff1d(np.arange(lay.num_rows), rows)
+    assert np.all(lay.gid_of_row[pad] == E)
+    # every key's shard is its virtual shard's placement
+    v = rebalance.virtual_shard_of(np.arange(E), lay.n_virtual)
+    assert np.array_equal(lay.shard_of_key, lay.place[v])
+
+
+def test_layout_cuts_padding_on_skewed_regime():
+    """The acceptance-criteria property, pinned at test scale: >=2x less
+    padded-block waste than the block layout on the most skewed Table 2
+    regime (iiot: ~0.7% of keys carry 80% of volume)."""
+    s = generate_regime("iiot", seed=0, n_events=30_000)
+    n, B = 8, 256
+    w = np.bincount(s.key, minlength=s.spec.n_keys)
+    lay = rebalance.build_layout(s.spec.n_keys, n, key_weights=w)
+    pf_block = _padded_fraction(s.key % n, n, B)
+    pf_virtual = _padded_fraction(lay.shard_of_key[s.key], n, B)
+    assert pf_virtual * 2 <= pf_block, (pf_block, pf_virtual)
+
+
+@pytest.mark.parametrize("layout", ["block", "virtual"])
+def test_route_stream_blocks_no_drop_no_dup(layout):
+    """Every event lands in exactly one block slot, values intact, per-shard
+    stream order preserved — for both layouts' route maps."""
+    rng = np.random.default_rng(7)
+    N, E, n, B = 3000, 256, 8, 32
+    key = (rng.pareto(1.1, N) * 10).astype(np.int32) % E
+    q = rng.lognormal(1, 1, N).astype(np.float32) + 1.0   # q > 0: pad is 0
+    t = np.sort(rng.uniform(0, 1e5, N)).astype(np.float32)
+    if layout == "virtual":
+        lay = rebalance.build_layout(E, n,
+                                     key_weights=np.bincount(key,
+                                                             minlength=E))
+        shard, local = lay.shard_of_key[key], lay.local_of_key[key]
+    else:
+        shard, local = key % n, key // n
+    out_key, out_q, out_t, out_valid, slot, n_blocks = \
+        route_stream_blocks(shard, local, q, t, n, B)
+    assert out_valid.sum() == N                  # no drops
+    assert len(np.unique(slot)) == N             # no duplicate slots
+    assert np.all(out_valid[slot])
+    # values intact and addressable via slot
+    assert np.array_equal(out_key[slot], local)
+    assert np.array_equal(out_q[slot], q)
+    assert np.array_equal(out_t[slot], t)
+    # a shard's column slice replays its events in stream order
+    W = n * B
+    for s in (0, 3, 7):
+        mine = np.nonzero(shard == s)[0]
+        cols = out_t.reshape(n_blocks, W)[:, s * B:(s + 1) * B].ravel()
+        valid = out_valid.reshape(n_blocks, W)[:, s * B:(s + 1) * B].ravel()
+        assert np.array_equal(cols[valid], t[mine])
