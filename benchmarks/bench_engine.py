@@ -2,7 +2,7 @@
 
 Drives the vectorized JAX engine (repro.core.engine) over synthetic streams
 with uniform and Zipf-skewed key distributions, through the donated-buffer
-``run_stream`` driver.  Three suites:
+``run_stream`` driver.  Four suites:
 
 * ``engine``  — local engine.  Exact mode runs under its default
   segment-compacted round schedule; a ``masked`` baseline row (the
@@ -16,6 +16,13 @@ with uniform and Zipf-skewed key distributions, through the donated-buffer
   (distributed/rebalance.py) over the Table 2 workload regimes
   (streaming/workload.py), recording each layout's padded-vs-useful block
   slot fraction and throughput on the same 8-fake-device mesh.
+* ``persist`` — the *durable* fast path: ``run_stream`` with a write-behind
+  ``WriteBehindSink`` (streaming/persistence.py) vs the no-persistence
+  baseline, at the paper's write budget (Lambda * h = 0.1).  Records
+  puts/events (Table 3's >= 90% write exclusion, now at vectorized
+  throughput), bytes written, SerDe seconds, modeled IO, WAF, and the
+  throughput cost of persistence (write-behind overlap, not serial
+  flushes).
 
 Every row also carries a peak-memory watermark column
 (``benchmarks.common.memory_watermark``: device allocator stats where the
@@ -210,6 +217,90 @@ _SKEW_CODE = """
 """
 
 
+def _run_persist_suite(n_events, n_keys, batch, seed):
+    """Durable fast path: write-behind sink vs no-persistence baseline.
+
+    Budget regime mirrors Table 3's pp row: Lambda * h = 0.1, so even a
+    cold key's first event is included with p <= 0.1 and the expected
+    write fraction sits at <= ~10% — the >= 90% exclusion the paper
+    reports, here sustained at vectorized fast-path throughput with the
+    bytes actually landing in partition stores.
+    """
+    from repro.core import init_state
+    from repro.core.stream import run_stream
+    from repro.streaming.persistence import WriteBehindSink
+
+    h = 3600.0
+    budget = 0.1 / h
+    # own generator: the stream must not depend on which other suites ran
+    # first in this invocation (rows are compared across partial runs)
+    keys, qs, ts = _make_stream(np.random.default_rng(seed + 17),
+                                n_events, n_keys, skew=1.2)
+    rows = []
+    for policy in ("pp", "pp_vr", "unfiltered"):
+        cfg = EngineConfig(taus=(60.0, 3600.0, 86400.0), h=h, budget=budget,
+                           alpha=1.0, policy=policy)
+
+        def once(sink=None):
+            state = init_state(n_keys, len(cfg.taus))
+            t0 = time.perf_counter()
+            state, _ = run_stream(cfg, state, keys, qs, ts, batch=batch,
+                                  mode="fast", rng=jax.random.PRNGKey(0),
+                                  collect_info=False, sink=sink)
+            if sink is not None:
+                sink.flush()        # trailing blocks count toward the wall
+            jax.block_until_ready(state.agg)
+            return time.perf_counter() - t0
+
+        once()                      # compile + warm caches
+        # interleave the three variants so they ride the same container
+        # noise; best-of-7 each.  serial = queue_depth 0 (flush inline on
+        # the driver thread), the strawman write-behind exists to beat.
+        base = best = serial = float("inf")
+        stats = None
+        for _ in range(7):
+            base = min(base, once())
+            with WriteBehindSink(cfg, n_partitions=4) as sink:
+                dt = once(sink)
+                if dt < best:
+                    best, stats = dt, sink.snapshot()
+            with WriteBehindSink(cfg, n_partitions=4,
+                                 queue_depth=0) as ssink:
+                serial = min(serial, once(ssink))
+        # modeled end-to-end rates: the storage service time is modeled
+        # (never slept), so fold it in arithmetically — serial pays
+        # compute + IO, write-behind pays max(compute, IO + flush work).
+        # serde/pack time is NOT added: both walls already include it
+        # (serial packs inline on the driver thread; flush_s times the
+        # background pack).
+        io = stats["modeled_io_s"]
+        modeled_serial = n_events / (serial + io)
+        modeled_wb = n_events / max(best, io + stats["flush_s"])
+        row = {"suite": "persist", "mode": "fast", "policy": policy,
+               "batch": batch, "n_events": n_events,
+               "budget_x_h": round(budget * h, 3),
+               "events_per_s": round(n_events / best, 1),
+               "events_per_s_nosink": round(n_events / base, 1),
+               "events_per_s_serialflush": round(n_events / serial, 1),
+               "sink_overhead_pct": round(100.0 * (best - base) / base, 2),
+               "modeled_serial_events_per_s": round(modeled_serial, 1),
+               "modeled_writebehind_events_per_s": round(modeled_wb, 1),
+               "puts": stats["puts"],
+               "puts_per_event": round(stats["puts"] / n_events, 4),
+               "selected_per_event": round(stats["selected"] / n_events, 4),
+               "dedup_saved": stats["dedup_saved"],
+               "bytes_written": stats["bytes_written"],
+               "waf": round(stats["waf"], 3),
+               "serde_s": round(stats["serde_s"], 4),
+               "modeled_io_s": round(stats["modeled_io_s"], 4),
+               "flush_s": round(stats["flush_s"], 4),
+               "submit_wait_s": round(stats["submit_wait_s"], 4)}
+        row.update(memory_watermark())
+        rows.append(row)
+        emit("engine_persist", row)
+    return rows
+
+
 def _run_mesh_subprocess(code_tmpl: str, args, table: str):
     """Run a suite body on 8 fake devices (subprocess, so the forced device
     count never leaks into the caller's jax) and emit its rows."""
@@ -249,8 +340,8 @@ def _run_skew_suite(n_events, batch, seed,
 
 def _suite_of_row(row: dict) -> str:
     """Which suite produced a JSON row (for partial-run merging)."""
-    if row.get("suite") == "skew":
-        return "skew"
+    if row.get("suite") in ("skew", "persist"):
+        return row["suite"]
     return "sharded" if "mesh" in row else "engine"
 
 
@@ -265,6 +356,8 @@ def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
                                    seed)
     if "skew" in suites:
         rows += _run_skew_suite(n_events, batch, seed)
+    if "persist" in suites:
+        rows += _run_persist_suite(n_events, n_keys, batch, seed)
     try:
         # merge with the suite(s) NOT run this invocation so a partial run
         # never clobbers the other suites' trajectories
@@ -286,13 +379,14 @@ def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
-                    choices=("engine", "sharded", "skew", "all"),
+                    choices=("engine", "sharded", "skew", "persist", "all"),
                     help="engine: local throughput (+ masked-vs-compact "
                          "exact rows); sharded: 8-fake-device run_stream; "
                          "skew: block-vs-virtual layout padding over the "
-                         "Table 2 regimes")
+                         "Table 2 regimes; persist: write-behind durable "
+                         "fast path vs no-persistence baseline")
     ap.add_argument("--n-events", type=int, default=65_536)
     args = ap.parse_args()
-    suites = ("engine", "sharded", "skew") if args.suite == "all" \
+    suites = ("engine", "sharded", "skew", "persist") if args.suite == "all" \
         else (args.suite,)
     run(n_events=args.n_events, suites=suites)

@@ -5,14 +5,17 @@ resolve to a real file or directory in the repo.
     python scripts/check_docs.py [files...]     # default: README.md,
                                                 # benchmarks/README.md
 
-Checks three things:
+Checks four things:
   * markdown links `[text](target)` whose target is not an URL/anchor;
   * backtick-quoted repo paths in tables (e.g. `src/repro/core/engine.py`)
     — the paper-to-code crosswalk must never drift from the tree;
   * `layout="..."` option names: every name the docs mention must exist in
     `features/engine.py`'s LAYOUTS, and every LAYOUTS entry must be
     documented somewhere in the checked files (no dangling layout options
-    in either direction).
+    in either direction);
+  * `--suite <name>` bench-suite names: every name the docs mention must be
+    a `bench_engine.py` --suite choice, and every choice must be
+    documented (same no-dangling rule, both directions).
 Exits non-zero listing every unresolved reference.
 """
 from __future__ import annotations
@@ -34,6 +37,9 @@ _TICKED = re.compile(
 # sharded-layout option names as the docs spell them (`layout="virtual"`)
 _LAYOUT_MD = re.compile(r'layout="([A-Za-z0-9_]+)"')
 _LAYOUTS_SRC = "src/repro/features/engine.py"
+# bench-suite names as the docs spell them (`--suite persist`)
+_SUITE_MD = re.compile(r"--suite[= ]([A-Za-z0-9_]+)")
+_SUITES_SRC = "benchmarks/bench_engine.py"
 
 
 def code_layouts() -> set:
@@ -73,6 +79,41 @@ def check_layout_options(files) -> list:
     return bad
 
 
+def code_suites() -> set:
+    """The --suite choices of bench_engine.py, read from source."""
+    src = open(os.path.join(ROOT, _SUITES_SRC)).read()
+    m = re.search(r'choices=\(([^)]*)\)', src)
+    return set(re.findall(r'"([A-Za-z0-9_]+)"', m.group(1))) if m else set()
+
+
+def check_suite_options(files) -> list:
+    """No dangling `--suite` names between the docs and bench_engine.py.
+
+    Same shape as the layout lint: docs -> code runs over the files being
+    linted; code -> docs always consults the full DEFAULT_FILES set.
+    ('all' is the run-everything alias, exempt from documentation.)
+    """
+    code = code_suites()
+    bad = []
+
+    def names_in(f):
+        path = os.path.join(ROOT, f)
+        return _SUITE_MD.findall(open(path).read()) \
+            if os.path.exists(path) else []
+
+    for f in files:
+        for name in names_in(f):
+            if name not in code:
+                bad.append((f, f'--suite {name} not in '
+                               f'{_SUITES_SRC} choices'))
+    documented = {n for f in DEFAULT_FILES for n in names_in(f)}
+    for name in sorted(code - documented - {"all"}):
+        bad.append((DEFAULT_FILES[0],
+                    f'--suite {name} in {_SUITES_SRC} choices but '
+                    f'undocumented'))
+    return bad
+
+
 def check(md_path: str) -> list:
     base = os.path.dirname(os.path.join(ROOT, md_path))
     text = open(os.path.join(ROOT, md_path)).read()
@@ -102,6 +143,7 @@ def main(argv) -> int:
             continue
         bad += check(f)
     bad += check_layout_options(files)
+    bad += check_suite_options(files)
     for md, target in bad:
         print(f"UNRESOLVED {md}: {target}")
     print(f"checked {len(files)} file(s): "

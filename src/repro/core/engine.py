@@ -72,9 +72,9 @@ __all__ = ["init_state", "make_step", "materialize_features"]
 _FRESH_SENTINEL = -1e38
 
 
-def _seq_bits(t: jax.Array) -> jax.Array:
-    """Per-event RNG counter: the float32 bit pattern of the timestamp."""
-    return jax.lax.bitcast_convert_type(t.astype(jnp.float32), jnp.uint32)
+# Per-event RNG counter (single definition in core.thinning, shared with
+# the per-event worker for the persistence byte-parity contract).
+_seq_bits = thinning.time_bits
 
 
 def _fused_kw(cfg: EngineConfig) -> dict:

@@ -45,7 +45,7 @@ import numpy as np
 from repro.core.engine import make_step
 from repro.core.types import EngineConfig, Event, ProfileState, StepInfo
 
-__all__ = ["run_stream", "block_runner_for"]
+__all__ = ["run_stream", "block_runner_for", "sink_step_for"]
 
 
 def block_runner_for(step, collect_info: bool = True, donate: bool = True):
@@ -80,6 +80,52 @@ def block_runner_for(step, collect_info: bool = True, donate: bool = True):
     return jax.jit(run, donate_argnums=(0,) if donate else ())
 
 
+def sink_step_for(step, collect_info: bool = True, donate: bool = True):
+    """Per-group jitted step for the write-behind persistence path.
+
+    Unlike ``block_runner_for`` (one scan over all blocks), the sink path
+    dispatches one jitted call per *flush group* — a short scan over ``G``
+    consecutive event blocks (``run_stream``'s ``sink_group``) — so the
+    host can hand each group's outputs to a
+    ``streaming.persistence.WriteBehindSink`` between dispatches: device
+    compute of group k+1 overlaps serialization and storage of group k.
+    Grouping is the group-commit knob: larger ``G`` amortizes per-dispatch
+    host overhead, at the price of a longer durability lag (a crash loses
+    at most ``G`` blocks plus what the queue holds).
+
+    The returned callable is ``(state, events[G, B], rng,
+    gather_idx[G*B], *consts) -> (state, outs, (scalars[4, G*B],
+    agg[G*B, T, 3]))`` where the rows are the *post-update* profile rows
+    gathered at ``gather_idx`` (flat state row per lane; the local engine
+    passes the group's keys, the sharded engine its layout's flat rows) —
+    scalar columns stacked as ``[last_t, v_f, v_full, last_t_full]`` so
+    the host pays two device reads per group, not five.  Rows are
+    end-of-group snapshots; since persisted columns only change on a
+    key's own z events, each selected key's lane still carries exactly
+    the row the per-event worker would have stored last (byte parity is
+    window-size-independent).  The gather itself is pure data movement,
+    which is what makes the sink's stored bytes bit-identical to the
+    engine state.  The donation contract above applies per call: the
+    previous group's state is dead after each dispatch.
+
+    ``collect_info=False`` replaces the per-block StepInfo output with the
+    ``(z, writes)`` pair the sink actually needs, so XLA dead-code-
+    eliminates the per-event p/lam/features materialization exactly like
+    the scan path does.
+    """
+    def run(state: ProfileState, events: Event, rng, gather_idx, *consts):
+        def body(st, ev):
+            st, info = step(st, ev, rng, *consts)
+            return st, (info if collect_info else (info.z, info.writes))
+        state, outs = jax.lax.scan(body, state, events)
+        scal = jnp.stack([state.last_t[gather_idx], state.v_f[gather_idx],
+                          state.v_full[gather_idx],
+                          state.last_t_full[gather_idx]])
+        return state, outs, (scal, state.agg[gather_idx])
+
+    return jax.jit(run, donate_argnums=(0,) if donate else ())
+
+
 @functools.lru_cache(maxsize=None)
 def _block_runner(cfg: EngineConfig, mode: str, collect_info: bool,
                   donate: bool, exact_impl: str):
@@ -88,10 +134,19 @@ def _block_runner(cfg: EngineConfig, mode: str, collect_info: bool,
                             collect_info, donate)
 
 
+@functools.lru_cache(maxsize=None)
+def _sink_step(cfg: EngineConfig, mode: str, collect_info: bool,
+               donate: bool, exact_impl: str):
+    """One per-flush-group sink-path program per (cfg, mode, flags)."""
+    return sink_step_for(make_step(cfg, mode, exact_impl=exact_impl),
+                         collect_info, donate)
+
+
 def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
                *, batch: int = 4096, mode: str = "fast",
                rng: Optional[jax.Array] = None, collect_info: bool = True,
-               donate: bool = True, exact_impl: str = "compact"
+               donate: bool = True, exact_impl: str = "compact",
+               sink=None, sink_group: int = 4
                ) -> Tuple[ProfileState, Union[StepInfo, jax.Array]]:
     """Drive the engine over a flat stream in ``[n_batches, batch]`` blocks.
 
@@ -106,22 +161,49 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
     silently falls back to copying.)  ``exact_impl`` selects the exact-mode
     round schedule (see ``core.engine.make_step``); benchmarks use 'masked'
     to measure the segment-compaction win.
+
+    ``sink``: an optional ``streaming.persistence.WriteBehindSink``.  When
+    given, the stream is driven in flush groups of ``sink_group``
+    consecutive blocks (``sink_step_for``) and each group's decisions +
+    post-update rows are submitted for durable write-behind flush; device
+    compute of the next group overlaps storage of the previous one.
+    ``sink_group`` is the group-commit knob: larger groups amortize
+    per-dispatch host overhead against a longer durability lag.  The
+    caller owns the sink lifecycle — call ``sink.flush()`` (or close it)
+    to wait for the trailing groups.  State values are identical to the
+    single-scan path (the engine numerics are
+    compilation-context-invariant — ``kernels/detmath.py``).
     """
     if rng is None:
         rng = jax.random.PRNGKey(0)
     n = int(np.shape(keys)[0])
     pad = (-n) % batch
-    blocks = lambda x, fill: jnp.reshape(
-        jnp.pad(jnp.asarray(x), (0, pad), constant_values=fill),
-        (-1, batch))
-    events = Event(
-        key=blocks(np.asarray(keys, np.int32), 0),
-        q=blocks(np.asarray(qs, np.float32), 0.0),
-        t=blocks(np.asarray(ts, np.float32), 0.0),
-        valid=blocks(np.ones(n, bool), False))
+    host_blocks = lambda x, fill: np.reshape(
+        np.pad(np.asarray(x), (0, pad), constant_values=fill), (-1, batch))
+    key_h = host_blocks(np.asarray(keys, np.int32), 0)
+    q_h = host_blocks(np.asarray(qs, np.float32), 0.0)
+    t_h = host_blocks(np.asarray(ts, np.float32), 0.0)
+    valid_h = host_blocks(np.ones(n, bool), False)
 
-    state, info = _block_runner(cfg, mode, collect_info, donate, exact_impl)(
-        state, events, rng)
+    if sink is not None:
+        bstep = _sink_step(cfg, mode, collect_info, donate, exact_impl)
+
+        # groups are fed straight from host memory (one h2d per dispatch);
+        # the local engine's gather rows are simply the group's keys
+        def group_of(lo, hi):
+            ev = Event(key=key_h[lo:hi], q=q_h[lo:hi], t=t_h[lo:hi],
+                       valid=valid_h[lo:hi])
+            return ev, key_h[lo:hi].reshape(-1)
+
+        state, info = _drive_with_sink(
+            bstep, state, key_h.shape[0], max(1, int(sink_group)), group_of,
+            rng, sink, sink_keys=key_h, valid_host=valid_h,
+            collect_info=collect_info)
+    else:
+        events = Event(key=jnp.asarray(key_h), q=jnp.asarray(q_h),
+                       t=jnp.asarray(t_h), valid=jnp.asarray(valid_h))
+        state, info = _block_runner(cfg, mode, collect_info, donate,
+                                    exact_impl)(state, events, rng)
     if not collect_info:
         return state, info
     flat = lambda x: jnp.reshape(x, (-1,) + x.shape[2:])[:n]
@@ -129,3 +211,42 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
         z=flat(info.z), p=flat(info.p), lam_hat=flat(info.lam_hat),
         features=flat(info.features),
         writes=jnp.sum(info.writes).astype(jnp.int32))
+
+
+def _drive_with_sink(bstep, state, n_blocks, group, group_of, rng, sink, *,
+                     sink_keys, valid_host, collect_info, consts=()):
+    """Host flush-group loop for the write-behind path (shared with the
+    sharded engine).  The driver thread only dispatches and enqueues;
+    device arrays are handed to the sink as-is and the device->host
+    conversion happens on the flush thread, so storage work (and the
+    copies feeding it) overlaps the next group's compute.
+
+    ``group_of(lo, hi)``: the Event pytree for blocks [lo, hi) shaped
+    [G, B] (host arrays for the local engine, device-sharded for the mesh
+    path) plus the flat [G*B] state rows to gather.  ``sink_keys``:
+    [n_blocks, B] host array of *global* entity ids (the local engine's
+    keys are already global; the sharded engine reconstructs them from
+    its layout).  At most two jit shapes exist per run: the full group
+    and one trailing remainder group.
+    Returns (state, StepInfo-of-stacked-blocks) shaped like the scan path.
+    """
+    outs_all = []
+    for lo in range(0, n_blocks, group):
+        hi = min(lo + group, n_blocks)
+        ev, gidx = group_of(lo, hi)
+        state, outs, rows = bstep(state, ev, rng, gidx, *consts)
+        # enqueue device arrays; the flush thread converts + packs + stores
+        # (the bounded queue backpressures this loop when storage lags)
+        z = outs.z if collect_info else outs[0]
+        sink.submit(sink_keys[lo:hi].reshape(-1), z,
+                    valid_host[lo:hi].reshape(-1), rows)
+        outs_all.append(outs)
+
+    if not collect_info:
+        return state, jnp.asarray(np.concatenate(
+            [np.asarray(o[1], np.int32) for o in outs_all]))
+    outs_all = [jax.tree.map(np.asarray, o) for o in outs_all]
+    cat = lambda f: jnp.asarray(np.concatenate(
+        [getattr(o, f) for o in outs_all], axis=0))
+    return state, StepInfo(z=cat("z"), p=cat("p"), lam_hat=cat("lam_hat"),
+                           features=cat("features"), writes=cat("writes"))

@@ -67,6 +67,16 @@ def bernoulli_mask(rng: jax.Array, key_ids: jax.Array, seq_ids: jax.Array,
     return u < p
 
 
+def time_bits(t: jax.Array) -> jax.Array:
+    """Per-event RNG counter: the float32 bit pattern of the timestamp.
+
+    The single definition shared by the engine and the per-event worker —
+    both must feed identical counters to ``uniform_for_events`` for the
+    persistence byte-parity contract to hold.
+    """
+    return jax.lax.bitcast_convert_type(t.astype(jnp.float32), jnp.uint32)
+
+
 def uniform_for_events(rng: jax.Array, key_ids: jax.Array,
                        seq_ids: jax.Array) -> jax.Array:
     mixed = jax.vmap(

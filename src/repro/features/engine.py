@@ -60,6 +60,7 @@ from repro.core import stream as core_stream
 from repro.core.types import init_state
 from repro.distributed import rebalance
 from repro.distributed.sharding import axis_sizes
+from repro.streaming import persistence
 
 # The sharded layouts this engine supports; README.md documents the
 # contract of each and scripts/check_docs.py lints the two lists against
@@ -349,7 +350,9 @@ class ShardedFeatureEngine:
     def run_stream(self, state: ProfileState, keys, qs, ts, *,
                    batch_per_shard: int = 1024,
                    rng: Optional[jax.Array] = None,
-                   collect_info: bool = True, donate: bool = True
+                   collect_info: bool = True, donate: bool = True,
+                   sink: Optional["persistence.WriteBehindSink"] = None,
+                   sink_group: int = 4
                    ) -> Tuple[ProfileState, Union[StepInfo, jax.Array]]:
         """Drive the sharded engine over a flat stream in one dispatch.
 
@@ -361,11 +364,22 @@ class ShardedFeatureEngine:
         after the call when ``donate=True``; layout tables ride as
         non-donated trailing consts and stay live).
 
+        ``sink``: optional write-behind persistence sink (``make_sink``).
+        The stream is then driven in flush groups of ``sink_group``
+        blocks (one dispatch per group — the group-commit knob) and each
+        group's thinned rows are flushed to the sink's per-partition
+        stores — partitions aligned with this engine's layout routing —
+        while the next group computes.  Caller flushes.
+
         Returns the final state plus either a StepInfo in *stream order*
         (``collect_info=True``) or per-block write counts.
         """
         if rng is None:
             rng = jax.random.PRNGKey(0)
+        if sink is not None:
+            return self._run_stream_sink(state, keys, qs, ts,
+                                         batch_per_shard, rng, collect_info,
+                                         donate, sink, sink_group)
         events, slot = self.partition_stream(keys, qs, ts, batch_per_shard)
         key = (collect_info, donate)
         if key not in self._runners:
@@ -380,6 +394,101 @@ class ShardedFeatureEngine:
             z=flat(info.z), p=flat(info.p), lam_hat=flat(info.lam_hat),
             features=flat(info.features),
             writes=jnp.sum(info.writes).astype(jnp.int32))
+
+    def _run_stream_sink(self, state, keys, qs, ts, batch_per_shard, rng,
+                         collect_info, donate, sink, sink_group):
+        """Write-behind block loop for the sharded path.
+
+        Reuses ``core.stream._drive_with_sink``; the per-lane gather index
+        is the layout's flat state row (``shard * E_local + local``,
+        reconstructed on device from the block column), and the sink keys
+        are *global* entity ids (arithmetic under the block layout, via the
+        ``gid_of_row`` table under the virtual layout) so stored rows are
+        keyed exactly like the per-event worker's.
+        """
+        key = np.asarray(keys, np.int32)
+        q = np.asarray(qs, np.float32)
+        t = np.asarray(ts, np.float32)
+        n, B = self.n_shards, int(batch_per_shard)
+        shard, local = self.route(key)
+        out_key, out_q, out_t, out_valid, slot, n_blocks = \
+            route_stream_blocks(shard, local, q, t, n, B)
+        W = n * B
+        E_local = self.entities_per_shard
+        shard_of_col = np.repeat(np.arange(n, dtype=np.int64), B)
+        flat_host = shard_of_col[None, :] * E_local \
+            + out_key.reshape(n_blocks, W)
+        if self.layout == "virtual":
+            gid_host = np.asarray(self.vlayout.gid_of_row)[flat_host]
+        else:
+            gid_host = out_key.reshape(n_blocks, W).astype(np.int64) * n \
+                + shard_of_col[None, :]
+        kb = out_key.reshape(n_blocks, W)
+        qb = out_q.reshape(n_blocks, W)
+        tb = out_t.reshape(n_blocks, W)
+        vb = out_valid.reshape(n_blocks, W)
+        if self.mesh is not None:
+            sh = NamedSharding(self.mesh, P(None, self.data_axes))
+            put = lambda x: jax.device_put(jnp.asarray(x), sh)
+        else:
+            put = lambda x: x
+
+        def group_of(lo, hi):
+            ev = Event(key=put(kb[lo:hi]), q=put(qb[lo:hi]),
+                       t=put(tb[lo:hi]), valid=put(vb[lo:hi]))
+            return ev, flat_host[lo:hi].reshape(-1)
+
+        rkey = ("sink", collect_info, donate)
+        if rkey not in self._runners:
+            self._runners[rkey] = core_stream.sink_step_for(
+                self._raw_step(), collect_info, donate)
+        state, info = core_stream._drive_with_sink(
+            self._runners[rkey], state, n_blocks, max(1, int(sink_group)),
+            group_of, rng, sink, sink_keys=gid_host, valid_host=vb,
+            collect_info=collect_info, consts=self._step_consts)
+        if not collect_info:
+            return state, info
+        flat = lambda x: jnp.reshape(x, (-1,) + x.shape[2:])[slot]
+        return state, StepInfo(
+            z=flat(info.z), p=flat(info.p), lam_hat=flat(info.lam_hat),
+            features=flat(info.features),
+            writes=jnp.sum(info.writes).astype(jnp.int32))
+
+    # ------------------------------------------------------- persistence
+    def make_sink(self, **kw) -> "persistence.WriteBehindSink":
+        """A ``WriteBehindSink`` whose partitions mirror this engine's
+        layout: key -> partition is exactly the layout's key -> shard map,
+        so every durable row lands on the store owned by the shard that
+        computed it (no cross-partition traffic — the §5.3 no-coordination
+        property extends to storage)."""
+        return persistence.WriteBehindSink(
+            self.cfg, n_partitions=self.n_shards,
+            partition_fn=lambda ks: self.route(np.asarray(ks))[0], **kw)
+
+    def _row_of_key_host(self) -> np.ndarray:
+        """Host map: global entity id -> flat state row, per the layout."""
+        if self.layout == "virtual":
+            return np.asarray(self.vlayout.row_of_key)
+        k = np.arange(self.num_entities, dtype=np.int64)
+        return (k % self.n_shards) * self.entities_per_shard \
+            + k // self.n_shards
+
+    def hydrate_state(self, stores) -> ProfileState:
+        """Rebuild the mesh-sharded state from durable partition stores.
+
+        The restart path: ``hydrate_state(sink.stores)`` after a (simulated)
+        process loss yields a state whose persisted columns are bit-exact to
+        the lost in-memory state (exact mode) — pinned by
+        ``tests/test_persistence.py`` and the serving restart demo.
+        """
+        state = persistence.hydrate_state(
+            stores, self.num_entities, len(self.cfg.taus),
+            row_of_key=self._row_of_key_host())
+        if self.mesh is None:
+            return state
+        spec = jax.tree.map(lambda _: P(self.data_axes), state)
+        return jax.device_put(state, jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec))
 
     def materialize(self, state: ProfileState, keys: jax.Array,
                     t: jax.Array) -> jax.Array:

@@ -1,8 +1,26 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+``thinning_rmw_ref`` is additionally the *numerics contract* for the
+persistence path: it must produce bit-identical float32 outputs in every
+compilation context (the scan-based block driver, the write-behind sink's
+per-block jit, a per-event B=1 call from ``streaming/worker.py``).  Three
+spellings below exist solely for that contract — see ``kernels/detmath.py``
+for the measured context-dependence they pin down:
+
+* decay arguments are written ``dt * (-1/tau)``, never ``-(dt/tau)`` (XLA's
+  divide-by-constant rewrite fires only in some contexts);
+* every exp on the decision/update path goes through ``detmath.det_exp``;
+* multiply-accumulate junctions that feed persisted columns or the
+  inclusion probability are ``detmath.pin``-ed so LLVM's FMA contraction
+  (which reaches across both ``optimization_barrier`` and guarding
+  ``select``s) cannot re-round them differently per context.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.detmath import det_exp, pin, zero32
 
 
 def decay_scan_ref(a: jax.Array, u: jax.Array,
@@ -37,25 +55,39 @@ def thinning_rmw_ref(taus, last_t, v_f, agg_flat, q, t, u, valid,
     if last_t_full is None:
         last_t_full = jnp.full_like(last_t, -1e38)
     agg = agg_flat.reshape(B, T, 3)
+    # pin() zeros must come from data that is *runtime* in every caller —
+    # the uniforms qualify (valid does not: several callers pass a constant
+    # mask, which would const-fold the pin away and re-admit contraction).
+    z32 = zero32(u)
     fresh = last_t < -1e30
     dt = jnp.where(fresh, 0.0, jnp.maximum(t - last_t, 0.0))
-    beta_tau = jnp.where(fresh[:, None], 0.0,
-                         jnp.exp(-dt[:, None] / taus[None, :]))
-    agg_now = agg * beta_tau[..., None]
+    fresh_full = last_t_full < -1e30
+    dt_full = jnp.where(fresh_full, 0.0, jnp.maximum(t - last_t_full, 0.0))
+    # dt * (-1/tau) spelling + det_exp: see module docstring.  All three
+    # decay factors share one packed det_exp call (elementwise, so packing
+    # cannot change any bit).
+    neg_inv_taus = -1.0 / taus
+    neg_inv_h = -1.0 / h
+    inv_h = 1.0 / h
+    packed = det_exp(jnp.concatenate(
+        [dt[:, None] * neg_inv_taus[None, :],
+         (dt * neg_inv_h)[:, None], (dt_full * neg_inv_h)[:, None]], axis=1),
+        z32[:, None])
+    beta_tau = jnp.where(fresh[:, None], 0.0, packed[:, :T])
+    beta_h = jnp.where(fresh, 0.0, packed[:, T])
+    beta_hf = jnp.where(fresh_full, 0.0, packed[:, T + 1])
+    agg_now = pin(agg * beta_tau[..., None], z32[:, None, None])
 
     cnt, sm, sq = agg_now[..., 0], agg_now[..., 1], agg_now[..., 2]
     mean = sm / jnp.maximum(cnt, 1e-12)
-    var = jnp.maximum(sq / jnp.maximum(cnt, 1e-12) - mean * mean, 0.0)
+    var = jnp.maximum(sq / jnp.maximum(cnt, 1e-12)
+                      - pin(mean * mean, z32[:, None]), 0.0)
     feats = jnp.concatenate([cnt, sm, mean, jnp.sqrt(var)], axis=1)
 
-    beta_h = jnp.where(fresh, 0.0, jnp.exp(-dt / h))
-    fresh_full = last_t_full < -1e30
-    dt_full = jnp.where(fresh_full, 0.0, jnp.maximum(t - last_t_full, 0.0))
-    beta_hf = jnp.where(fresh_full, 0.0, jnp.exp(-dt_full / h))
     if policy == "full":
-        lam = (1.0 + beta_hf * v_full) / h
+        lam = (1.0 + pin(beta_hf * v_full, z32)) * inv_h
     else:
-        lam = (1.0 + beta_h * v_f) / h
+        lam = (1.0 + pin(beta_h * v_f, z32)) * inv_h
     base = jnp.minimum(1.0, budget / jnp.maximum(lam, 1e-30))
     if policy == "unfiltered":
         p = jnp.ones_like(lam)
@@ -67,8 +99,13 @@ def thinning_rmw_ref(taus, last_t, v_f, agg_flat, q, t, u, valid,
         sg = jnp.where(cold, 1e8, jnp.sqrt(var[:, mu_tau_index]) + 1e-8)
         zs = jnp.clip((q - mu_w) / jnp.maximum(sg, 1e-8), -8.0, 8.0)
         b = jnp.clip(base, 1e-6, 1.0 - 1e-6)
-        logit = jnp.log(b) - jnp.log1p(-b) + alpha * zs
-        p = jnp.where(base >= 1.0 - 1e-6, 1.0, jax.nn.sigmoid(logit))
+        # sigmoid(logit(b) + alpha*zs) rewritten log-free as
+        # 1 / (1 + ((1-b)/b) * exp(-alpha*zs)): algebraically identical,
+        # but every transcendental on the decision path stays det_exp.
+        odds = (1.0 - b) / b
+        e_tilt = det_exp(zs * (-alpha), z32)
+        p = jnp.where(base >= 1.0 - 1e-6, 1.0,
+                      1.0 / (1.0 + pin(odds * e_tilt, z32)))
     else:  # 'pp' and the decision half of 'full'
         p = base
     p = jnp.clip(p, min_p, 1.0)
@@ -77,11 +114,12 @@ def thinning_rmw_ref(taus, last_t, v_f, agg_flat, q, t, u, valid,
     z = (u < p) & valid_b
     inv_p = jnp.where(z, 1.0 / p, 0.0)
     w = jnp.stack([jnp.ones_like(q), q, q * q], axis=-1)       # [B, 3]
-    agg_new = agg_now + inv_p[:, None, None] * w[:, None, :]
+    agg_new = agg_now + pin(inv_p[:, None, None] * w[:, None, :],
+                            z32[:, None, None])
     new_agg = jnp.where(z[:, None, None], agg_new, agg)
-    new_v_f = jnp.where(z, inv_p + beta_h * v_f, v_f)
+    new_v_f = jnp.where(z, inv_p + pin(beta_h * v_f, z32), v_f)
     new_last_t = jnp.where(z, t, last_t)
-    new_v_full = jnp.where(valid_b, 1.0 + beta_hf * v_full, v_full)
+    new_v_full = jnp.where(valid_b, 1.0 + pin(beta_hf * v_full, z32), v_full)
     new_last_t_full = jnp.where(valid_b, t, last_t_full)
     return (new_last_t, new_v_f, new_agg.reshape(B, 3 * T), z, p, feats,
             lam, new_v_full, new_last_t_full)

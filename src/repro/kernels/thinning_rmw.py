@@ -54,7 +54,9 @@ def _kernel(taus_ref, last_t_ref, v_f_ref, agg_ref, q_ref, t_ref, u_ref,
     dt = jnp.where(fresh, 0.0, jnp.maximum(t - last_t, 0.0))
 
     # ---- lazy decay to decision time (per tau; count/sum/sumsq share beta)
-    beta_tau = jnp.exp(-dt / taus[None, :])                    # [bb, T]
+    # dt * (-1/tau) spelling (not -(dt/tau)): keeps rounding identical to
+    # the jnp reference across compilation contexts — see ref.py.
+    beta_tau = jnp.exp(dt * (-1.0 / taus[None, :]))            # [bb, T]
     beta_tau = jnp.where(fresh, 0.0, beta_tau)
     beta3 = jnp.repeat(beta_tau, 3, axis=1)                    # [bb, 3T]
     agg_now = agg * beta3
@@ -67,14 +69,14 @@ def _kernel(taus_ref, last_t_ref, v_f_ref, agg_ref, q_ref, t_ref, u_ref,
     feat_ref[...] = jnp.concatenate([cnt, sm, mean, jnp.sqrt(var)], axis=1)
 
     # ---- intensity estimate + inclusion probability (Eq. 2 / Eq. 4 / Eq. 5)
-    beta_h = jnp.where(fresh, 0.0, jnp.exp(-dt / h))
+    beta_h = jnp.where(fresh, 0.0, jnp.exp(dt * (-1.0 / h)))
     fresh_full = last_t_full < -1e30
     dt_full = jnp.where(fresh_full, 0.0, jnp.maximum(t - last_t_full, 0.0))
-    beta_hf = jnp.where(fresh_full, 0.0, jnp.exp(-dt_full / h))
+    beta_hf = jnp.where(fresh_full, 0.0, jnp.exp(dt_full * (-1.0 / h)))
     if policy == "full":
-        lam = (1.0 + beta_hf * v_full) / h                     # [bb, 1]
+        lam = (1.0 + beta_hf * v_full) * (1.0 / h)             # [bb, 1]
     else:
-        lam = (1.0 + beta_h * v_f) / h
+        lam = (1.0 + beta_h * v_f) * (1.0 / h)
     lam_ref[...] = lam
     base = jnp.minimum(1.0, budget / jnp.maximum(lam, 1e-30))
     if policy == "unfiltered":
@@ -88,8 +90,9 @@ def _kernel(taus_ref, last_t_ref, v_f_ref, agg_ref, q_ref, t_ref, u_ref,
                        jnp.sqrt(var[:, mu_tau_index:mu_tau_index + 1]) + 1e-8)
         zs = jnp.clip((q - mu_w) / jnp.maximum(sg, 1e-8), -8.0, 8.0)
         b = jnp.clip(base, 1e-6, 1.0 - 1e-6)
-        logit = jnp.log(b) - jnp.log1p(-b) + alpha * zs
-        p = jnp.where(base >= 1.0 - 1e-6, 1.0, jax.nn.sigmoid(logit))
+        # log-free sigmoid(logit(b) + alpha*zs) — same form as ref.py
+        p = jnp.where(base >= 1.0 - 1e-6, 1.0,
+                      1.0 / (1.0 + ((1.0 - b) / b) * jnp.exp(zs * (-alpha))))
     else:  # 'pp' and the decision half of 'full'
         p = base
     p = jnp.clip(p, min_p, 1.0)

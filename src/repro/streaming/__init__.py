@@ -1,5 +1,6 @@
 """Streaming substrate: workload generation, byte-backed KV store with an
-LSM cost model, per-event workers, and closed-loop / fixed-rate replay."""
-from repro.streaming import kvstore, replay, worker, workload
+LSM cost model, per-event workers, write-behind persistence for the
+vectorized fast path, and closed-loop / fixed-rate replay."""
+from repro.streaming import kvstore, persistence, replay, worker, workload
 
-__all__ = ["kvstore", "replay", "worker", "workload"]
+__all__ = ["kvstore", "persistence", "replay", "worker", "workload"]

@@ -8,6 +8,9 @@ model (b)/(c) explicitly:
 
   * storage service time: get ~ Gamma(k, theta_r), put ~ Gamma(k, theta_w),
     defaults shaped like SSD EBS latencies (~100us reads / ~300us writes);
+    batched ops (``multi_get``/``multi_put``) pay one such seek-shaped draw
+    plus a small per-row sequential cost (``StorageModel.batch_row_us``) —
+    the amortization a write-behind sink exists to exploit;
   * write amplification: leveled-compaction model following Dayan et al. —
     WAF ~= 1 (WAL+L0) + sum over levels of the size-ratio amortization, with
     level count driven by total ingested bytes, so lower ingest rates sit
@@ -15,13 +18,19 @@ model (b)/(c) explicitly:
 
 The store counts every op and byte, which is what §Dry-run / Table 3
 benchmarks read out.
+
+SerDe exists in two equivalent forms: the scalar ``pack``/``unpack`` used
+by the per-event worker, and the vectorized ``pack_rows``/``unpack_rows``
+used by the write-behind sink (``streaming/persistence.py``) over ``[N]``
+numpy columns.  Both produce the identical byte layout — the vectorized
+form is a numpy structured-dtype view of the same packed struct — and the
+test suite pins them bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
 import struct
-import time
-from typing import Dict, Optional
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -34,6 +43,7 @@ class StorageModel:
     read_us: float = 100.0
     write_us: float = 300.0
     gamma_shape: float = 4.0
+    batch_row_us: float = 5.0       # marginal per-row cost inside one batch op
     memtable_bytes: int = 1 << 16   # 64 KiB flush unit (CPU-scale streams)
     size_ratio: int = 10            # leveled-compaction fanout T
     bytes_per_entry: int = 128
@@ -41,6 +51,19 @@ class StorageModel:
     def service_time_s(self, rng: np.random.Generator, write: bool) -> float:
         mean = self.write_us if write else self.read_us
         return rng.gamma(self.gamma_shape, mean / self.gamma_shape) * 1e-6
+
+    def batch_service_time_s(self, rng: np.random.Generator, write: bool,
+                             n_rows: int) -> float:
+        """One batched op: a single seek-shaped draw + sequential row cost.
+
+        Models what an embedded store's MultiGet / WriteBatch achieves: the
+        fixed per-op latency is paid once, each additional row only adds
+        ``batch_row_us`` of sequential work.
+        """
+        if n_rows <= 0:
+            return 0.0
+        return (self.service_time_s(rng, write)
+                + (n_rows - 1) * self.batch_row_us * 1e-6)
 
     def waf(self, bytes_ingested: int) -> float:
         """Leveled-compaction write amplification at this ingest volume.
@@ -62,13 +85,21 @@ class SerDe:
     """Binary profile-row codec (the paper's SerDe bottleneck, made real).
 
     Layout: magic u16, n_taus u16, last_t f64, v_f f64, then n_taus * 3 f32
-    aggregates, then v_full f64, last_t_full f64.
+    aggregates, then v_full f64, last_t_full f64.  ``pack_rows`` /
+    ``unpack_rows`` are the vectorized forms over ``[N]`` columns; they are
+    byte-identical to the scalar forms (structured-dtype view of the same
+    packed layout, no alignment padding).
     """
 
     def __init__(self, n_taus: int):
         self.n_taus = n_taus
         self._head = struct.Struct("<HHdd")
         self._tail = struct.Struct("<dd")
+        self._row_dtype = np.dtype([
+            ("magic", "<u2"), ("n", "<u2"), ("last_t", "<f8"), ("v_f", "<f8"),
+            ("agg", "<f4", (n_taus, 3)),
+            ("v_full", "<f8"), ("last_t_full", "<f8")])
+        assert self._row_dtype.itemsize == self.row_bytes()  # packed layout
 
     def row_bytes(self) -> int:
         return self._head.size + self.n_taus * 3 * 4 + self._tail.size
@@ -80,19 +111,71 @@ class SerDe:
                 + self._tail.pack(v_full, last_t_full))
 
     def unpack(self, raw: bytes):
+        if len(raw) < self.row_bytes():
+            raise ValueError(
+                f"truncated profile row: {len(raw)} < {self.row_bytes()} bytes")
         magic, n, last_t, v_f = self._head.unpack_from(raw, 0)
-        assert magic == PROFILE_MAGIC and n == self.n_taus, "corrupt row"
+        if magic != PROFILE_MAGIC or n != self.n_taus:
+            # explicit (not `assert`): corruption must surface under -O too
+            raise ValueError(
+                f"corrupt profile row: magic={magic:#x} n_taus={n} "
+                f"(want {PROFILE_MAGIC:#x}/{self.n_taus})")
         off = self._head.size
         agg = np.frombuffer(raw, "<f4", count=n * 3, offset=off
                             ).reshape(n, 3).copy()
         v_full, last_t_full = self._tail.unpack_from(raw, off + n * 3 * 4)
         return last_t, v_f, agg, v_full, last_t_full
 
+    # ------------------------------------------------------ vectorized form
+    def pack_rows(self, last_t, v_f, agg, v_full, last_t_full) -> np.ndarray:
+        """Pack ``[N]`` row columns into a ``[N, row_bytes] uint8`` matrix.
+
+        ``agg`` is ``[N, n_taus, 3]``; scalar columns are ``[N]``.  Row ``i``
+        of the result is byte-identical to ``pack(last_t[i], ...)``.
+        """
+        n = np.shape(last_t)[0]
+        out = np.empty(n, self._row_dtype)
+        out["magic"] = PROFILE_MAGIC
+        out["n"] = self.n_taus
+        out["last_t"] = np.asarray(last_t, np.float64)
+        out["v_f"] = np.asarray(v_f, np.float64)
+        out["agg"] = np.asarray(agg, np.float32).reshape(n, self.n_taus, 3)
+        out["v_full"] = np.asarray(v_full, np.float64)
+        out["last_t_full"] = np.asarray(last_t_full, np.float64)
+        return out.view(np.uint8).reshape(n, self.row_bytes())
+
+    def unpack_rows(self, raws: Sequence[bytes]):
+        """Inverse of ``pack_rows`` over a sequence of row byte strings.
+
+        Returns ``(last_t, v_f, agg, v_full, last_t_full)`` numpy columns
+        (``agg`` is ``[N, n_taus, 3] float32``).  Raises ``ValueError`` on a
+        truncated buffer or any corrupt row, like the scalar ``unpack``.
+        """
+        buf = b"".join(raws)
+        rb = self.row_bytes()
+        if len(buf) % rb:
+            raise ValueError(
+                f"truncated profile rows: {len(buf)} is not a multiple of "
+                f"row_bytes={rb}")
+        arr = np.frombuffer(buf, self._row_dtype)
+        if arr.size and not (np.all(arr["magic"] == PROFILE_MAGIC)
+                             and np.all(arr["n"] == self.n_taus)):
+            bad = int(np.argmax((arr["magic"] != PROFILE_MAGIC)
+                                | (arr["n"] != self.n_taus)))
+            raise ValueError(
+                f"corrupt profile row at index {bad}: "
+                f"magic={int(arr['magic'][bad]):#x} n_taus={int(arr['n'][bad])} "
+                f"(want {PROFILE_MAGIC:#x}/{self.n_taus})")
+        return (arr["last_t"].copy(), arr["v_f"].copy(), arr["agg"].copy(),
+                arr["v_full"].copy(), arr["last_t_full"].copy())
+
 
 @dataclasses.dataclass
 class StoreCounters:
     gets: int = 0
     puts: int = 0
+    batch_gets: int = 0
+    batch_puts: int = 0
     bytes_read: int = 0
     bytes_written: int = 0
     serde_s: float = 0.0
@@ -127,10 +210,48 @@ class KVStore:
             self.rng, write=True)
         self.data[key] = raw
 
+    # ------------------------------------------------------- batched ops
+    def multi_get(self, keys: Iterable[int]) -> List[Optional[bytes]]:
+        """Batched get: one seek draw + per-row sequential cost (MultiGet)."""
+        keys = list(keys)
+        out = []
+        for k in keys:
+            raw = self.data.get(int(k))
+            if raw is not None:
+                self.counters.bytes_read += len(raw)
+            out.append(raw)
+        self.counters.gets += len(keys)
+        self.counters.batch_gets += 1
+        self.counters.modeled_io_s += self.model.batch_service_time_s(
+            self.rng, write=False, n_rows=len(keys))
+        return out
+
+    def multi_put(self, keys, rows) -> None:
+        """Batched put (WriteBatch): ``rows`` is a ``[N, row_bytes]`` uint8
+        matrix (``SerDe.pack_rows`` output) or a sequence of byte strings."""
+        keys = np.asarray(keys)
+        n = len(keys)
+        for i in range(n):
+            raw = rows[i].tobytes() if isinstance(rows[i], np.ndarray) \
+                else bytes(rows[i])
+            self.counters.bytes_written += len(raw)
+            self.data[int(keys[i])] = raw
+        self.counters.puts += n
+        self.counters.batch_puts += 1
+        self.counters.modeled_io_s += self.model.batch_service_time_s(
+            self.rng, write=True, n_rows=n)
+
+    def keys(self) -> Tuple[int, ...]:
+        """Stored keys in deterministic (sorted) order — the recovery scan."""
+        return tuple(sorted(self.data))
+
     def waf(self) -> float:
         return self.model.waf(self.counters.bytes_written)
 
 
 def partition_of(key: int, n_partitions: int) -> int:
-    """Deterministic key routing (fibonacci hash — stable across runs)."""
-    return ((key * 2654435761) & 0xFFFFFFFF) % n_partitions
+    """Deterministic key routing, aligned with the sharded engine's block
+    layout (``features/engine.py``: shard ``s`` owns ``key % n_shards == s``)
+    so per-event workers and the write-behind sink land a key on the same
+    partition as the shard that computes it."""
+    return int(key) % n_partitions

@@ -1,0 +1,302 @@
+"""Write-behind durable persistence for the vectorized fast path.
+
+The paper's decoupling argument (§1, §5) separates *inference* — every event
+is scored — from *state updates* — durable read-modify-writes gated by
+thinning.  Before this module, the repo realized only half of that split:
+the scalar ``FeatureWorker`` exercised the real SerDe + storage path per
+event, while the production-speed JAX engine kept all state in device
+memory and never persisted a byte.  ``WriteBehindSink`` closes the gap the
+way low-latency stateful stream processors hide storage behind compute
+(cf. Zapridou & Ailamaki's prefetch-overlap design): the blocked engine
+streams ahead on device while a background thread serializes and lands the
+thinned rows of completed blocks.
+
+Data flow per event block (see ``core.stream.run_stream(..., sink=...)``):
+
+1. the jitted per-block step updates the donated state and *gathers* each
+   block lane's post-update profile row (pure data movement — stored bytes
+   are bit-identical to the engine state, which is what makes
+   ``hydrate_state`` exact);
+2. the host hands ``(keys, z, valid, rows)`` to ``submit`` — a bounded
+   queue, so a slow store eventually backpressures the driver instead of
+   buffering unboundedly;
+3. the flush thread dedupes keys intra-block (last-write-wins: gathered
+   rows are end-of-block snapshots, so every lane of a key already carries
+   the key's final row), packs them with the vectorized SerDe, and lands
+   them in per-partition ``KVStore``s via batched ``multi_put`` — storage
+   IO overlaps the next block's compute.
+
+Byte-parity contract (CI-enforced, ``tests/test_persistence.py``): for the
+same stream/policy/rng, the bytes this sink stores equal the bytes the
+per-event ``FeatureWorker`` stores, and ``hydrate_state(stores)`` rebuilds
+the exact-mode engine state bit-for-bit.  Two fine points make that exact:
+
+* the decision+update math is compilation-context-invariant (see
+  ``kernels/detmath.py``) — the engine's blocked program and the worker's
+  per-event program round identically;
+* the full-stream control column (``v_full``/``last_t_full``) is persisted
+  only under the full-stream policies ('full'/'unfiltered') that actually
+  maintain it durably.  Thinning policies keep it in device memory only —
+  the paper's point that a real deployment would not maintain it at all
+  (see ``core.types.ProfileState``) — so stored rows carry the fresh
+  (0.0, -inf) control column, exactly like the per-event worker, and
+  recovery restarts the control estimate cold.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import EngineConfig, ProfileState
+from repro.streaming.kvstore import KVStore, SerDe, StorageModel
+
+__all__ = ["WriteBehindSink", "SinkStats", "hydrate_state",
+           "FULL_STREAM_POLICIES"]
+
+# Policies whose durable rows include the full-stream control column (they
+# write back on every event, so the stored column stays current).
+FULL_STREAM_POLICIES = ("full", "unfiltered")
+
+_STOP = object()
+
+
+@dataclasses.dataclass
+class SinkStats:
+    """Host-side sink accounting (store-side counters live on the stores)."""
+    blocks: int = 0
+    events_seen: int = 0        # valid lanes observed
+    selected: int = 0           # lanes whose row is durable this block
+    rows_stored: int = 0        # after intra-block last-write-wins dedupe
+    dedup_saved: int = 0        # selected - rows_stored
+    serde_s: float = 0.0        # vectorized pack time (background thread)
+    flush_s: float = 0.0        # total background busy time
+    submit_wait_s: float = 0.0  # backpressure: time submit() blocked
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class WriteBehindSink:
+    """Asynchronous durable sink for engine block outputs.
+
+    ``n_partitions``/``partition_fn`` mirror the sharded engine's key
+    routing (default: the block layout's ``key % n_partitions``) so each
+    stored key lands on the partition owned by the shard that computes it;
+    ``ShardedFeatureEngine.make_sink`` passes its layout's ``route``.
+
+    ``queue_depth`` bounds in-flight blocks (default 2 = double buffering:
+    one block flushing while the next computes).  ``submit`` blocks when
+    the store cannot keep up — backpressure, not unbounded buffering.
+    ``queue_depth=0`` disables the background thread entirely and flushes
+    synchronously inside ``submit`` — the serial-flush strawman the
+    ``bench_engine --suite persist`` rows compare write-behind against.
+
+    Thread-safety: ``submit``/``flush``/``close`` are driver-thread calls;
+    the flush thread owns the stores until ``flush``/``close`` returns.
+    """
+
+    def __init__(self, cfg: EngineConfig, *,
+                 n_partitions: int = 1,
+                 partition_fn: Optional[Callable[[np.ndarray], np.ndarray]]
+                 = None,
+                 stores: Optional[List[KVStore]] = None,
+                 storage: Optional[StorageModel] = None,
+                 seed: int = 0, queue_depth: int = 2):
+        self.cfg = cfg
+        self.serde = SerDe(len(cfg.taus))
+        self.full_stream = cfg.policy in FULL_STREAM_POLICIES
+        if stores is not None:
+            self.stores = list(stores)
+        else:
+            self.stores = [KVStore(storage or StorageModel(), seed=seed + i)
+                           for i in range(n_partitions)]
+        self._partition_fn = partition_fn or \
+            (lambda keys: keys % len(self.stores))
+        self.stats = SinkStats()
+        self._exc: Optional[BaseException] = None
+        self._closed = False
+        self._serial = queue_depth == 0
+        if self._serial:
+            self._q = self._thread = None
+        else:
+            self._q = queue.Queue(maxsize=queue_depth)
+            self._thread = threading.Thread(
+                target=self._drain, name="write-behind-sink", daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------ driver
+    def submit(self, keys, z, valid, rows) -> None:
+        """Queue one block for durable flush.
+
+        ``keys``: [B] global entity ids; ``z``: [B] persistence decisions;
+        ``valid``: [B] padding mask; ``rows``: the block's post-update
+        profile rows gathered per lane — either the driver's stacked form
+        ``(scalars[4, B], agg[B, T, 3])`` with scalar columns ordered
+        ``[last_t, v_f, v_full, last_t_full]`` (``core.stream.
+        sink_step_for``), or the flat 5-tuple ``(last_t, v_f, agg, v_full,
+        last_t_full)``.  Arguments may be device arrays: the device->host
+        conversion happens on the flush thread, overlapping the next
+        block's compute.  Blocks (bounded queue) when ``queue_depth``
+        flushes are already in flight — backpressure, not buffering.
+        """
+        if self._closed:
+            # the drain thread is gone: enqueueing would silently drop
+            # rows and eventually deadlock on the bounded queue
+            raise RuntimeError("submit() on a closed WriteBehindSink")
+        self._check()
+        if self._serial:
+            self._flush_block(keys, z, valid, rows)
+            return
+        t0 = time.perf_counter()
+        self._q.put((keys, z, valid, rows))
+        self.stats.submit_wait_s += time.perf_counter() - t0
+
+    def flush(self) -> dict:
+        """Block until every submitted block is durably stored."""
+        self._check()
+        if not self._serial:
+            self._q.join()
+        self._check()
+        return self.snapshot()
+
+    def close(self) -> None:
+        """Drain and stop the flush thread (idempotent)."""
+        if not self._closed:
+            self._closed = True
+            if not self._serial:
+                self._q.put(_STOP)
+                self._thread.join()
+        self._check()
+
+    def __enter__(self) -> "WriteBehindSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def snapshot(self) -> dict:
+        """Sink + per-partition store counters, aggregated."""
+        agg = {"puts": 0, "gets": 0, "batch_puts": 0, "bytes_written": 0,
+               "modeled_io_s": 0.0, "store_serde_s": 0.0}
+        for s in self.stores:
+            c = s.counters
+            agg["puts"] += c.puts
+            agg["gets"] += c.gets
+            agg["batch_puts"] += c.batch_puts
+            agg["bytes_written"] += c.bytes_written
+            agg["modeled_io_s"] += c.modeled_io_s
+            agg["store_serde_s"] += c.serde_s
+        agg["waf"] = max((s.waf() for s in self.stores), default=1.0)
+        agg.update(self.stats.snapshot())
+        return agg
+
+    def _check(self) -> None:
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise RuntimeError("write-behind flush failed") from exc
+
+    # ------------------------------------------------------ flush thread
+    def _drain(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is _STOP:
+                self._q.task_done()
+                return
+            try:
+                if self._exc is None:
+                    self._flush_block(*item)
+            except BaseException as e:       # surfaced on next driver call
+                self._exc = e
+            finally:
+                self._q.task_done()
+
+    def _flush_block(self, keys, z, valid, rows) -> None:
+        t0 = time.perf_counter()
+        # flush groups arrive with z shaped [G, B]; lanes are flat below
+        keys = np.asarray(keys).reshape(-1)
+        z = np.asarray(z).reshape(-1)
+        valid = np.asarray(valid).reshape(-1)
+        st = self.stats
+        st.blocks += 1
+        st.events_seen += int(valid.sum())
+        selected = valid & (np.ones_like(z) if self.full_stream else z)
+        idx = np.nonzero(selected)[0]
+        st.selected += idx.size
+        if idx.size:
+            # last-write-wins dedupe: rows are end-of-block snapshots, so
+            # any one lane of a key already holds the key's final row.
+            uk, first = np.unique(keys[idx], return_index=True)
+            pick = idx[first]
+            st.rows_stored += uk.size
+            st.dedup_saved += idx.size - uk.size
+            if len(rows) == 2:
+                # stacked driver form: (scalars[4, B], agg).  Fetched
+                # whole-block (two fixed-shape host reads) — selecting on
+                # device first would re-trace a gather per distinct
+                # selection size, which costs far more than the copy.
+                scal = np.asarray(rows[0])[:, pick]
+                agg = np.asarray(rows[1])[pick]
+                last_t, v_f, v_full, last_t_full = scal
+            else:
+                last_t, v_f, agg, v_full, last_t_full = \
+                    (np.asarray(r)[pick] for r in rows)
+            if not self.full_stream:
+                # control column is not durable under thinning policies
+                v_full = np.zeros_like(v_full)
+                last_t_full = np.full_like(last_t_full, -np.inf)
+            ts = time.perf_counter()
+            packed = self.serde.pack_rows(last_t, v_f, agg, v_full,
+                                          last_t_full)
+            st.serde_s += time.perf_counter() - ts
+            part = self._partition_fn(uk)
+            for p in np.unique(part):
+                m = part == p
+                self.stores[int(p)].multi_put(uk[m], packed[m])
+        st.flush_s += time.perf_counter() - t0
+
+
+def hydrate_state(stores: Sequence[KVStore], num_rows: int, n_taus: int,
+                  row_of_key: Optional[np.ndarray] = None) -> ProfileState:
+    """Rebuild a ``ProfileState`` from durable bytes (restart-from-store).
+
+    Scans every partition store (batched ``multi_get`` over its sorted key
+    set — the modeled recovery IO is accounted on the store counters),
+    decodes rows with the vectorized SerDe and scatters them into a fresh
+    state.  ``row_of_key`` maps global entity ids to state rows for sharded
+    layouts (block/virtual flat rows); identity when omitted.
+
+    Exactness: stored persisted columns are bit-exact f32 round-trips of
+    the engine state, and unstored rows equal ``init_state`` defaults, so
+    the result's ``last_t``/``v_f``/``agg`` match the in-memory exact-mode
+    state bit-for-bit.  The control column matches too under full-stream
+    policies; under thinning policies it restarts cold (0.0 / -inf) by
+    design — see the module docstring.
+    """
+    serde = SerDe(n_taus)
+    last_t = np.full(num_rows, -np.inf, np.float32)
+    v_f = np.zeros(num_rows, np.float32)
+    agg = np.zeros((num_rows, n_taus, 3), np.float32)
+    v_full = np.zeros(num_rows, np.float32)
+    last_t_full = np.full(num_rows, -np.inf, np.float32)
+    for store in stores:
+        ks = np.asarray(store.keys(), np.int64)
+        if ks.size == 0:
+            continue
+        raws = store.multi_get(ks)
+        lt, vf, ag, vfl, ltf = serde.unpack_rows(raws)
+        rows = row_of_key[ks] if row_of_key is not None else ks
+        last_t[rows] = lt.astype(np.float32)
+        v_f[rows] = vf.astype(np.float32)
+        agg[rows] = ag
+        v_full[rows] = vfl.astype(np.float32)
+        last_t_full[rows] = ltf.astype(np.float32)
+    return ProfileState(
+        last_t=jnp.asarray(last_t), v_f=jnp.asarray(v_f),
+        agg=jnp.asarray(agg), v_full=jnp.asarray(v_full),
+        last_t_full=jnp.asarray(last_t_full))

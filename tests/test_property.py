@@ -190,3 +190,41 @@ def test_engine_write_budget_bound(budget, seed):
     # generous slack for stochasticity + cold-start oversampling
     bound = budget * elapsed * keys_n + 3 * keys_n + 5 * math.sqrt(n)
     assert writes <= bound, (writes, bound)
+
+
+@given(n_taus=st.integers(1, 8), n_rows=st.integers(1, 40),
+       seed=st.integers(0, 1000), fresh_stride=st.integers(0, 5))
+@settings(max_examples=60, deadline=None)
+def test_serde_pack_rows_roundtrip_matches_scalar(n_taus, n_rows, seed,
+                                                  fresh_stride):
+    """Vectorized SerDe == scalar SerDe, bit for bit, over shapes: each
+    pack_rows row equals the per-row pack bytes, and unpack_rows inverts
+    both exactly (including -inf 'fresh' timestamps)."""
+    from repro.streaming.kvstore import SerDe
+    rng = np.random.default_rng(seed)
+    sd = SerDe(n_taus)
+    last_t = rng.uniform(-1e6, 1e6, n_rows).astype(np.float32) \
+        .astype(np.float64)
+    ltf = last_t[::-1].copy()
+    if fresh_stride:
+        last_t[::fresh_stride] = -np.inf
+        ltf[fresh_stride - 1::fresh_stride] = -np.inf
+    v_f = rng.uniform(0, 1e4, n_rows)
+    agg = rng.uniform(-1e5, 1e5, (n_rows, n_taus, 3)).astype(np.float32)
+    v_full = rng.uniform(0, 1e4, n_rows)
+    packed = sd.pack_rows(last_t, v_f, agg, v_full, ltf)
+    assert packed.shape == (n_rows, sd.row_bytes())
+    raws = [packed[i].tobytes() for i in range(n_rows)]
+    for i in range(n_rows):
+        assert raws[i] == sd.pack(last_t[i], v_f[i], agg[i], v_full[i],
+                                  ltf[i])
+        lt_i, vf_i, agg_i, vfl_i, ltf_i = sd.unpack(raws[i])
+        assert (lt_i, vf_i, vfl_i, ltf_i) == (last_t[i], v_f[i],
+                                              v_full[i], ltf[i])
+        np.testing.assert_array_equal(agg_i, agg[i])
+    cols = sd.unpack_rows(raws)
+    np.testing.assert_array_equal(cols[0], last_t)
+    np.testing.assert_array_equal(cols[1], v_f)
+    np.testing.assert_array_equal(cols[2], agg)
+    np.testing.assert_array_equal(cols[3], v_full)
+    np.testing.assert_array_equal(cols[4], ltf)

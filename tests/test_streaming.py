@@ -41,10 +41,13 @@ def test_serde_roundtrip():
 
 
 def test_serde_rejects_corrupt():
+    # explicit ValueError (not assert — asserts vanish under `python -O`)
     sd = kvstore.SerDe(3)
     raw = sd.pack(0.0, 0.0, np.zeros((3, 3), np.float32), 0.0, 0.0)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="corrupt"):
         sd.unpack(b"\x00\x00" + raw[2:])
+    with pytest.raises(ValueError, match="truncated"):
+        sd.unpack(raw[: sd.row_bytes() - 1])
 
 
 def test_partition_deterministic_and_balanced():
