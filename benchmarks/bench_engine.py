@@ -23,6 +23,13 @@ with uniform and Zipf-skewed key distributions, through the donated-buffer
   throughput), bytes written, SerDe seconds, modeled IO, WAF, and the
   throughput cost of persistence (write-behind overlap, not serial
   flushes).
+* ``residency`` — bounded state residency (streaming/residency.py): the
+  slot-based resident set swept from resident fraction 1.0 down to 0.1 on
+  the Zipf workload, against the dense sink-path driver as baseline.
+  Records hit rate, unique-miss rate, hydrate gets/event (must not exceed
+  the unique-miss rate — no thrash), hydrate bytes, modeled read seconds
+  and throughput per resident fraction.  ``--smoke`` shrinks the stream
+  for CI.
 
 Every row also carries a peak-memory watermark column
 (``benchmarks.common.memory_watermark``: device allocator stats where the
@@ -269,13 +276,17 @@ def _run_persist_suite(n_events, n_keys, batch, seed):
                 serial = min(serial, once(ssink))
         # modeled end-to-end rates: the storage service time is modeled
         # (never slept), so fold it in arithmetically — serial pays
-        # compute + IO, write-behind pays max(compute, IO + flush work).
-        # serde/pack time is NOT added: both walls already include it
-        # (serial packs inline on the driver thread; flush_s times the
-        # background pack).
+        # compute + IO (one thread does everything); write-behind is a
+        # pipeline of compute, the dispatcher's pack stage (flush_s) and
+        # the per-partition store workers (each store's put busy +
+        # modeled IO run concurrently across partitions, so the stage is
+        # bounded by the slowest store — store_path_s_max), and its rate
+        # is set by the slowest stage.  serde/pack time is NOT added on
+        # top: both walls already include it.
         io = stats["modeled_io_s"]
         modeled_serial = n_events / (serial + io)
-        modeled_wb = n_events / max(best, io + stats["flush_s"])
+        modeled_wb = n_events / max(best, stats["flush_s"],
+                                    stats["store_path_s_max"])
         row = {"suite": "persist", "mode": "fast", "policy": policy,
                "batch": batch, "n_events": n_events,
                "budget_x_h": round(budget * h, 3),
@@ -298,6 +309,101 @@ def _run_persist_suite(n_events, n_keys, batch, seed):
         row.update(memory_watermark())
         rows.append(row)
         emit("engine_persist", row)
+    return rows
+
+
+def _run_residency_suite(n_events, n_keys, batch, seed):
+    """Bounded residency: throughput + hydration cost vs resident fraction.
+
+    Sweeps the slot budget from the full key space (resident fraction 1.0
+    — hydration happens once per key, then pure hits) down to 0.1 of it on
+    the Zipf stream, pp policy at the paper's budget regime.  The dense
+    sink-path driver (same batch, same flush grouping, no slot plane)
+    rides along as the ``impl="dense_sinkpath"`` baseline row: at fraction
+    1.0 the slot engine must sit within noise of it.  The capacity floor
+    (a flush group's distinct keys must fit the slots) is computed from
+    the stream; budgets below it are clamped and flagged.
+    """
+    from repro.core import init_state
+    from repro.core.stream import run_stream
+    from repro.streaming.persistence import WriteBehindSink
+    from repro.streaming.residency import ResidencyMap
+
+    h = 3600.0
+    budget = 0.1 / h
+    group = 1                           # sink_group: smallest feasible S
+    keys, qs, ts = _make_stream(np.random.default_rng(seed + 29),
+                                n_events, n_keys, skew=1.2)
+    cfg = EngineConfig(taus=(60.0, 3600.0, 86400.0), h=h, budget=budget,
+                       alpha=1.0, policy="pp")
+    n = (len(keys) // batch) * batch
+    keys, qs, ts = keys[:n], qs[:n], ts[:n]
+    # capacity floor: max distinct keys over any flush group of the sweep
+    floor = max(np.unique(keys[lo:lo + group * batch]).size
+                for lo in range(0, n, group * batch))
+
+    def once(S=None):
+        sink = WriteBehindSink(cfg, n_partitions=4)
+        state = init_state(S if S is not None else n_keys, len(cfg.taus))
+        rmap = ResidencyMap(n_keys, S) if S is not None else None
+        t0 = time.perf_counter()
+        state, _ = run_stream(cfg, state, keys, qs, ts, batch=batch,
+                              mode="fast", rng=jax.random.PRNGKey(0),
+                              collect_info=False, sink=sink,
+                              sink_group=group, residency=rmap)
+        sink.flush()
+        jax.block_until_ready(state.agg)
+        dt = time.perf_counter() - t0
+        snap = sink.snapshot()
+        sink.close()
+        return dt, snap, rmap
+
+    rows = []
+    fracs = (1.0, 0.5, 0.25, 0.1)
+    budgets = {f: max(int(f * n_keys), floor) for f in fracs}
+    # compile + warm every variant that will be timed: jit programs
+    # specialize on the slot count S, so each budget needs its own warm
+    # pass (plus the dense sink-path baseline)
+    once()
+    for S in dict.fromkeys(budgets.values()):
+        once(S)
+    # interleave the baseline and every fraction so all variants ride the
+    # same container noise (best-of-5 each, like the persist suite)
+    base = float("inf")
+    best = {f: (float("inf"), None, None) for f in fracs}
+    for _ in range(5):
+        base = min(base, once()[0])
+        for f in fracs:
+            dt, snap, rm = once(budgets[f])
+            if dt < best[f][0]:
+                best[f] = (dt, snap, rm)
+    row = {"suite": "residency", "impl": "dense_sinkpath", "mode": "fast",
+           "policy": "pp", "batch": batch, "n_events": n,
+           "sink_group": group, "events_per_s": round(n / base, 1)}
+    row.update(memory_watermark())
+    rows.append(row)
+    emit("engine_residency", row)
+    for frac in fracs:
+        S = budgets[frac]
+        wall, stats, rmap = best[frac]
+        rs = rmap.stats
+        row = {"suite": "residency", "mode": "fast", "policy": "pp",
+               "batch": batch, "n_events": n, "sink_group": group,
+               "resident_fraction": round(S / n_keys, 4),
+               "n_slots": S,
+               "clamped": bool(S > int(frac * n_keys)),
+               "events_per_s": round(n / wall, 1),
+               "hit_rate": round(rs.hit_rate(), 4),
+               "unique_miss_per_event": round(rs.misses / n, 4),
+               "hydrate_gets_per_event": round(stats["gets"] / n, 4),
+               "hydrate_bytes": stats["bytes_read"],
+               "modeled_read_s": round(stats["modeled_read_s"], 4),
+               "evictions": rs.evictions,
+               "read_wait_s": round(stats["read_wait_s"], 4),
+               "submit_wait_s": round(stats["submit_wait_s"], 4)}
+        row.update(memory_watermark())
+        rows.append(row)
+        emit("engine_residency", row)
     return rows
 
 
@@ -340,13 +446,14 @@ def _run_skew_suite(n_events, batch, seed,
 
 def _suite_of_row(row: dict) -> str:
     """Which suite produced a JSON row (for partial-run merging)."""
-    if row.get("suite") in ("skew", "persist"):
+    if row.get("suite") in ("skew", "persist", "residency"):
         return row["suite"]
     return "sharded" if "mesh" in row else "engine"
 
 
 def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
-        exact_rounds: int = 16, seed: int = 0, suites=("engine",)):
+        exact_rounds: int = 16, seed: int = 0, suites=("engine",),
+        write_json: bool = True):
     rng = np.random.default_rng(seed)
     rows = []
     if "engine" in suites:
@@ -358,6 +465,11 @@ def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
         rows += _run_skew_suite(n_events, batch, seed)
     if "persist" in suites:
         rows += _run_persist_suite(n_events, n_keys, batch, seed)
+    if "residency" in suites:
+        rows += _run_residency_suite(n_events, n_keys, min(batch, 1024),
+                                     seed)
+    if not write_json:          # CI-sized rows must never overwrite the
+        return rows             # tracked full-scale trajectory
     try:
         # merge with the suite(s) NOT run this invocation so a partial run
         # never clobbers the other suites' trajectories
@@ -379,14 +491,21 @@ def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
-                    choices=("engine", "sharded", "skew", "persist", "all"),
+                    choices=("engine", "sharded", "skew", "persist",
+                             "residency", "all"),
                     help="engine: local throughput (+ masked-vs-compact "
                          "exact rows); sharded: 8-fake-device run_stream; "
                          "skew: block-vs-virtual layout padding over the "
                          "Table 2 regimes; persist: write-behind durable "
-                         "fast path vs no-persistence baseline")
+                         "fast path vs no-persistence baseline; residency: "
+                         "slot-based hot set, throughput + hydration cost "
+                         "vs resident fraction")
     ap.add_argument("--n-events", type=int, default=65_536)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized stream (shrinks n_events; rows go to "
+                         "stdout only, BENCH_engine.json is untouched)")
     args = ap.parse_args()
-    suites = ("engine", "sharded", "skew", "persist") if args.suite == "all" \
-        else (args.suite,)
-    run(n_events=args.n_events, suites=suites)
+    suites = ("engine", "sharded", "skew", "persist", "residency") \
+        if args.suite == "all" else (args.suite,)
+    n_events = min(args.n_events, 8_192) if args.smoke else args.n_events
+    run(n_events=n_events, suites=suites, write_json=not args.smoke)

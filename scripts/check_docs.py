@@ -15,7 +15,10 @@ Checks four things:
     in either direction);
   * `--suite <name>` bench-suite names: every name the docs mention must be
     a `bench_engine.py` --suite choice, and every choice must be
-    documented (same no-dangling rule, both directions).
+    documented (same no-dangling rule, both directions);
+  * `eviction="..."` residency-eviction names: every name the docs mention
+    must exist in `streaming/residency.py`'s EVICTION, and every EVICTION
+    entry must be documented (same no-dangling rule, both directions).
 Exits non-zero listing every unresolved reference.
 """
 from __future__ import annotations
@@ -40,6 +43,10 @@ _LAYOUTS_SRC = "src/repro/features/engine.py"
 # bench-suite names as the docs spell them (`--suite persist`)
 _SUITE_MD = re.compile(r"--suite[= ]([A-Za-z0-9_]+)")
 _SUITES_SRC = "benchmarks/bench_engine.py"
+# residency-eviction option names as the docs spell them
+# (`eviction="second_chance"`)
+_EVICTION_MD = re.compile(r'eviction="([A-Za-z0-9_]+)"')
+_EVICTION_SRC = "src/repro/streaming/residency.py"
 
 
 def code_layouts() -> set:
@@ -114,6 +121,39 @@ def check_suite_options(files) -> list:
     return bad
 
 
+def code_evictions() -> set:
+    """The EVICTION tuple of streaming/residency.py, read from source."""
+    src = open(os.path.join(ROOT, _EVICTION_SRC)).read()
+    m = re.search(r"^EVICTION\s*=\s*\(([^)]*)\)", src, re.M)
+    return set(re.findall(r'"([A-Za-z0-9_]+)"', m.group(1))) if m else set()
+
+
+def check_eviction_options(files) -> list:
+    """No dangling `eviction=` names between the docs and the residency
+    map.  Same shape as the layout lint: docs -> code runs over the files
+    being linted; code -> docs always consults the full DEFAULT_FILES set.
+    """
+    code = code_evictions()
+    bad = []
+
+    def names_in(f):
+        path = os.path.join(ROOT, f)
+        return _EVICTION_MD.findall(open(path).read()) \
+            if os.path.exists(path) else []
+
+    for f in files:
+        for name in names_in(f):
+            if name not in code:
+                bad.append((f, f'eviction="{name}" not in '
+                               f'{_EVICTION_SRC} EVICTION'))
+    documented = {n for f in DEFAULT_FILES for n in names_in(f)}
+    for name in sorted(code - documented):
+        bad.append((DEFAULT_FILES[0],
+                    f'eviction="{name}" in {_EVICTION_SRC} EVICTION but '
+                    f'undocumented'))
+    return bad
+
+
 def check(md_path: str) -> list:
     base = os.path.dirname(os.path.join(ROOT, md_path))
     text = open(os.path.join(ROOT, md_path)).read()
@@ -144,6 +184,7 @@ def main(argv) -> int:
         bad += check(f)
     bad += check_layout_options(files)
     bad += check_suite_options(files)
+    bad += check_eviction_options(files)
     for md, target in bad:
         print(f"UNRESOLVED {md}: {target}")
     print(f"checked {len(files)} file(s): "

@@ -47,8 +47,13 @@ Both modes use counter-based RNG keyed on (entity, time-bits) so a given event
 receives the same thinning decision regardless of batching, ordering or shard
 placement.  The step callables accept an optional ``rng_entity`` column for
 callers whose ``Event.key`` is a *local* row index rather than the global
-entity id (the sharded engine passes ``local_row * n_shards + shard``), which
-is what makes shard placement genuinely decision-invariant.
+entity id: the sharded engine passes ``local_row * n_shards + shard``, and
+the bounded-residency drivers (``core.stream.run_stream(residency=...)``)
+pass the global id alongside slot-valued keys.  Nothing in either mode
+assumes ``Event.key`` spans the entity space — state rows are addressed
+purely by index, so the same step runs a dense per-entity table or a
+slot-based resident set (``S`` rows, ``S << num_entities``) unchanged,
+and thinning decisions are residency-invariant by construction.
 """
 from __future__ import annotations
 

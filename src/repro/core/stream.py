@@ -32,11 +32,19 @@ reuse, which imposes two invariants on every caller:
 The same contract applies to ``features.engine.ShardedFeatureEngine.run_stream``,
 which drives its mesh-sharded state through the same ``block_runner_for``
 machinery below — donation then applies per device shard.
+
+Bounded residency (``run_stream(residency=...)``) replaces the dense
+per-entity state with a slot-based resident set: the flush-group driver
+gains a hydrate→dispatch→evict schedule (``_drive_with_residency``) that
+translates event keys to slots on the host, prefetches the next group's
+misses through the write-behind sink's ordered read pipeline while the
+current group computes, and recycles victim slots without any device
+read-back — see ``streaming/residency.py`` for the contract.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple, Union
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +53,8 @@ import numpy as np
 from repro.core.engine import make_step
 from repro.core.types import EngineConfig, Event, ProfileState, StepInfo
 
-__all__ = ["run_stream", "block_runner_for", "sink_step_for"]
+__all__ = ["run_stream", "block_runner_for", "sink_step_for",
+           "residency_step_for", "hydrate_scatter"]
 
 
 def block_runner_for(step, collect_info: bool = True, donate: bool = True):
@@ -126,6 +135,62 @@ def sink_step_for(step, collect_info: bool = True, donate: bool = True):
     return jax.jit(run, donate_argnums=(0,) if donate else ())
 
 
+def hydrate_scatter(state: ProfileState, slots, scal, agg) -> ProfileState:
+    """Scatter hydrated rows into resident slots (the read half of the
+    slot-based residency refactor).
+
+    ``slots``: int32 [H] state rows, padded with an out-of-range index
+    (``mode='drop'`` ignores the padding lanes); ``scal``: [4, H] columns
+    stacked ``[last_t, v_f, v_full, last_t_full]`` (same order as the
+    ``sink_step_for`` gather); ``agg``: [H, T, 3].  Values come straight
+    from ``kvstore.SerDe.unpack_rows`` — an exact f32 round-trip of the
+    engine state — or the ``init_state`` defaults for keys with no durable
+    row yet, so hydration is bit-exact by construction.
+    """
+    return state._replace(
+        last_t=state.last_t.at[slots].set(scal[0], mode="drop"),
+        v_f=state.v_f.at[slots].set(scal[1], mode="drop"),
+        agg=state.agg.at[slots].set(agg, mode="drop"),
+        v_full=state.v_full.at[slots].set(scal[2], mode="drop"),
+        last_t_full=state.last_t_full.at[slots].set(scal[3], mode="drop"))
+
+
+def residency_step_for(step, collect_info: bool = True, donate: bool = True,
+                       scatter=None):
+    """``sink_step_for`` plus a hydration prologue for bounded residency.
+
+    The returned callable is ``(state, events, rng, gather_idx,
+    h_slots[H], h_scal[4, H], h_agg[H, T, 3], *consts) -> (state, outs,
+    rows)``: hydrated rows are scattered into their assigned slots
+    *before* the scan (misses of this flush group, staged by the host
+    while the previous group computed), then the group runs exactly like
+    the sink path with ``Event.key`` holding *slot* indices.  ``events``
+    is whatever pytree ``step`` scans — the residency drivers pass
+    ``(Event, rng_entity)`` so thinning stays keyed on global entity ids
+    and decisions are residency-invariant.  ``scatter`` overrides the
+    hydration scatter (the sharded engine passes a ``shard_map``-wrapped
+    one); ``H`` is padded to a power of two by the drivers so the jit
+    cache stays small.  The donation contract of ``sink_step_for``
+    applies unchanged.
+    """
+    scatter = scatter or hydrate_scatter
+
+    def run(state: ProfileState, events, rng, gather_idx, h_slots, h_scal,
+            h_agg, *consts):
+        state = scatter(state, h_slots, h_scal, h_agg)
+
+        def body(st, ev):
+            st, info = step(st, ev, rng, *consts)
+            return st, (info if collect_info else (info.z, info.writes))
+        state, outs = jax.lax.scan(body, state, events)
+        scal = jnp.stack([state.last_t[gather_idx], state.v_f[gather_idx],
+                          state.v_full[gather_idx],
+                          state.last_t_full[gather_idx]])
+        return state, outs, (scal, state.agg[gather_idx])
+
+    return jax.jit(run, donate_argnums=(0,) if donate else ())
+
+
 @functools.lru_cache(maxsize=None)
 def _block_runner(cfg: EngineConfig, mode: str, collect_info: bool,
                   donate: bool, exact_impl: str):
@@ -142,11 +207,91 @@ def _sink_step(cfg: EngineConfig, mode: str, collect_info: bool,
                          collect_info, donate)
 
 
+@functools.lru_cache(maxsize=None)
+def _residency_step(cfg: EngineConfig, mode: str, collect_info: bool,
+                    donate: bool, exact_impl: str):
+    """One hydrate+scan+gather program per (cfg, mode, flags): the core
+    step scans ``(Event, rng_entity)`` pairs so ``Event.key`` can hold
+    slot indices while thinning stays keyed on global entity ids."""
+    step = make_step(cfg, mode, exact_impl=exact_impl)
+
+    def estep(st, ev_ent, rng):
+        ev, ent = ev_ent
+        return step(st, ev, rng, rng_entity=ent)
+
+    return residency_step_for(estep, collect_info, donate)
+
+
+def hydration_width(m: int) -> int:
+    """Padded hydration width for ``m`` miss rows: the next power of two
+    (minimum 1), bounding the jit shape cache.  Single definition shared
+    by ``pack_hydration`` and the sharded driver's common per-shard
+    width — the [n_shards * H] segment packing relies on both using the
+    same rule."""
+    return 1 << max(int(m) - 1, 0).bit_length() if m else 1
+
+
+def pack_hydration(rows, miss_slots, serde, n_slots: int, n_taus: int,
+                   width: int = None):
+    """Decode one group's hydration reads into scatter-ready arrays.
+
+    ``rows``: ``ReadTicket.result()`` output aligned with the miss keys
+    (``None`` for keys with no durable row — they get the ``init_state``
+    defaults, matching a never-persisted entity).  Returns ``(h_slots[H],
+    h_scal[4, H], h_agg[H, T, 3])`` with ``H`` the next power of two of
+    the miss count (bounds the jit shape cache) and padding lanes pointed
+    at the out-of-range slot ``n_slots`` (dropped by the scatter).
+    ``width`` overrides ``H`` (must be >= the miss count) — the sharded
+    driver passes one common per-shard width so the segments concatenate
+    into a uniform ``[n_shards * H]`` layout.
+    """
+    m = len(miss_slots)
+    H = hydration_width(m) if width is None else int(width)
+    h_slots = np.full(H, n_slots, np.int32)
+    h_scal = np.zeros((4, H), np.float32)
+    h_scal[0] = -np.inf                     # last_t init
+    h_scal[3] = -np.inf                     # last_t_full init
+    h_agg = np.zeros((H, n_taus, 3), np.float32)
+    if m:
+        h_slots[:m] = miss_slots
+        present = [i for i, r in enumerate(rows) if r is not None]
+        if present:
+            lt, vf, ag, vfl, ltf = serde.unpack_rows(
+                [rows[i] for i in present])
+            idx = np.asarray(present)
+            h_scal[0, idx] = lt.astype(np.float32)
+            h_scal[1, idx] = vf.astype(np.float32)
+            h_scal[2, idx] = vfl.astype(np.float32)
+            h_scal[3, idx] = ltf.astype(np.float32)
+            h_agg[idx] = ag
+    return h_slots, h_scal, h_agg
+
+
+def merge_miss_rows(fresh_mask, rows_fresh, rows_re):
+    """Re-interleave the two read lanes' rows back into miss order."""
+    it_f, it_r = iter(rows_fresh), iter(rows_re)
+    return [next(it_f) if f else next(it_r) for f in fresh_mask]
+
+
+class _GroupPlan(NamedTuple):
+    """One flush group's host-side dispatch plan (residency drivers)."""
+    events: object          # pytree the group program scans
+    gather_idx: np.ndarray  # flat state rows to gather for the sink
+    sink_keys: np.ndarray   # flat global entity ids (sink row keys)
+    valid: np.ndarray       # flat padding mask
+    # hydration reads, split by ordering need: first-touch keys (no flush
+    # of this run can hold them -> the sink's unordered fast lane) vs
+    # rehydrations (must ride the FIFO behind earlier flushes)
+    fresh_keys: np.ndarray
+    rehydrate_keys: np.ndarray
+    build_hydration: object  # (rows_fresh, rows_re) -> (h_slots, ...)
+
+
 def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
                *, batch: int = 4096, mode: str = "fast",
                rng: Optional[jax.Array] = None, collect_info: bool = True,
                donate: bool = True, exact_impl: str = "compact",
-               sink=None, sink_group: int = 4
+               sink=None, sink_group: int = 4, residency=None
                ) -> Tuple[ProfileState, Union[StepInfo, jax.Array]]:
     """Drive the engine over a flat stream in ``[n_batches, batch]`` blocks.
 
@@ -173,6 +318,19 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
     to wait for the trailing groups.  State values are identical to the
     single-scan path (the engine numerics are
     compilation-context-invariant — ``kernels/detmath.py``).
+
+    ``residency``: an int slot budget ``S`` or a prebuilt
+    ``streaming.residency.ResidencyMap``.  The state then holds ``S``
+    *slots* instead of one row per entity (build it with
+    ``init_state(S, ...)``; ``S << num_entities``), event keys are
+    translated to slots per flush group, misses are hydrated from the
+    sink's durable stores with one ordered batched read per group
+    (prefetched while the previous group computes) and victims are
+    recycled clock/second-chance — see ``streaming/residency.py`` for the
+    eviction contract and why evict→rehydrate is bit-exact.  Requires
+    ``sink`` (the durable store is the backing level of the hierarchy);
+    thinning decisions stay keyed on global entity ids, so ``z``/``p``/
+    features and stored bytes are independent of the residency budget.
     """
     if rng is None:
         rng = jax.random.PRNGKey(0)
@@ -185,7 +343,48 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
     t_h = host_blocks(np.asarray(ts, np.float32), 0.0)
     valid_h = host_blocks(np.ones(n, bool), False)
 
-    if sink is not None:
+    if residency is not None:
+        from repro.streaming.residency import ResidencyMap
+        if sink is None:
+            raise ValueError(
+                "residency requires a write-behind sink: evicted slots "
+                "rely on the durable store for rehydration")
+        if isinstance(residency, ResidencyMap):
+            rmap = residency
+        else:
+            num_keys = int(np.max(key_h)) + 1 if n else 1
+            rmap = ResidencyMap(num_keys, int(residency))
+        if state.num_entities != rmap.n_slots:
+            raise ValueError(
+                f"state holds {state.num_entities} rows but the resident "
+                f"set has {rmap.n_slots} slots; build it with "
+                f"init_state(n_slots, ...)")
+        bstep = _residency_step(cfg, mode, collect_info, donate, exact_impl)
+        serde, n_taus = sink.serde, state.num_taus
+
+        def plan_group(lo, hi):
+            kseg, vseg = key_h[lo:hi], valid_h[lo:hi]
+            asn = rmap.assign_group(kseg, vseg)
+            slots = asn.slot.reshape(kseg.shape)
+            ev = Event(key=slots, q=q_h[lo:hi], t=t_h[lo:hi], valid=vseg)
+            # rng entity ids: the raw key blocks (padding lanes are 0 from
+            # the packer; the engine masks invalid lanes itself)
+            ent = kseg
+
+            def build(rows_fresh, rows_re):
+                rows = merge_miss_rows(asn.miss_fresh, rows_fresh, rows_re)
+                return pack_hydration(rows, asn.miss_slots, serde,
+                                      rmap.n_slots, n_taus)
+
+            return _GroupPlan((ev, ent), slots.reshape(-1),
+                              kseg.reshape(-1), vseg.reshape(-1),
+                              asn.miss_keys[asn.miss_fresh],
+                              asn.miss_keys[~asn.miss_fresh], build)
+
+        state, info = _drive_with_residency(
+            bstep, state, key_h.shape[0], max(1, int(sink_group)),
+            plan_group, rng, sink, collect_info=collect_info)
+    elif sink is not None:
         bstep = _sink_step(cfg, mode, collect_info, donate, exact_impl)
 
         # groups are fed straight from host memory (one h2d per dispatch);
@@ -206,6 +405,13 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
                                     exact_impl)(state, events, rng)
     if not collect_info:
         return state, info
+    if n == 0:                  # degenerate but valid: nothing to trim
+        F = 4 * len(cfg.taus)
+        return state, StepInfo(
+            z=jnp.zeros((0,), bool), p=jnp.zeros((0,), jnp.float32),
+            lam_hat=jnp.zeros((0,), jnp.float32),
+            features=jnp.zeros((0, F), jnp.float32),
+            writes=jnp.zeros((), jnp.int32))
     flat = lambda x: jnp.reshape(x, (-1,) + x.shape[2:])[:n]
     return state, StepInfo(
         z=flat(info.z), p=flat(info.p), lam_hat=flat(info.lam_hat),
@@ -242,11 +448,77 @@ def _drive_with_sink(bstep, state, n_blocks, group, group_of, rng, sink, *,
                     valid_host[lo:hi].reshape(-1), rows)
         outs_all.append(outs)
 
+    return state, _stack_group_outs(outs_all, collect_info)
+
+
+def _stack_group_outs(outs_all, collect_info):
+    """Stack per-group outputs back into the scan path's output shape."""
+    if not outs_all:                    # empty stream: no groups ran
+        if not collect_info:
+            return jnp.zeros((0,), jnp.int32)
+        return StepInfo(z=jnp.zeros((0, 0), bool),
+                        p=jnp.zeros((0, 0), jnp.float32),
+                        lam_hat=jnp.zeros((0, 0), jnp.float32),
+                        features=jnp.zeros((0, 0, 0), jnp.float32),
+                        writes=jnp.zeros((0,), jnp.int32))
     if not collect_info:
-        return state, jnp.asarray(np.concatenate(
+        return jnp.asarray(np.concatenate(
             [np.asarray(o[1], np.int32) for o in outs_all]))
     outs_all = [jax.tree.map(np.asarray, o) for o in outs_all]
     cat = lambda f: jnp.asarray(np.concatenate(
         [getattr(o, f) for o in outs_all], axis=0))
-    return state, StepInfo(z=cat("z"), p=cat("p"), lam_hat=cat("lam_hat"),
-                           features=cat("features"), writes=cat("writes"))
+    return StepInfo(z=cat("z"), p=cat("p"), lam_hat=cat("lam_hat"),
+                    features=cat("features"), writes=cat("writes"))
+
+
+def _drive_with_residency(bstep, state, n_blocks, group, plan_group, rng,
+                          sink, *, collect_info, consts=()):
+    """Hydrate→dispatch→evict flush-group schedule for bounded residency
+    (shared with the sharded engine via the ``plan_group`` callback).
+
+    Pipeline per group g: wait on g's prefetched hydration read, scatter
+    the rows and dispatch the group program, hand the group's decisions +
+    post-update rows to the write-behind sink, then *plan group g+1*
+    (slot assignment + eviction on the host ResidencyMap) and enqueue its
+    hydration read — which rides the sink's FIFO behind g's flush, the
+    ordering that guarantees a rehydrated key always reads its latest
+    durable row.  Eviction itself moves no device data: durable columns
+    only change on persisted events, so the store already holds every
+    victim's current row (see ``streaming/residency.py``).
+
+    ``plan_group(lo, hi)`` returns a ``_GroupPlan`` for blocks [lo, hi);
+    it must be called in stream order (the ResidencyMap mutates).
+    """
+    def reads_of(plan):
+        # first-touch misses skip the FIFO (nothing in flight can hold
+        # them); rehydrations wait their turn behind earlier flushes
+        return (sink.submit_read(plan.fresh_keys, ordered=False),
+                sink.submit_read(plan.rehydrate_keys))
+
+    if n_blocks == 0:
+        return state, _stack_group_outs([], collect_info)
+    # Drain anything a previous run left in flight: the fast lane's
+    # safety argument is "this run never wrote a first-touch key", which
+    # only covers writes submitted after this point.  A reused sink
+    # (chunked streaming without an explicit flush between chunks) would
+    # otherwise let an unordered read overtake the previous chunk's
+    # queued flush of the same key.
+    sink.flush()
+    outs_all = []
+    plan = plan_group(0, min(group, n_blocks))
+    t_fresh, t_re = reads_of(plan)
+    lo = 0
+    while lo < n_blocks:
+        hi = min(lo + group, n_blocks)
+        h_slots, h_scal, h_agg = plan.build_hydration(t_fresh.result(),
+                                                      t_re.result())
+        state, outs, rows = bstep(state, plan.events, rng, plan.gather_idx,
+                                  h_slots, h_scal, h_agg, *consts)
+        z = outs.z if collect_info else outs[0]
+        sink.submit(plan.sink_keys, z, plan.valid, rows)
+        outs_all.append(outs)
+        lo = hi
+        if lo < n_blocks:
+            plan = plan_group(lo, min(lo + group, n_blocks))
+            t_fresh, t_re = reads_of(plan)
+    return state, _stack_group_outs(outs_all, collect_info)

@@ -42,6 +42,14 @@ leaves must each own their storage, and the input state is dead after the
 call.  Layout tables ride along as non-donated trailing consts (see
 ``core.stream.block_runner_for``).
 
+Bounded residency: ``run_stream(residency=S)`` swaps the dense per-shard
+entity rows for ``S`` resident *slots* per shard (``init_resident_state``)
+under either layout — each shard's host-side ``ResidencyMap`` assigns
+slots per flush group, misses hydrate from the sink's layout-aligned
+partition stores and victims recycle clock/second-chance.  Global entity
+ids then ride the scan as data (no ``gid_of_row`` table needed), so the
+RNG-identity guarantee above holds for any slot budget.
+
 Without a mesh the engine degrades to a single local shard (CPU tests).
 """
 from __future__ import annotations
@@ -165,11 +173,25 @@ class ShardedFeatureEngine:
         self._local_step = core_engine.make_step(cfg, mode)
         self._step_raw = None  # (state, ev, rng, *consts); cached
         self._step = None      # public (state, ev, rng) wrapper
+        self._step_res = None  # residency step: (state, (ev, ent), rng)
         self._runners = {}  # (collect_info, donate) -> compiled block driver
 
     # ------------------------------------------------------------ state
     def init_state(self) -> ProfileState:
         state = init_state(self.num_entities, len(self.cfg.taus))
+        if self.mesh is None:
+            return state
+        spec = jax.tree.map(lambda _: P(self.data_axes), state)
+        return jax.device_put(state, jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec))
+
+    def init_resident_state(self, slots_per_shard: int) -> ProfileState:
+        """Bounded device state: ``slots_per_shard`` resident slots per
+        shard instead of one row per owned entity — the state plane for
+        ``run_stream(residency=...)``.  Device memory then scales with the
+        residency budget, not with ``num_entities``."""
+        state = init_state(self.n_shards * int(slots_per_shard),
+                           len(self.cfg.taus))
         if self.mesh is None:
             return state
         spec = jax.tree.map(lambda _: P(self.data_axes), state)
@@ -300,6 +322,72 @@ class ShardedFeatureEngine:
             self._step_raw = self._build_step()
         return self._step_raw
 
+    def _residency_step(self):
+        """Layout-agnostic step for the slot-based resident set, memoized.
+
+        Events scan as ``(Event, rng_entity)`` pairs: ``Event.key`` holds
+        per-shard *slot* indices (assigned per flush group by the host
+        ResidencyMaps) and ``rng_entity`` carries the global entity ids as
+        data — both layouts collapse onto one step, because the id no
+        longer needs to be reconstructed from a row index (the ``gid``
+        table / arithmetic keying exist only for dense row layouts).
+        Thinning therefore stays bit-identical to the local engine for any
+        residency budget, any mesh and any layout.
+        """
+        if self._step_res is not None:
+            return self._step_res
+        local_step = self._local_step
+        if self.mesh is None:
+            def local0(st, ev_ent, r):
+                ev, ent = ev_ent
+                return local_step(st, ev, r, rng_entity=ent)
+            self._step_res = local0
+            return self._step_res
+        axes = self.data_axes
+
+        def local(st, ev_ent, r):
+            ev, ent = ev_ent
+            st2, info = local_step(st, ev, r, rng_entity=ent)
+            return st2, info._replace(writes=info.writes[None])
+
+        def sharded(state, ev_ent, rng):
+            ev, ent = ev_ent
+            st2, info = shard_map(
+                local,
+                mesh=self.mesh,
+                in_specs=(jax.tree.map(lambda _: P(axes), state),
+                          (jax.tree.map(lambda _: P(axes), ev), P(axes)),
+                          P()),
+                out_specs=(jax.tree.map(lambda _: P(axes), state),
+                           StepInfo(z=P(axes), p=P(axes), lam_hat=P(axes),
+                                    features=P(axes), writes=P(axes))),
+                check_rep=False,
+            )(state, (ev, ent), rng)
+            return st2, info._replace(writes=info.writes.sum())
+
+        self._step_res = sharded
+        return self._step_res
+
+    def _residency_scatter(self):
+        """Hydration scatter for ``residency_step_for``: per shard, local
+        slot indices into the shard's own state rows (``None`` selects the
+        core single-domain scatter when there is no mesh)."""
+        if self.mesh is None:
+            return None
+        axes = self.data_axes
+
+        def scat(state, slots, scal, agg):
+            return shard_map(
+                core_stream.hydrate_scatter,
+                mesh=self.mesh,
+                in_specs=(jax.tree.map(lambda _: P(axes), state),
+                          P(axes), P(None, axes), P(axes)),
+                out_specs=jax.tree.map(lambda _: P(axes), state),
+                check_rep=False,
+            )(state, slots, scal, agg)
+
+        return scat
+
     def _build_step(self):
         local_step = self._local_step
         if self.mesh is None:
@@ -352,7 +440,7 @@ class ShardedFeatureEngine:
                    rng: Optional[jax.Array] = None,
                    collect_info: bool = True, donate: bool = True,
                    sink: Optional["persistence.WriteBehindSink"] = None,
-                   sink_group: int = 4
+                   sink_group: int = 4, residency=None
                    ) -> Tuple[ProfileState, Union[StepInfo, jax.Array]]:
         """Drive the sharded engine over a flat stream in one dispatch.
 
@@ -371,11 +459,24 @@ class ShardedFeatureEngine:
         stores — partitions aligned with this engine's layout routing —
         while the next group computes.  Caller flushes.
 
+        ``residency``: per-shard slot budget (int) or a list of prebuilt
+        per-shard ``streaming.residency.ResidencyMap``s, one per shard.
+        The state then holds ``n_shards * S`` slots
+        (``init_resident_state``) and both layouts run the same
+        slot-based schedule: keys route to their owning shard as usual,
+        each shard's ResidencyMap assigns local slots per flush group,
+        misses hydrate from the sink's layout-aligned partition stores
+        and victims recycle clock/second-chance.  Requires ``sink``.
+
         Returns the final state plus either a StepInfo in *stream order*
         (``collect_info=True``) or per-block write counts.
         """
         if rng is None:
             rng = jax.random.PRNGKey(0)
+        if residency is not None:
+            return self._run_stream_residency(
+                state, keys, qs, ts, batch_per_shard, rng, collect_info,
+                donate, sink, sink_group, residency)
         if sink is not None:
             return self._run_stream_sink(state, keys, qs, ts,
                                          batch_per_shard, rng, collect_info,
@@ -454,6 +555,120 @@ class ShardedFeatureEngine:
             features=flat(info.features),
             writes=jnp.sum(info.writes).astype(jnp.int32))
 
+    def _run_stream_residency(self, state, keys, qs, ts, batch_per_shard,
+                              rng, collect_info, donate, sink, sink_group,
+                              residency):
+        """Slot-based resident-set loop for the sharded path.
+
+        Reuses ``core.stream._drive_with_residency``; events are packed
+        shard-aligned with *global* ids (slots cannot be assigned ahead of
+        the flush-group schedule), each group translates its shard columns
+        through that shard's ResidencyMap, and hydration reads route to
+        the layout-aligned partition stores through the sink's ordered
+        FIFO.  Per-shard miss lists are padded to one common power-of-two
+        width so the ``shard_map`` scatter sees a uniform [n_shards * H]
+        layout.
+        """
+        from repro.streaming.residency import ResidencyMap
+        if sink is None:
+            raise ValueError(
+                "residency requires a write-behind sink: evicted slots "
+                "rely on the durable store for rehydration")
+        key = np.asarray(keys, np.int32)
+        q = np.asarray(qs, np.float32)
+        t = np.asarray(ts, np.float32)
+        n, B = self.n_shards, int(batch_per_shard)
+        if isinstance(residency, (int, np.integer)):
+            rmaps = [ResidencyMap(self.num_entities, int(residency))
+                     for _ in range(n)]
+        else:
+            rmaps = list(residency)
+        if len(rmaps) != n:
+            raise ValueError(f"need one ResidencyMap per shard "
+                             f"({n}), got {len(rmaps)}")
+        S = rmaps[0].n_slots
+        if any(m.n_slots != S for m in rmaps):
+            raise ValueError("per-shard slot budgets must be uniform")
+        if state.num_entities != n * S:
+            raise ValueError(
+                f"state holds {state.num_entities} rows but the resident "
+                f"set needs {n} shards x {S} slots; build it with "
+                f"init_resident_state({S})")
+        shard, _ = self.route(key)
+        # pack *global* ids into the blocks: local slots are a per-group
+        # decision, made by the ResidencyMaps inside plan_group below
+        out_key, out_q, out_t, out_valid, slot_map, n_blocks = \
+            route_stream_blocks(shard, key, q, t, n, B)
+        W = n * B
+        kb = out_key.reshape(n_blocks, W)
+        qb = out_q.reshape(n_blocks, W)
+        tb = out_t.reshape(n_blocks, W)
+        vb = out_valid.reshape(n_blocks, W)
+        shard_of_col = np.repeat(np.arange(n, dtype=np.int64), B)
+        if self.mesh is not None:
+            sh = NamedSharding(self.mesh, P(None, self.data_axes))
+            put = lambda x: jax.device_put(jnp.asarray(x), sh)
+        else:
+            put = lambda x: x
+        serde = sink.serde
+        n_taus = len(self.cfg.taus)
+
+        def plan_group(lo, hi):
+            G = hi - lo
+            kseg, vseg = kb[lo:hi], vb[lo:hi]
+            slots = np.zeros((G, W), np.int32)
+            miss = []
+            for s in range(n):
+                cols = slice(s * B, (s + 1) * B)
+                asn = rmaps[s].assign_group(kseg[:, cols], vseg[:, cols])
+                slots[:, cols] = asn.slot.reshape(G, B)
+                miss.append(asn)
+            mmax = max(a.miss_keys.size for a in miss)
+            H = core_stream.hydration_width(mmax)
+            fresh_keys = np.concatenate(
+                [a.miss_keys[a.miss_fresh] for a in miss])
+            re_keys = np.concatenate(
+                [a.miss_keys[~a.miss_fresh] for a in miss])
+            ev = Event(key=put(slots), q=put(qb[lo:hi]), t=put(tb[lo:hi]),
+                       valid=put(vseg))
+            # rng entity ids: the raw key blocks (padding lanes are 0 from
+            # the packer; the engine masks invalid lanes itself)
+            ent = put(kseg)
+            gather_idx = (shard_of_col[None, :] * S + slots).reshape(-1)
+
+            def build(rows_fresh, rows_re):
+                # shared iterators: merge_miss_rows consumes each shard's
+                # slice of the two read lanes in per-shard miss order
+                it_f, it_r = iter(rows_fresh), iter(rows_re)
+                segs = [core_stream.pack_hydration(
+                            core_stream.merge_miss_rows(
+                                a.miss_fresh, it_f, it_r),
+                            a.miss_slots, serde, S, n_taus, width=H)
+                        for a in miss]
+                return (np.concatenate([g[0] for g in segs]),
+                        np.concatenate([g[1] for g in segs], axis=1),
+                        np.concatenate([g[2] for g in segs], axis=0))
+
+            return core_stream._GroupPlan(
+                (ev, ent), gather_idx, kseg.reshape(-1), vseg.reshape(-1),
+                fresh_keys, re_keys, build)
+
+        rkey = ("residency", collect_info, donate)
+        if rkey not in self._runners:
+            self._runners[rkey] = core_stream.residency_step_for(
+                self._residency_step(), collect_info, donate,
+                scatter=self._residency_scatter())
+        state, info = core_stream._drive_with_residency(
+            self._runners[rkey], state, n_blocks, max(1, int(sink_group)),
+            plan_group, rng, sink, collect_info=collect_info)
+        if not collect_info:
+            return state, info
+        flat = lambda x: jnp.reshape(x, (-1,) + x.shape[2:])[slot_map]
+        return state, StepInfo(
+            z=flat(info.z), p=flat(info.p), lam_hat=flat(info.lam_hat),
+            features=flat(info.features),
+            writes=jnp.sum(info.writes).astype(jnp.int32))
+
     # ------------------------------------------------------- persistence
     def make_sink(self, **kw) -> "persistence.WriteBehindSink":
         """A ``WriteBehindSink`` whose partitions mirror this engine's
@@ -506,3 +721,40 @@ class ShardedFeatureEngine:
                 + keys // self.n_shards
         return core_engine.materialize_features(state, flat, t,
                                                 self.cfg.taus)
+
+    def materialize_cold(self, stores, keys, t) -> jax.Array:
+        """Score straight from durable bytes — restart as cold-start
+        hydration, with no dense state table ever built.
+
+        ``stores`` must be layout-partitioned like this engine's
+        ``make_sink`` output (key -> partition is the layout's key ->
+        shard map).  One batched ``multi_get`` per touched partition
+        (metered on the store counters), vectorized unpack, then the same
+        decay+materialize program as ``materialize`` — so for persisted
+        profiles the scores are bit-identical to materializing a fully
+        hydrated state; absent keys score as fresh profiles.  Device cost
+        is O(len(keys)) rows, independent of ``num_entities``.
+        """
+        from repro.core import estimators
+        from repro.streaming.kvstore import SerDe
+
+        keys_np = np.asarray(keys, np.int64)
+        n_taus = len(self.cfg.taus)
+        serde = SerDe(n_taus)
+        last_t = np.full(keys_np.size, -np.inf, np.float32)
+        agg = np.zeros((keys_np.size, n_taus, 3), np.float32)
+        part = self.route(keys_np)[0]
+        for p in np.unique(part):
+            sel = np.nonzero(part == p)[0]
+            rows = stores[int(p)].multi_get(keys_np[sel])
+            present = [i for i, r in enumerate(rows) if r is not None]
+            if present:
+                lt, _, ag, _, _ = serde.unpack_rows(
+                    [rows[i] for i in present])
+                idx = sel[np.asarray(present)]
+                last_t[idx] = lt.astype(np.float32)
+                agg[idx] = ag
+        taus = jnp.asarray(self.cfg.taus, jnp.float32)
+        agg_now = estimators.decay_to(jnp.asarray(agg),
+                                      jnp.asarray(last_t), t, taus)
+        return estimators.materialize(agg_now)

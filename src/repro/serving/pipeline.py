@@ -71,7 +71,12 @@ class ScoringPipeline:
                                    num_entities, mesh=mesh, mode=mode)
         return cls(engine=eng)
 
-    def init(self):
+    def init(self, residency: Optional[int] = None):
+        """Engine state: dense (one row per entity) or, with a
+        ``residency`` budget, a bounded slot state of ``residency``
+        resident rows per shard (see ``process_stream``)."""
+        if residency is not None:
+            return self.engine.init_resident_state(residency)
         return self.engine.init_state()
 
     def process_batch(self, state, ev: Event, rng, step_fn=None):
@@ -93,16 +98,28 @@ class ScoringPipeline:
 
     def process_stream(self, state, keys, qs, ts, *, rng=None,
                        batch_per_shard: int = 1024, sink=None,
-                       collect_info: bool = True):
+                       collect_info: bool = True, residency=None,
+                       sink_group: int = 4):
         """Score a whole stream through the engine's block driver.
 
         With ``sink`` the thinned rows are durably persisted write-behind
         while the stream computes (the paper's decoupling, end to end:
         every event scored, ~>=90% of durable writes excluded).
+
+        ``residency`` bounds device state to a per-shard slot budget
+        (``init(residency=...)`` builds the matching state): misses
+        hydrate from the sink's durable stores, victims are recycled
+        clock/second-chance, and scores are bit-identical to the dense
+        engine for any budget — residency is a capacity knob, not an
+        approximation (requires ``sink``).  The slot budget must cover
+        one flush group's distinct keys, so ``sink_group`` (and
+        ``batch_per_shard``) bound the minimum feasible budget.
         """
         return self.engine.run_stream(state, keys, qs, ts, rng=rng,
                                       batch_per_shard=batch_per_shard,
-                                      collect_info=collect_info, sink=sink)
+                                      collect_info=collect_info, sink=sink,
+                                      residency=residency,
+                                      sink_group=sink_group)
 
     def restart_from(self, sink):
         """Rebuild engine state from the sink's durable stores.
@@ -114,41 +131,87 @@ class ScoringPipeline:
         sink.flush()
         return self.engine.hydrate_state(sink.stores)
 
+    def score_cold(self, sink, keys, t):
+        """Score entities straight from the sink's durable bytes.
+
+        Restart as a special case of cold-start hydration: no dense state
+        table is rebuilt — the requested keys' rows are batch-read from
+        the partition stores and materialized directly
+        (``engine.materialize_cold``), bit-identical to scoring a fully
+        hydrated state.  This is the restart path when device state is
+        bounded (``process_stream(residency=...)``): device cost scales
+        with the scored key set, not with ``num_entities``.
+        """
+        sink.flush()
+        feats = self.engine.materialize_cold(sink.stores, keys, t)
+        return score(self.scorer, feats) if self.scorer is not None \
+            else feats
+
 
 def run_restart_demo(spec: ProfileSpec, num_entities: int, keys, qs, ts,
                      *, mode: str = "exact", batch_per_shard: int = 512,
-                     rng=None, **engine_overrides) -> dict:
+                     rng=None, residency: Optional[int] = None,
+                     sink_group: int = 4, **engine_overrides) -> dict:
     """End-to-end score -> persist -> restart -> score round trip.
 
     Streams events through a thinned pipeline with a write-behind sink,
-    simulates a process loss (the in-memory state is discarded), rebuilds
-    state from the durable stores, and scores the same entities at a later
-    timestamp from both the live and the recovered state.
+    simulates a process loss (the in-memory state is discarded), and
+    scores the same entities at a later timestamp from both the live and
+    the recovered side.
+
+    With ``residency=None`` (dense): the stream runs against a full
+    per-entity state table and recovery rebuilds that table with
+    ``hydrate_state``.  With a ``residency`` budget: the stream runs on a
+    bounded slot state (``process_stream(residency=...)`` — misses
+    hydrate, victims evict write-back) and recovery *is* cold-start
+    hydration — the scored keys are read straight from the durable bytes
+    (``score_cold``), no dense table after the crash.  The "live" side is
+    then a dense in-memory reference run of the same stream, so the
+    returned pair pins the full claim: bounded residency + crash +
+    cold-start scoring equals the dense in-memory engine exactly.
 
     Returns the two score vectors plus persistence counters; the demo's
     contract — recovered scores == live scores exactly, with >= the
-    policy's write exclusion — is pinned by ``tests/test_serving.py``.
+    policy's write exclusion — is pinned by ``tests/test_serving.py`` and
+    ``tests/test_residency.py``.
     """
     import jax as _jax
 
-    pipe = ScoringPipeline.build(spec, num_entities, mode=mode)
+    pipe = ScoringPipeline.build(spec, num_entities, mode=mode,
+                                 **engine_overrides)
     pipe.scorer = init_scorer(_jax.random.PRNGKey(1), spec.feature_dim)
     rng = _jax.random.PRNGKey(0) if rng is None else rng
     sink = pipe.make_sink()
-    state, info = pipe.process_stream(pipe.init(), keys, qs, ts, rng=rng,
+    state, info = pipe.process_stream(pipe.init(residency=residency), keys,
+                                      qs, ts, rng=rng,
                                       batch_per_shard=batch_per_shard,
-                                      sink=sink)
+                                      sink=sink, residency=residency,
+                                      sink_group=sink_group)
     stats = sink.flush()
 
     t_score = float(np.max(ts)) + 1.0
     ents = jnp.asarray(np.unique(np.asarray(keys, np.int64)))
-    feats_live = pipe.engine.materialize(state, ents, t_score)
-    scores_live = score(pipe.scorer, feats_live)
-
-    # simulated crash: only the sink's stores survive
-    restored = pipe.restart_from(sink)
-    feats_rec = pipe.engine.materialize(restored, ents, t_score)
-    scores_rec = score(pipe.scorer, feats_rec)
+    if residency is None:
+        feats_live = pipe.engine.materialize(state, ents, t_score)
+        scores_live = score(pipe.scorer, feats_live)
+        # simulated crash: only the sink's stores survive
+        restored = pipe.restart_from(sink)
+        feats_rec = pipe.engine.materialize(restored, ents, t_score)
+        scores_rec = score(pipe.scorer, feats_rec)
+    else:
+        # "live" reference: the same stream on a dense in-memory engine
+        # (no persistence) — thinning decisions are residency-invariant,
+        # so its state is what the bounded engine would hold at S = E
+        ref = ScoringPipeline.build(spec, num_entities, mode=mode,
+                                    **engine_overrides)
+        ref.scorer = pipe.scorer
+        ref_state, _ = ref.process_stream(ref.init(), keys, qs, ts, rng=rng,
+                                          batch_per_shard=batch_per_shard)
+        scores_live = score(pipe.scorer,
+                            ref.engine.materialize(ref_state, ents, t_score))
+        # crash: the bounded slot state is gone; recovery is a cold-start
+        # hydration read of the scored keys straight from durable bytes
+        scores_rec = pipe.score_cold(sink, ents, t_score)
     sink.close()
     return {
         "scores_live": np.asarray(scores_live),

@@ -1,6 +1,9 @@
 """Streaming substrate: workload generation, byte-backed KV store with an
 LSM cost model, per-event workers, write-behind persistence for the
-vectorized fast path, and closed-loop / fixed-rate replay."""
-from repro.streaming import kvstore, persistence, replay, worker, workload
+vectorized fast path, slot-based bounded residency, and closed-loop /
+fixed-rate replay."""
+from repro.streaming import (kvstore, persistence, replay, residency,
+                             worker, workload)
 
-__all__ = ["kvstore", "persistence", "replay", "worker", "workload"]
+__all__ = ["kvstore", "persistence", "replay", "residency", "worker",
+           "workload"]

@@ -180,6 +180,11 @@ class StoreCounters:
     bytes_written: int = 0
     serde_s: float = 0.0
     modeled_io_s: float = 0.0
+    # read/write split of modeled_io_s: the read path (hydration,
+    # recovery) must be observable separately from the write path
+    # (modeled_io_s == modeled_read_s + modeled_write_s).
+    modeled_read_s: float = 0.0
+    modeled_write_s: float = 0.0
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -194,20 +199,27 @@ class KVStore:
         self.rng = np.random.default_rng(seed)
         self.counters = StoreCounters()
 
+    def _account_io(self, seconds: float, write: bool) -> None:
+        self.counters.modeled_io_s += seconds
+        if write:
+            self.counters.modeled_write_s += seconds
+        else:
+            self.counters.modeled_read_s += seconds
+
     def get(self, key: int) -> Optional[bytes]:
         self.counters.gets += 1
         raw = self.data.get(key)
         if raw is not None:
             self.counters.bytes_read += len(raw)
-        self.counters.modeled_io_s += self.model.service_time_s(
-            self.rng, write=False)
+        self._account_io(self.model.service_time_s(self.rng, write=False),
+                         write=False)
         return raw
 
     def put(self, key: int, raw: bytes) -> None:
         self.counters.puts += 1
         self.counters.bytes_written += len(raw)
-        self.counters.modeled_io_s += self.model.service_time_s(
-            self.rng, write=True)
+        self._account_io(self.model.service_time_s(self.rng, write=True),
+                         write=True)
         self.data[key] = raw
 
     # ------------------------------------------------------- batched ops
@@ -222,8 +234,8 @@ class KVStore:
             out.append(raw)
         self.counters.gets += len(keys)
         self.counters.batch_gets += 1
-        self.counters.modeled_io_s += self.model.batch_service_time_s(
-            self.rng, write=False, n_rows=len(keys))
+        self._account_io(self.model.batch_service_time_s(
+            self.rng, write=False, n_rows=len(keys)), write=False)
         return out
 
     def multi_put(self, keys, rows) -> None:
@@ -238,8 +250,8 @@ class KVStore:
             self.data[int(keys[i])] = raw
         self.counters.puts += n
         self.counters.batch_puts += 1
-        self.counters.modeled_io_s += self.model.batch_service_time_s(
-            self.rng, write=True, n_rows=n)
+        self._account_io(self.model.batch_service_time_s(
+            self.rng, write=True, n_rows=n), write=True)
 
     def keys(self) -> Tuple[int, ...]:
         """Stored keys in deterministic (sorted) order — the recovery scan."""

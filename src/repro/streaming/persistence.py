@@ -20,11 +20,17 @@ Data flow per event block (see ``core.stream.run_stream(..., sink=...)``):
 2. the host hands ``(keys, z, valid, rows)`` to ``submit`` — a bounded
    queue, so a slow store eventually backpressures the driver instead of
    buffering unboundedly;
-3. the flush thread dedupes keys intra-block (last-write-wins: gathered
-   rows are end-of-block snapshots, so every lane of a key already carries
-   the key's final row), packs them with the vectorized SerDe, and lands
-   them in per-partition ``KVStore``s via batched ``multi_put`` — storage
-   IO overlaps the next block's compute.
+3. the dispatcher thread dedupes keys intra-block (last-write-wins:
+   gathered rows are end-of-block snapshots, so every lane of a key
+   already carries the key's final row), packs them with the vectorized
+   SerDe, and fans each partition's slice out to that partition store's
+   own flush worker for the batched ``multi_put`` — storage IO overlaps
+   the next block's compute and scales with the partition count;
+4. ``submit_read`` queues batched ``multi_get``s through the same FIFO
+   pipeline (dispatcher order, then per-store order), so a hydration read
+   always observes every flush submitted before it — the ordering the
+   slot-based residency drivers (``streaming/residency.py``,
+   ``core.stream.run_stream(residency=...)``) are built on.
 
 Byte-parity contract (CI-enforced, ``tests/test_persistence.py``): for the
 same stream/policy/rng, the bytes this sink stores equal the bytes the
@@ -56,7 +62,7 @@ import numpy as np
 from repro.core.types import EngineConfig, ProfileState
 from repro.streaming.kvstore import KVStore, SerDe, StorageModel
 
-__all__ = ["WriteBehindSink", "SinkStats", "hydrate_state",
+__all__ = ["WriteBehindSink", "SinkStats", "ReadTicket", "hydrate_state",
            "FULL_STREAM_POLICIES"]
 
 # Policies whose durable rows include the full-stream control column (they
@@ -74,12 +80,66 @@ class SinkStats:
     selected: int = 0           # lanes whose row is durable this block
     rows_stored: int = 0        # after intra-block last-write-wins dedupe
     dedup_saved: int = 0        # selected - rows_stored
-    serde_s: float = 0.0        # vectorized pack time (background thread)
-    flush_s: float = 0.0        # total background busy time
+    serde_s: float = 0.0        # vectorized pack time (dispatcher thread)
+    flush_s: float = 0.0        # total dispatcher busy time
     submit_wait_s: float = 0.0  # backpressure: time submit() blocked
+    # read path (hydration): submitted reads, rows requested, and the time
+    # the driver spent blocked on ticket results
+    reads: int = 0
+    rows_read: int = 0
+    read_wait_s: float = 0.0
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
+
+
+class ReadTicket:
+    """Future-like handle for an ordered hydration read.
+
+    ``WriteBehindSink.submit_read`` routes the requested keys through the
+    same FIFO pipeline as the flush blocks (dispatcher queue, then the
+    owning partition's worker queue), so the batched ``multi_get`` executes
+    *after* every flush submitted earlier — the write-ordering guarantee
+    residency hydration relies on.  ``result()`` blocks until every
+    partition's slice has landed and returns rows aligned with the
+    requested key order (``None`` for absent keys).
+    """
+
+    def __init__(self, n_keys: int, n_parts: int,
+                 stats: Optional[SinkStats] = None):
+        self._rows: List[Optional[bytes]] = [None] * n_keys
+        self._pending = n_parts
+        self._done = threading.Event()
+        self._exc: Optional[BaseException] = None
+        self._lock = threading.Lock()
+        self._stats = stats
+        if n_parts == 0:
+            self._done.set()
+
+    def _deliver(self, idx, rows, exc: Optional[BaseException] = None
+                 ) -> None:
+        with self._lock:
+            if exc is not None:
+                # failure completes the ticket immediately: a partial
+                # fan-out must never strand a driver waiting on parts
+                # that will not arrive
+                self._exc = exc
+                self._pending = 0
+            else:
+                for i, r in zip(idx, rows):
+                    self._rows[int(i)] = r
+                self._pending -= 1
+            if self._pending <= 0:
+                self._done.set()
+
+    def result(self) -> List[Optional[bytes]]:
+        t0 = time.perf_counter()
+        self._done.wait()
+        if self._stats is not None:
+            self._stats.read_wait_s += time.perf_counter() - t0
+        if self._exc is not None:
+            raise RuntimeError("hydration read failed") from self._exc
+        return self._rows
 
 
 class WriteBehindSink:
@@ -93,12 +153,23 @@ class WriteBehindSink:
     ``queue_depth`` bounds in-flight blocks (default 2 = double buffering:
     one block flushing while the next computes).  ``submit`` blocks when
     the store cannot keep up — backpressure, not unbounded buffering.
-    ``queue_depth=0`` disables the background thread entirely and flushes
+    ``queue_depth=0`` disables the background threads entirely and flushes
     synchronously inside ``submit`` — the serial-flush strawman the
     ``bench_engine --suite persist`` rows compare write-behind against.
 
-    Thread-safety: ``submit``/``flush``/``close`` are driver-thread calls;
-    the flush thread owns the stores until ``flush``/``close`` returns.
+    Flush is multi-worker: one *dispatcher* thread converts, dedupes and
+    packs each block (work proportional to the block, done once), then
+    hands each partition's slice to that partition's own *store worker*
+    thread for the batched ``multi_put`` — so the storage path scales with
+    the partition count on full-stream policies, where flush work is
+    proportional to events.  Per-partition FIFO order is preserved
+    (dispatcher order → store-queue order), which is also what makes
+    ``submit_read`` hydration reads correctly ordered after earlier
+    flushes of the same keys.
+
+    Thread-safety: ``submit``/``submit_read``/``flush``/``close`` are
+    driver-thread calls; each store is touched by exactly one worker
+    thread until ``flush``/``close`` returns.
     """
 
     def __init__(self, cfg: EngineConfig, *,
@@ -119,13 +190,25 @@ class WriteBehindSink:
         self._partition_fn = partition_fn or \
             (lambda keys: keys % len(self.stores))
         self.stats = SinkStats()
+        self._put_busy = [0.0] * len(self.stores)
         self._exc: Optional[BaseException] = None
         self._closed = False
         self._serial = queue_depth == 0
         if self._serial:
             self._q = self._thread = None
+            self._store_qs: List[queue.Queue] = []
+            self._store_threads: List[threading.Thread] = []
         else:
             self._q = queue.Queue(maxsize=queue_depth)
+            # one flush worker per partition store: the dispatcher packs,
+            # the workers land bytes (FIFO per store)
+            self._store_qs = [queue.Queue() for _ in self.stores]
+            self._store_threads = [
+                threading.Thread(target=self._store_drain, args=(i,),
+                                 name=f"sink-store-{i}", daemon=True)
+                for i in range(len(self.stores))]
+            for th in self._store_threads:
+                th.start()
             self._thread = threading.Thread(
                 target=self._drain, name="write-behind-sink", daemon=True)
             self._thread.start()
@@ -154,24 +237,72 @@ class WriteBehindSink:
             self._flush_block(keys, z, valid, rows)
             return
         t0 = time.perf_counter()
-        self._q.put((keys, z, valid, rows))
+        self._q.put(("block", keys, z, valid, rows))
         self.stats.submit_wait_s += time.perf_counter() - t0
+
+    def submit_read(self, keys, ordered: bool = True) -> ReadTicket:
+        """Queue a batched read of ``keys`` (hydration path).
+
+        ``ordered=True`` (default): the read rides the same FIFO pipeline
+        as the flush blocks — dispatcher queue, then the owning
+        partition's store queue — so it observes every flush submitted
+        before it; per partition store, reads can never overtake earlier
+        writes.  ``ordered=False`` skips the dispatcher and enqueues
+        straight on the store-worker queues: the read no longer waits for
+        in-flight blocks to be converted and packed.  Only correct for
+        keys that cannot be in any in-flight flush — e.g. a residency
+        driver's *first-touch* misses, which this run has never written
+        (``streaming.residency.GroupAssignment.miss_fresh``).
+
+        Returns a ``ReadTicket``; ``ticket.result()`` blocks until the
+        rows (aligned with ``keys``, ``None`` for absent entries) are
+        available.  An empty key set resolves immediately without
+        touching the stores.
+        """
+        if self._closed:
+            raise RuntimeError("submit_read() on a closed WriteBehindSink")
+        self._check()
+        keys = np.asarray(keys, np.int64).reshape(-1)
+        if keys.size == 0:
+            return ReadTicket(0, 0, self.stats)
+        self.stats.reads += 1
+        self.stats.rows_read += int(keys.size)
+        part = np.asarray(self._partition_fn(keys))
+        splits = []
+        for p in np.unique(part):
+            idx = np.nonzero(part == p)[0]
+            splits.append((int(p), idx, keys[idx]))
+        ticket = ReadTicket(int(keys.size), len(splits), self.stats)
+        if self._serial:
+            for p, idx, ks in splits:
+                ticket._deliver(idx, self.stores[p].multi_get(ks))
+            return ticket
+        if ordered:
+            self._q.put(("read", ticket, splits))
+        else:
+            for p, idx, ks in splits:
+                self._store_qs[p].put(("read", ticket, idx, ks))
+        return ticket
 
     def flush(self) -> dict:
         """Block until every submitted block is durably stored."""
         self._check()
         if not self._serial:
             self._q.join()
+            for sq in self._store_qs:
+                sq.join()
         self._check()
         return self.snapshot()
 
     def close(self) -> None:
-        """Drain and stop the flush thread (idempotent)."""
+        """Drain and stop the flush threads (idempotent)."""
         if not self._closed:
             self._closed = True
             if not self._serial:
                 self._q.put(_STOP)
                 self._thread.join()
+                for th in self._store_threads:
+                    th.join()
         self._check()
 
     def __enter__(self) -> "WriteBehindSink":
@@ -181,18 +312,37 @@ class WriteBehindSink:
         self.close()
 
     def snapshot(self) -> dict:
-        """Sink + per-partition store counters, aggregated."""
-        agg = {"puts": 0, "gets": 0, "batch_puts": 0, "bytes_written": 0,
-               "modeled_io_s": 0.0, "store_serde_s": 0.0}
+        """Sink + per-partition store counters, aggregated.
+
+        Read-path columns (``gets``/``batch_gets``/``bytes_read``/
+        ``modeled_read_s``) are surfaced with the same fidelity as the
+        write columns, so hydration cost is observable wherever sink stats
+        are recorded.  ``put_s`` is the store workers' aggregate busy time.
+        """
+        agg = {"puts": 0, "gets": 0, "batch_puts": 0, "batch_gets": 0,
+               "bytes_written": 0, "bytes_read": 0, "modeled_io_s": 0.0,
+               "modeled_read_s": 0.0, "modeled_write_s": 0.0,
+               "store_serde_s": 0.0}
         for s in self.stores:
             c = s.counters
             agg["puts"] += c.puts
             agg["gets"] += c.gets
             agg["batch_puts"] += c.batch_puts
+            agg["batch_gets"] += c.batch_gets
             agg["bytes_written"] += c.bytes_written
+            agg["bytes_read"] += c.bytes_read
             agg["modeled_io_s"] += c.modeled_io_s
+            agg["modeled_read_s"] += c.modeled_read_s
+            agg["modeled_write_s"] += c.modeled_write_s
             agg["store_serde_s"] += c.serde_s
         agg["waf"] = max((s.waf() for s in self.stores), default=1.0)
+        agg["put_s"] = sum(self._put_busy)
+        # per-partition critical path: store workers run concurrently, so
+        # the pipeline is bounded by the slowest store's put busy time +
+        # modeled IO, not by their sum
+        agg["store_path_s_max"] = max(
+            (busy + s.counters.modeled_io_s
+             for busy, s in zip(self._put_busy, self.stores)), default=0.0)
         agg.update(self.stats.snapshot())
         return agg
 
@@ -201,20 +351,66 @@ class WriteBehindSink:
             exc, self._exc = self._exc, None
             raise RuntimeError("write-behind flush failed") from exc
 
-    # ------------------------------------------------------ flush thread
+    # ---------------------------------------------------- flush threads
     def _drain(self) -> None:
+        """Dispatcher: convert + dedupe + pack blocks, fan work out to the
+        per-partition store workers, forward reads in FIFO order."""
         while True:
             item = self._q.get()
             if item is _STOP:
+                for sq in self._store_qs:
+                    sq.put(_STOP)
                 self._q.task_done()
                 return
             try:
-                if self._exc is None:
-                    self._flush_block(*item)
+                if item[0] == "read":
+                    _, ticket, splits = item
+                    for p, idx, ks in splits:
+                        self._store_qs[p].put(("read", ticket, idx, ks))
+                elif self._exc is None:
+                    self._flush_block(*item[1:])
             except BaseException as e:       # surfaced on next driver call
                 self._exc = e
+                if item[0] == "read":        # never strand a waiting driver
+                    item[1]._deliver((), (), exc=e)
             finally:
                 self._q.task_done()
+
+    def _store_drain(self, i: int) -> None:
+        """One partition store's worker: batched puts + ordered reads."""
+        sq = self._store_qs[i]
+        while True:
+            item = sq.get()
+            if item is _STOP:
+                sq.task_done()
+                return
+            try:
+                if item[0] == "read":
+                    _, ticket, idx, ks = item
+                    try:
+                        ticket._deliver(idx, self.stores[i].multi_get(ks))
+                    except BaseException as e:
+                        ticket._deliver(idx, (), exc=e)
+                        raise
+                elif self._exc is None:
+                    _, ks, rows = item
+                    t0 = time.perf_counter()
+                    self.stores[i].multi_put(ks, rows)
+                    self._put_busy[i] += time.perf_counter() - t0
+            except BaseException as e:
+                self._exc = e
+            finally:
+                sq.task_done()
+
+    def _put(self, p: int, keys, rows) -> None:
+        """Route one partition's packed rows to its store (worker or
+        inline under the serial strawman)."""
+        if self._serial:
+            t0 = time.perf_counter()
+            self.stores[p].multi_put(keys, rows)
+            self._put_busy[p] += time.perf_counter() - t0
+        else:
+            self._store_qs[p].put(("put", keys, rows))
 
     def _flush_block(self, keys, z, valid, rows) -> None:
         t0 = time.perf_counter()
@@ -257,7 +453,7 @@ class WriteBehindSink:
             part = self._partition_fn(uk)
             for p in np.unique(part):
                 m = part == p
-                self.stores[int(p)].multi_put(uk[m], packed[m])
+                self._put(int(p), uk[m], packed[m])
         st.flush_s += time.perf_counter() - t0
 
 

@@ -1,0 +1,225 @@
+"""Slot-based resident set for bounded device state (host-side plane).
+
+The paper's premise (§1, §4) is that per-key statistics live in a
+disk-backed KV store; device memory holds only what the stream is touching
+*now*.  ``ResidencyMap`` is the host-side control plane for that split: the
+device ``ProfileState`` holds ``n_slots`` rows (``S << num_keys``), this map
+assigns slots to global entity ids one flush group at a time, and the
+streaming drivers (``core.stream.run_stream(residency=...)``, the sharded
+``features.engine.ShardedFeatureEngine.run_stream``) hydrate misses from
+the durable stores and recycle victim slots — residency becomes a tunable
+knob instead of a hard HBM capacity wall (cf. Zapridou & Ailamaki's staged
+working-set prefetching for stateful stream processing).
+
+Why eviction needs no device read-back: the durable profile columns
+(``last_t``/``v_f``/``agg``) change only on persisted (``z``) events, and
+the write-behind sink flushes every flush group's post-update rows — so by
+the time a slot is recycled, the KV store already holds the victim's
+current durable row.  The control column (``v_full``/``last_t_full``) is
+durable only under the full-stream policies that feed it into decisions
+('full'/'unfiltered'); under thinning policies an evicted key restarts it
+cold on rehydration, exactly like the per-event worker and the
+restart-from-store path (see ``streaming.persistence``).  That is what
+makes eviction pure host bookkeeping and evict→rehydrate bit-exact on
+everything decisions and features read.
+
+Assignment contract (per flush group):
+
+* every distinct valid key of the group gets exactly one slot, held for the
+  whole group (conflict-free: two group keys never share a slot);
+* keys of the *current* group are pinned — the eviction scan cannot recycle
+  them (a group with more distinct keys than slots is a capacity error,
+  raised before any state is mutated);
+* victims are chosen by a clock sweep over slots (``eviction=`` knob, names
+  in ``EVICTION``): ``"second_chance"`` grants one extra rotation to slots
+  referenced since the last sweep (classic clock / second-chance),
+  ``"fifo"`` recycles strictly in hand order (the strawman baseline).
+
+The map is plain numpy and thread-free: drivers call ``assign_group`` from
+the dispatch thread only.  Per-group and cumulative counters live in
+``ResidencyStats`` (hit rate, unique misses == hydration reads, evictions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+__all__ = ["ResidencyMap", "ResidencyStats", "GroupAssignment", "EVICTION"]
+
+# Eviction policies of the clock sweep; README.md documents each and
+# scripts/check_docs.py lints the two lists against each other (like the
+# sharded engine's LAYOUTS).
+EVICTION = ("second_chance", "fifo")
+
+
+@dataclasses.dataclass
+class ResidencyStats:
+    """Cumulative residency accounting (`last` holds the newest group's)."""
+    groups: int = 0
+    lookups: int = 0        # valid event lanes translated
+    unique_keys: int = 0    # sum over groups of distinct valid keys
+    hits: int = 0           # distinct keys already resident
+    misses: int = 0         # distinct keys hydrated (== hydration reads)
+    evictions: int = 0      # slots recycled from a live key
+    peak_resident: int = 0
+
+    def snapshot(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate()
+        return d
+
+    def hit_rate(self) -> float:
+        return self.hits / max(self.hits + self.misses, 1)
+
+
+class GroupAssignment(NamedTuple):
+    """One flush group's slot plan (all arrays are host numpy)."""
+
+    slot: np.ndarray        # int32 [n_lanes] per-lane slot (0 on invalid)
+    miss_keys: np.ndarray   # int64 [M] distinct keys to hydrate, in slot-
+    miss_slots: np.ndarray  # int32 [M] assignment order
+    # True where the miss is this run's *first touch* of the key: no flush
+    # of this run can hold it, so its hydration read needs no ordering
+    # barrier against in-flight flushes (the drivers use the sink's
+    # unordered fast lane for these)
+    miss_fresh: np.ndarray  # bool [M]
+    evicted: np.ndarray     # int64 [V] keys whose slot was recycled
+    hits: int               # distinct keys already resident
+
+
+class ResidencyMap:
+    """Key→slot table with clock/second-chance slot recycling.
+
+    ``num_keys`` sizes the (host) inverse table — 4 bytes per key, the
+    O(num_keys) plane this design *keeps* on the host so the O(row) plane
+    on device can shrink to ``n_slots`` rows.
+    """
+
+    def __init__(self, num_keys: int, n_slots: int,
+                 eviction: str = "second_chance"):
+        if eviction not in EVICTION:
+            raise ValueError(f"unknown eviction {eviction!r}; choose from "
+                             f"{EVICTION}")
+        if n_slots <= 0:
+            raise ValueError("need at least one resident slot")
+        self.num_keys = int(num_keys)
+        self.n_slots = int(n_slots)
+        self.eviction = eviction
+        self.slot_of_key = np.full(self.num_keys, -1, np.int32)
+        self.key_of_slot = np.full(self.n_slots, -1, np.int64)
+        self._seen = np.zeros(self.num_keys, bool)  # ever resident this run
+        self._ref = np.zeros(self.n_slots, bool)       # second-chance bit
+        self._pin = np.full(self.n_slots, -1, np.int64)  # group that pinned
+        self._hand = 0
+        self._resident = 0
+        self.stats = ResidencyStats()
+
+    # ------------------------------------------------------------ queries
+    @property
+    def resident(self) -> int:
+        return self._resident
+
+    def resident_keys(self) -> np.ndarray:
+        """Keys currently holding a slot (unordered)."""
+        return self.key_of_slot[self.key_of_slot >= 0].copy()
+
+    # --------------------------------------------------------- assignment
+    def assign_group(self, keys, valid: Optional[np.ndarray] = None
+                     ) -> GroupAssignment:
+        """Assign one slot per distinct valid key for the coming group.
+
+        ``keys``: global entity ids, any shape (flattened); ``valid``: the
+        padding mask (all-valid when omitted).  Hits refresh the reference
+        bit; misses take slots from the clock sweep, evicting unpinned
+        victims; the whole group is pinned against its own evictions.
+        Raises ``ValueError`` (before touching the table) when the group
+        holds more distinct keys than slots.
+        """
+        keys = np.asarray(keys, np.int64).reshape(-1)
+        if valid is None:
+            v = None
+            vk = keys
+        else:
+            v = np.asarray(valid, bool).reshape(-1)
+            vk = keys[v]
+        st = self.stats
+        gid = st.groups
+        # Steady state (all hits) must stay sort-free: distinct hits are
+        # counted with a slot-presence bincount and only *miss* keys (few,
+        # once warm) go through np.unique.
+        lane_slot = self.slot_of_key[vk]
+        miss_lane = lane_slot < 0
+        hit_lane_slots = lane_slot[~miss_lane]
+        if hit_lane_slots.size:
+            n_hit = int(np.count_nonzero(
+                np.bincount(hit_lane_slots, minlength=self.n_slots)))
+        else:
+            n_hit = 0
+        miss_keys = np.unique(vk[miss_lane])
+        if n_hit + miss_keys.size > self.n_slots:
+            raise ValueError(
+                f"flush group holds {n_hit + miss_keys.size} distinct keys "
+                f"but the resident set has only {self.n_slots} slots; raise "
+                f"the residency budget or shrink batch/sink_group")
+        st.groups += 1
+        st.lookups += int(vk.size)
+        st.unique_keys += n_hit + int(miss_keys.size)
+        self._ref[hit_lane_slots] = True
+        self._pin[hit_lane_slots] = gid
+
+        miss_slots = np.empty(miss_keys.size, np.int32)
+        miss_fresh = ~self._seen[miss_keys]
+        self._seen[miss_keys] = True
+        evicted = []
+        for i, k in enumerate(miss_keys):
+            s = self._take_slot(gid)
+            old = self.key_of_slot[s]
+            if old >= 0:
+                self.slot_of_key[old] = -1
+                evicted.append(old)
+            self.key_of_slot[s] = k
+            self.slot_of_key[k] = s
+            self._ref[s] = True
+            self._pin[s] = gid
+            miss_slots[i] = s
+
+        st.hits += n_hit
+        st.misses += int(miss_keys.size)
+        st.evictions += len(evicted)
+        self._resident += int(miss_keys.size) - len(evicted)
+        st.peak_resident = max(st.peak_resident, self._resident)
+
+        if miss_keys.size:        # refresh the lanes that just got slots
+            lane_slot[miss_lane] = self.slot_of_key[vk[miss_lane]]
+        if v is None:
+            slot = lane_slot.astype(np.int32)
+        else:
+            slot = np.zeros(keys.size, np.int32)
+            slot[v] = lane_slot
+        return GroupAssignment(
+            slot=slot, miss_keys=miss_keys, miss_slots=miss_slots,
+            miss_fresh=miss_fresh, evicted=np.asarray(evicted, np.int64),
+            hits=n_hit)
+
+    def _take_slot(self, gid: int) -> int:
+        """Clock sweep: next free or evictable slot (current group pinned).
+
+        Terminates because the group pins at most ``uniq <= n_slots`` slots
+        and at the time of the m-th take fewer than ``uniq`` are pinned, so
+        an unpinned slot always exists; second-chance reference bits are
+        cleared on first pass, bounding the sweep to two rotations.
+        """
+        second = self.eviction == "second_chance"
+        while True:
+            s = self._hand
+            self._hand = (self._hand + 1) % self.n_slots
+            if self._pin[s] == gid:
+                continue
+            if self.key_of_slot[s] < 0:
+                return s
+            if second and self._ref[s]:
+                self._ref[s] = False
+                continue
+            return s

@@ -1,0 +1,558 @@
+"""Bounded state residency: the slot-based hot set's invariance contract.
+
+CI-enforced guarantees of ``streaming/residency.py`` + the residency
+drivers (``core.stream.run_stream(residency=...)``, the sharded engine):
+
+* **Residency invariance.**  For every policy, exact-mode decisions,
+  inclusion probabilities, features AND sink-stored bytes with a small
+  resident fraction (0.25 here) on a Zipf workload are bit-identical to
+  the dense (``S = num_entities``-style) engine — residency is a capacity
+  knob, not an approximation.
+* **Evict→rehydrate is bit-exact.**  A key that leaves and re-enters the
+  resident set carries exactly the durable row it would have held dense.
+* **The ResidencyMap never drops or duplicates a key** under any
+  interleaving of hits, misses and evictions (hypothesis property test).
+
+Plus the satellite contracts: multi-worker flush equivalence, ordered
+``submit_read`` hydration reads, and the read-path metering parity of
+``KVStore``/``SinkStats``.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import EngineConfig, init_state
+from repro.core.stream import run_stream
+from repro.features.engine import ShardedFeatureEngine
+from repro.streaming.kvstore import KVStore, SerDe, StorageModel
+from repro.streaming.persistence import WriteBehindSink
+from repro.streaming.residency import EVICTION, ResidencyMap
+from repro.streaming.worker import FeatureWorker
+
+N_KEYS = 48
+
+
+def _stream(n_events=1200, n_keys=N_KEYS, seed=0, skew=1.1):
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, n_keys + 1) ** skew
+    w /= w.sum()
+    keys = rng.choice(n_keys, n_events, p=w).astype(np.int32)
+    ts = np.cumsum(rng.exponential(20.0, n_events)).astype(np.float32)
+    qs = rng.lognormal(3.0, 1.0, n_events).astype(np.float32)
+    return keys, qs, ts
+
+
+def _cfg(policy, n_taus=2, exact_rounds=64):
+    return EngineConfig(taus=(60.0, 3600.0, 86400.0)[:n_taus], h=600.0,
+                        budget=0.002, alpha=1.0, policy=policy,
+                        fixed_rate=0.3, mu_tau_index=1,
+                        exact_rounds=exact_rounds)
+
+
+def _store_contents(stores):
+    merged = {}
+    for s in stores:
+        merged.update(s.data)
+    return merged
+
+
+def _dense_run(cfg, keys, qs, ts, *, batch, mode="exact", n_parts=3,
+               rng=None):
+    rng = jax.random.PRNGKey(7) if rng is None else rng
+    sink = WriteBehindSink(cfg, n_partitions=n_parts)
+    state, info = run_stream(cfg, init_state(N_KEYS, len(cfg.taus)), keys,
+                             qs, ts, batch=batch, mode=mode, rng=rng,
+                             sink=sink)
+    sink.flush()
+    return state, info, sink
+
+
+def _resident_run(cfg, keys, qs, ts, *, batch, S, mode="exact", n_parts=3,
+                  sink_group=1, rng=None, rmap=None, sink=None):
+    rng = jax.random.PRNGKey(7) if rng is None else rng
+    sink = sink or WriteBehindSink(cfg, n_partitions=n_parts)
+    res = rmap if rmap is not None else S
+    state, info = run_stream(cfg, init_state(S, len(cfg.taus)), keys, qs,
+                             ts, batch=batch, mode=mode, rng=rng, sink=sink,
+                             residency=res, sink_group=sink_group)
+    sink.flush()
+    return state, info, sink
+
+
+# ----------------------------------------------------------- ResidencyMap
+def test_map_assigns_hits_and_misses():
+    m = ResidencyMap(16, 4)
+    a = m.assign_group([3, 5, 3, 7])
+    assert a.miss_keys.tolist() == [3, 5, 7] and a.hits == 0
+    # lanes of one key share its slot; distinct keys get distinct slots
+    assert a.slot[0] == a.slot[2] != a.slot[1]
+    b = m.assign_group([5, 7, 9])
+    assert b.hits == 2 and b.miss_keys.tolist() == [9]
+    assert m.resident == 4 and m.stats.hit_rate() == pytest.approx(2 / 6)
+
+
+def test_map_second_chance_spares_referenced_slots():
+    m = ResidencyMap(16, 3)
+    m.assign_group([0, 1, 2])          # fill; all ref bits set
+    m.assign_group([1, 2])             # re-reference 1 and 2; 0 stays set
+    # one new key: the sweep clears ref bits in hand order and must evict
+    # key 0 — the only slot not referenced since the last sweep... but all
+    # bits were set, so the clock strips 0's bit first and takes it on the
+    # second rotation (second chance, not LRU).
+    c = m.assign_group([3])
+    assert c.evicted.tolist() == [0]
+    assert sorted(m.resident_keys().tolist()) == [1, 2, 3]
+
+
+def test_map_fifo_ignores_reference_bits():
+    m = ResidencyMap(16, 3, eviction="fifo")
+    m.assign_group([0, 1, 2])
+    m.assign_group([0])                # would save 0 under second chance
+    c = m.assign_group([3])            # fifo: hand points at 0 -> evict it
+    assert c.evicted.tolist() == [0]
+
+
+def test_map_pins_current_group_and_raises_on_capacity():
+    m = ResidencyMap(16, 3)
+    m.assign_group([0, 1, 2])
+    # new key 3 must not evict 0 or 1, which are in the same group
+    a = m.assign_group([0, 1, 3])
+    assert a.evicted.tolist() == [2]
+    with pytest.raises(ValueError, match="distinct keys"):
+        m.assign_group([4, 5, 6, 7])
+    # capacity errors must not corrupt the table
+    assert sorted(m.resident_keys().tolist()) == [0, 1, 3]
+    with pytest.raises(ValueError, match="eviction"):
+        ResidencyMap(4, 2, eviction="lru")
+
+
+def test_map_valid_mask_excludes_padding():
+    m = ResidencyMap(16, 2)
+    a = m.assign_group([3, 9, 9], valid=[True, False, False])
+    assert a.miss_keys.tolist() == [3] and m.resident == 1
+    assert a.slot[0] == m.slot_of_key[3]
+
+
+# ------------------------------------------------- residency invariance
+@pytest.mark.parametrize("policy",
+                         ["pp", "pp_vr", "full", "fixed", "unfiltered"])
+def test_small_resident_set_bit_identical_to_dense(policy):
+    """THE residency-invariance contract: a 0.25 resident fraction on the
+    Zipf workload reproduces the dense engine's exact-mode decisions,
+    features and sink-stored bytes bit-for-bit, for every policy."""
+    keys, qs, ts = _stream()
+    cfg = _cfg(policy, exact_rounds=16)
+    st_d, info_d, sink_d = _dense_run(cfg, keys, qs, ts, batch=8)
+    S = N_KEYS // 4                    # resident fraction 0.25
+    st_r, info_r, sink_r = _resident_run(cfg, keys, qs, ts, batch=8, S=S)
+
+    np.testing.assert_array_equal(np.asarray(info_d.z), np.asarray(info_r.z))
+    np.testing.assert_array_equal(np.asarray(info_d.p), np.asarray(info_r.p))
+    np.testing.assert_array_equal(np.asarray(info_d.lam_hat),
+                                  np.asarray(info_r.lam_hat))
+    np.testing.assert_array_equal(np.asarray(info_d.features),
+                                  np.asarray(info_r.features))
+    assert int(info_d.writes) == int(info_r.writes)
+    d, r = _store_contents(sink_d.stores), _store_contents(sink_r.stores)
+    assert set(d) == set(r)
+    assert all(d[k] == r[k] for k in d)
+    sink_d.close()
+    sink_r.close()
+
+
+def test_evict_rehydrate_roundtrip_is_bit_exact():
+    """Slots are recycled hard (Zipf tail churns) yet every resident key's
+    persisted row equals the dense engine's row for that key."""
+    keys, qs, ts = _stream()
+    cfg = _cfg("pp", exact_rounds=16)
+    st_d, _, sink_d = _dense_run(cfg, keys, qs, ts, batch=8)
+    S = N_KEYS // 4
+    rmap = ResidencyMap(N_KEYS, S)
+    st_r, _, sink_r = _resident_run(cfg, keys, qs, ts, batch=8, S=S,
+                                    rmap=rmap)
+    assert rmap.stats.evictions > 0          # the knob actually bit
+    assert rmap.stats.misses > rmap.n_slots  # keys were rehydrated
+    for k in rmap.resident_keys():
+        s = int(rmap.slot_of_key[k])
+        for f in ("last_t", "v_f", "agg"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st_r, f))[s],
+                np.asarray(getattr(st_d, f))[int(k)], err_msg=f"{f}[{k}]")
+    sink_d.close()
+    sink_r.close()
+
+
+def test_superset_budget_matches_dense_state_exactly():
+    """With S >= num_entities nothing is ever evicted: the full state —
+    control column included — equals the dense engine's, row-permuted by
+    the slot table."""
+    keys, qs, ts = _stream(n_events=600)
+    cfg = _cfg("pp", exact_rounds=64)
+    st_d, _, sink_d = _dense_run(cfg, keys, qs, ts, batch=64)
+    rmap = ResidencyMap(N_KEYS, N_KEYS)
+    st_r, _, sink_r = _resident_run(cfg, keys, qs, ts, batch=64, S=N_KEYS,
+                                    rmap=rmap, sink_group=4)
+    assert rmap.stats.evictions == 0
+    perm = rmap.slot_of_key[np.sort(rmap.resident_keys())]
+    ks = np.sort(rmap.resident_keys())
+    for f in st_r._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(st_r, f))[perm],
+                                      np.asarray(getattr(st_d, f))[ks],
+                                      err_msg=f)
+    sink_d.close()
+    sink_r.close()
+
+
+def test_fast_mode_residency_invariant():
+    """The closed-form fast mode is slot-addressable too: same decisions
+    and stored bytes as the dense fast engine under a small budget."""
+    keys, qs, ts = _stream()
+    cfg = _cfg("pp")
+    st_d, info_d, sink_d = _dense_run(cfg, keys, qs, ts, batch=8,
+                                      mode="fast")
+    st_r, info_r, sink_r = _resident_run(cfg, keys, qs, ts, batch=8,
+                                         S=N_KEYS // 4, mode="fast")
+    np.testing.assert_array_equal(np.asarray(info_d.z), np.asarray(info_r.z))
+    np.testing.assert_array_equal(np.asarray(info_d.features),
+                                  np.asarray(info_r.features))
+    d, r = _store_contents(sink_d.stores), _store_contents(sink_r.stores)
+    assert set(d) == set(r) and all(d[k] == r[k] for k in d)
+    sink_d.close()
+    sink_r.close()
+
+
+def test_residency_requires_sink_and_matching_state():
+    keys, qs, ts = _stream(n_events=64)
+    cfg = _cfg("pp")
+    with pytest.raises(ValueError, match="sink"):
+        run_stream(cfg, init_state(8, 2), keys, qs, ts, batch=8,
+                   residency=8)
+    with WriteBehindSink(cfg) as sink:
+        with pytest.raises(ValueError, match="slots"):
+            run_stream(cfg, init_state(N_KEYS, 2), keys, qs, ts, batch=8,
+                       mode="fast", sink=sink, residency=8)
+
+
+# ------------------------------------------------- cold-start hydration
+def test_continuation_from_store_is_cold_start_hydration():
+    """Restart as a residency special case: a fresh slot state over the
+    surviving stores continues the stream bit-identically to an engine
+    that never crashed."""
+    keys, qs, ts = _stream(n_events=1000)
+    half = 500
+    cfg = _cfg("pp", exact_rounds=16)
+    root = jax.random.PRNGKey(7)
+
+    # uninterrupted dense reference over the whole stream
+    _, info_full, sink_full = _dense_run(cfg, keys, qs, ts, batch=8)
+
+    # first half dense, then a crash: only the stores survive; the second
+    # half runs on a fresh bounded slot state hydrating on miss
+    _, _, sink_a = _dense_run(cfg, keys[:half], qs[:half], ts[:half],
+                              batch=8)
+    st_b, info_b, _ = _resident_run(cfg, keys[half:], qs[half:], ts[half:],
+                                    batch=8, S=N_KEYS // 4, sink=sink_a)
+    np.testing.assert_array_equal(np.asarray(info_full.z)[half:],
+                                  np.asarray(info_b.z))
+    np.testing.assert_array_equal(np.asarray(info_full.features)[half:],
+                                  np.asarray(info_b.features))
+    d = _store_contents(sink_full.stores)
+    r = _store_contents(sink_a.stores)
+    assert set(d) == set(r) and all(d[k] == r[k] for k in d)
+    sink_full.close()
+    sink_a.close()
+
+
+def test_restart_demo_cold_start_scores_equal():
+    from repro.features.spec import ProfileSpec
+    from repro.serving.pipeline import run_restart_demo
+
+    keys, qs, ts = _stream(n_events=900, n_keys=64)
+    spec = ProfileSpec(windows=(60.0, 3600.0), kde_bandwidth=600.0,
+                       write_budget_per_min=0.12)
+    out = run_restart_demo(spec, 64, keys, qs, ts, batch_per_shard=32,
+                           residency=48, sink_group=2)
+    np.testing.assert_array_equal(out["scores_live"],
+                                  out["scores_recovered"])
+    assert out["write_pct"] < 100.0
+
+
+# ------------------------------------------------------- sharded engine
+@pytest.mark.parametrize("layout", ["block", "virtual"])
+def test_sharded_residency_parity_and_worker_bytes(layout):
+    """Both entity layouts run the slot-based schedule: decisions equal
+    the dense sharded engine's and stored bytes equal the per-event
+    worker oracle's."""
+    keys, qs, ts = _stream(n_events=900)
+    cfg = _cfg("pp", exact_rounds=256)
+    root = jax.random.PRNGKey(3)
+    kw = dict(key_weights=np.bincount(keys, minlength=N_KEYS)) \
+        if layout == "virtual" else {}
+    dense = ShardedFeatureEngine(cfg, N_KEYS, mode="exact", layout=layout,
+                                 **kw)
+    sink_d = dense.make_sink()
+    st_d, info_d = dense.run_stream(dense.init_state(), keys, qs, ts,
+                                    batch_per_shard=64, rng=root,
+                                    sink=sink_d)
+    sink_d.flush()
+
+    S = 32
+    eng = ShardedFeatureEngine(cfg, N_KEYS, mode="exact", layout=layout,
+                               **kw)
+    sink_r = eng.make_sink()
+    st_r, info_r = eng.run_stream(eng.init_resident_state(S), keys, qs, ts,
+                                  batch_per_shard=64, rng=root, sink=sink_r,
+                                  residency=S, sink_group=1)
+    sink_r.flush()
+    np.testing.assert_array_equal(np.asarray(info_d.z), np.asarray(info_r.z))
+    np.testing.assert_array_equal(np.asarray(info_d.features),
+                                  np.asarray(info_r.features))
+
+    store = KVStore(seed=0)
+    wkr = FeatureWorker(cfg, store, rng=root)
+    for i in range(len(keys)):
+        wkr.process(int(keys[i]), float(qs[i]), float(ts[i]))
+    r = _store_contents(sink_r.stores)
+    assert set(r) == set(store.data)
+    assert all(r[k] == store.data[k] for k in r)
+
+    # cold-start scoring straight from the stores == live materialization
+    ents = jnp.asarray(np.unique(keys))
+    t_s = float(ts[-1]) + 1.0
+    np.testing.assert_array_equal(
+        np.asarray(dense.materialize(st_d, ents, t_s)),
+        np.asarray(eng.materialize_cold(sink_r.stores, ents, t_s)))
+    sink_d.close()
+    sink_r.close()
+
+
+# ------------------------------------------- multi-worker flush + reads
+def test_multi_worker_flush_matches_serial_contents():
+    """One flush worker per partition store lands exactly the bytes the
+    serial (queue_depth=0) strawman lands."""
+    keys, qs, ts = _stream(n_events=800)
+    cfg = _cfg("unfiltered")           # maximal flush traffic
+    root = jax.random.PRNGKey(5)
+    wb = WriteBehindSink(cfg, n_partitions=4)
+    run_stream(cfg, init_state(N_KEYS, 2), keys, qs, ts, batch=128,
+               mode="fast", rng=root, sink=wb)
+    wb.flush()
+    ser = WriteBehindSink(cfg, n_partitions=4, queue_depth=0)
+    run_stream(cfg, init_state(N_KEYS, 2), keys, qs, ts, batch=128,
+               mode="fast", rng=root, sink=ser)
+    for i in range(4):                 # per-store, not just merged
+        assert wb.stores[i].data == ser.stores[i].data
+    assert wb.snapshot()["puts"] == ser.snapshot()["puts"]
+    wb.close()
+    ser.close()
+
+
+@pytest.mark.parametrize("queue_depth", [0, 2])
+def test_submit_read_ordered_after_writes(queue_depth):
+    """A read queued after a write observes that write — per partition,
+    through the full dispatcher -> store-worker pipeline."""
+    cfg = _cfg("pp")
+    sink = WriteBehindSink(cfg, n_partitions=3, queue_depth=queue_depth)
+    sd = SerDe(2)
+    n = 32
+    for rep in range(4):               # repeated overwrites stay ordered
+        scal = np.full((4, n), float(rep), np.float32)
+        agg = np.full((n, 2, 3), float(rep), np.float32)
+        sink.submit(np.arange(n), np.ones(n, bool), np.ones(n, bool),
+                    (scal, agg))
+        rows = sink.submit_read(np.arange(n)).result()
+        assert all(r is not None for r in rows)
+        lt, vf, ag, _, _ = sd.unpack_rows(rows)
+        np.testing.assert_array_equal(lt, np.full(n, float(rep)))
+        np.testing.assert_array_equal(ag, agg)
+    # absent keys come back None, present keys in request order
+    rows = sink.submit_read(np.asarray([5, 777, 2])).result()
+    assert rows[1] is None and rows[0] is not None and rows[2] is not None
+    stats = sink.flush()
+    assert stats["reads"] == 5 and stats["rows_read"] == 4 * n + 3
+    sink.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        sink.submit_read(np.arange(2))
+
+
+def test_read_metering_parity():
+    """Satellite bugfix: the read path meters count, bytes and modeled
+    seconds exactly like the write path, and the sink snapshot surfaces
+    it (modeled_io_s == read + write split)."""
+    store = KVStore(StorageModel(), seed=0)
+    sd = SerDe(2)
+    rows = sd.pack_rows(np.zeros(16), np.zeros(16),
+                        np.zeros((16, 2, 3), np.float32), np.zeros(16),
+                        np.zeros(16))
+    store.multi_put(np.arange(16), rows)
+    assert store.counters.modeled_read_s == 0.0
+    assert store.counters.modeled_write_s > 0.0
+    store.multi_get(np.arange(16))
+    c = store.counters
+    assert c.batch_gets == 1 and c.gets == 16
+    assert c.bytes_read == 16 * sd.row_bytes() == c.bytes_written
+    assert c.modeled_read_s > 0.0
+    assert c.modeled_io_s == pytest.approx(c.modeled_read_s
+                                           + c.modeled_write_s)
+
+    cfg = _cfg("pp")
+    sink = WriteBehindSink(cfg, n_partitions=2, stores=[store, KVStore()])
+    snap = sink.snapshot()
+    for col in ("gets", "batch_gets", "bytes_read", "modeled_read_s",
+                "modeled_write_s", "reads", "rows_read", "read_wait_s"):
+        assert col in snap, col
+    assert snap["modeled_read_s"] == pytest.approx(c.modeled_read_s)
+    sink.close()
+
+
+def test_hydration_cost_observable_after_residency_run():
+    keys, qs, ts = _stream(n_events=600)
+    cfg = _cfg("pp")
+    _, _, sink = _resident_run(cfg, keys, qs, ts, batch=8, S=N_KEYS // 4,
+                               mode="fast")
+    snap = sink.snapshot()
+    assert snap["gets"] > 0 and snap["modeled_read_s"] > 0.0
+    assert snap["reads"] > 0 and snap["rows_read"] == snap["gets"]
+    sink.close()
+
+
+def test_chunked_stream_reuses_sink_without_manual_flush():
+    """Chunked streaming: consecutive run_stream calls on the same sink
+    with *fresh* ResidencyMaps per chunk (every key first-touch again)
+    must still match the dense single-run result — the driver drains
+    in-flight flushes before trusting the unordered fast lane."""
+    keys, qs, ts = _stream(n_events=900)
+    cfg = _cfg("pp", exact_rounds=16)
+    root = jax.random.PRNGKey(7)
+    _, info_full, sink_full = _dense_run(cfg, keys, qs, ts, batch=8)
+
+    sink = WriteBehindSink(cfg, n_partitions=3)
+    zs, feats = [], []
+    for lo in (0, 300, 600):           # no sink.flush() between chunks
+        _, info = run_stream(cfg, init_state(N_KEYS // 4, 2),
+                             keys[lo:lo + 300], qs[lo:lo + 300],
+                             ts[lo:lo + 300], batch=8, mode="exact",
+                             rng=root, sink=sink, residency=N_KEYS // 4,
+                             sink_group=1)
+        zs.append(np.asarray(info.z))
+        feats.append(np.asarray(info.features))
+    sink.flush()
+    np.testing.assert_array_equal(np.concatenate(zs),
+                                  np.asarray(info_full.z))
+    np.testing.assert_array_equal(np.concatenate(feats),
+                                  np.asarray(info_full.features))
+    d = _store_contents(sink_full.stores)
+    r = _store_contents(sink.stores)
+    assert set(d) == set(r) and all(d[k] == r[k] for k in d)
+    sink_full.close()
+    sink.close()
+
+
+def test_empty_stream_returns_empty_info():
+    cfg = _cfg("pp")
+    with WriteBehindSink(cfg) as sink:
+        state, info = run_stream(cfg, init_state(8, 2), [], [], [],
+                                 batch=8, mode="fast", sink=sink,
+                                 residency=8)
+        assert info.z.shape[0] == 0 and int(info.writes) == 0
+        assert state.num_entities == 8
+
+
+# ------------------------------------------------------------ mesh path
+def test_mesh_residency_parity_virtual_layout():
+    """8-fake-device mesh: the shard_map residency step + hydration
+    scatter reproduce the dense mesh engine bit-for-bit under the
+    rebalanced virtual layout (subprocess, like the sharded suite)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    env = {"PYTHONPATH": "src",
+           "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "JAX_PLATFORMS": "cpu"}
+    code = """
+        import numpy as np, jax
+        from repro.core import EngineConfig
+        from repro.features.engine import ShardedFeatureEngine
+
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(1)
+        n_events, n_keys = 800, 96
+        w = 1.0 / np.arange(1, n_keys + 1) ** 1.2; w /= w.sum()
+        keys = rng.choice(n_keys, n_events, p=w).astype(np.int32)
+        ts = np.cumsum(rng.exponential(15.0, n_events)).astype(np.float32)
+        qs = rng.lognormal(3.0, 1.0, n_events).astype(np.float32)
+        root = jax.random.PRNGKey(5)
+        cfg = EngineConfig(taus=(60.0, 3600.0), h=600.0, budget=0.002,
+                           alpha=1.0, policy="pp", mu_tau_index=1,
+                           exact_rounds=128)
+        kw = dict(key_weights=np.bincount(keys, minlength=n_keys))
+        dense = ShardedFeatureEngine(cfg, n_keys, mesh=mesh, mode="exact",
+                                     layout="virtual", **kw)
+        sink_d = dense.make_sink()
+        st_d, info_d = dense.run_stream(dense.init_state(), keys, qs, ts,
+                                        batch_per_shard=32, rng=root,
+                                        sink=sink_d)
+        sink_d.flush()
+        S = 24
+        eng = ShardedFeatureEngine(cfg, n_keys, mesh=mesh, mode="exact",
+                                   layout="virtual", **kw)
+        sink_r = eng.make_sink()
+        st_r, info_r = eng.run_stream(eng.init_resident_state(S), keys, qs,
+                                      ts, batch_per_shard=32, rng=root,
+                                      sink=sink_r, residency=S,
+                                      sink_group=2)
+        sink_r.flush()
+        assert (np.asarray(info_d.z) == np.asarray(info_r.z)).all()
+        assert (np.asarray(info_d.features)
+                == np.asarray(info_r.features)).all()
+        d = {}; [d.update(s.data) for s in sink_d.stores]
+        r = {}; [r.update(s.data) for s in sink_r.stores]
+        assert set(d) == set(r) and all(d[k] == r[k] for k in d)
+        print("MESH-RESIDENCY-OK")
+    """
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "MESH-RESIDENCY-OK" in res.stdout
+
+
+# ------------------------------------------------------- property test
+def test_no_interleaving_drops_or_duplicates_keys():
+    """Hypothesis: any interleaving of hits/misses/evictions keeps the
+    key<->slot maps a bijection, keeps every current-group key resident,
+    and accounts every miss as exactly one hydration."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.lists(st.integers(0, 31), min_size=1, max_size=8),
+                    min_size=1, max_size=24),
+           st.sampled_from(EVICTION))
+    def run(groups, eviction):
+        m = ResidencyMap(32, 8, eviction=eviction)
+        hydrated = 0
+        for g in groups:
+            a = m.assign_group(np.asarray(g, np.int64))
+            hydrated += a.miss_keys.size
+            # every group key resident, on the slot the plan named
+            for k in set(g):
+                s = int(m.slot_of_key[k])
+                assert s >= 0 and int(m.key_of_slot[s]) == k
+            # per-lane translation agrees with the table
+            np.testing.assert_array_equal(a.slot, m.slot_of_key[np.asarray(g)])
+            # bijection between live keys and occupied slots
+            live = np.nonzero(m.slot_of_key >= 0)[0]
+            occ = m.key_of_slot[m.key_of_slot >= 0]
+            assert sorted(live.tolist()) == sorted(occ.tolist())
+            assert len(set(occ.tolist())) == occ.size
+        assert hydrated == m.stats.misses
+        assert m.stats.misses - m.stats.evictions == m.resident
+
+    run()
