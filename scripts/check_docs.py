@@ -5,27 +5,24 @@ resolve to a real file or directory in the repo.
     python scripts/check_docs.py [files...]     # default: README.md,
                                                 # benchmarks/README.md
 
-Checks four things:
-  * markdown links `[text](target)` whose target is not an URL/anchor;
-  * backtick-quoted repo paths in tables (e.g. `src/repro/core/engine.py`)
+Checks two things:
+  * markdown links `[text](target)` whose target is not an URL/anchor, and
+    backtick-quoted repo paths in tables (e.g. `src/repro/core/engine.py`)
     — the paper-to-code crosswalk must never drift from the tree;
-  * `layout="..."` option names: every name the docs mention must exist in
-    `features/engine.py`'s LAYOUTS, and every LAYOUTS entry must be
-    documented somewhere in the checked files (no dangling layout options
-    in either direction);
-  * `--suite <name>` bench-suite names: every name the docs mention must be
-    a `bench_engine.py` --suite choice, and every choice must be
-    documented (same no-dangling rule, both directions);
-  * `eviction="..."` residency-eviction names: every name the docs mention
-    must exist in `streaming/residency.py`'s EVICTION, and every EVICTION
-    entry must be documented (same no-dangling rule, both directions).
+  * option-name lists (`OPTION_LINTS`): every option name the docs mention
+    (`layout="..."`, `--suite <name>`, `eviction="..."`, `backend="..."`)
+    must exist in the owning module's option tuple, and every tuple entry
+    must be documented somewhere in the checked files — no dangling option
+    names in either direction.
 Exits non-zero listing every unresolved reference.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import re
 import sys
+from typing import FrozenSet
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_FILES = ["README.md", "benchmarks/README.md"]
@@ -37,120 +34,80 @@ _LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
 _TICKED = re.compile(
     r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_.-]+"
     r"\.(?:py|md|json|ya?ml|txt|toml|sh))`")
-# sharded-layout option names as the docs spell them (`layout="virtual"`)
-_LAYOUT_MD = re.compile(r'layout="([A-Za-z0-9_]+)"')
-_LAYOUTS_SRC = "src/repro/features/engine.py"
-# bench-suite names as the docs spell them (`--suite persist`)
-_SUITE_MD = re.compile(r"--suite[= ]([A-Za-z0-9_]+)")
-_SUITES_SRC = "benchmarks/bench_engine.py"
-# residency-eviction option names as the docs spell them
-# (`eviction="second_chance"`)
-_EVICTION_MD = re.compile(r'eviction="([A-Za-z0-9_]+)"')
-_EVICTION_SRC = "src/repro/streaming/residency.py"
 
 
-def code_layouts() -> set:
-    """The LAYOUTS tuple of features/engine.py, read from source (the lint
-    must not import jax)."""
-    src = open(os.path.join(ROOT, _LAYOUTS_SRC)).read()
-    m = re.search(r"^LAYOUTS\s*=\s*\(([^)]*)\)", src, re.M)
+@dataclasses.dataclass(frozen=True)
+class OptionLint:
+    """One docs<->code option-name lint (both directions).
+
+    ``md_re`` extracts names as the docs spell them; ``spell`` prints a
+    name back in that spelling for error messages.  ``src``/``src_re``
+    locate the owning option tuple, read from *source* (the lint must not
+    import jax); ``tuple_name`` names it in messages.  ``exempt`` entries
+    need no documentation (e.g. the ``--suite all`` alias).
+    """
+    md_re: re.Pattern
+    spell: str
+    src: str
+    src_re: str
+    tuple_name: str
+    exempt: FrozenSet[str] = frozenset()
+
+
+OPTION_LINTS = (
+    # sharded-layout names as the docs spell them (`layout="virtual"`)
+    OptionLint(re.compile(r'layout="([A-Za-z0-9_]+)"'), 'layout="{name}"',
+               "src/repro/features/engine.py",
+               r"^LAYOUTS\s*=\s*\(([^)]*)\)", "LAYOUTS"),
+    # bench-suite names as the docs spell them (`--suite persist`);
+    # 'all' is the run-everything alias, exempt from documentation
+    OptionLint(re.compile(r"--suite[= ]([A-Za-z0-9_]+)"), "--suite {name}",
+               "benchmarks/bench_engine.py",
+               r"choices=\(([^)]*)\)", "choices", frozenset({"all"})),
+    # residency-eviction names (`eviction="second_chance"`)
+    OptionLint(re.compile(r'eviction="([A-Za-z0-9_]+)"'),
+               'eviction="{name}"', "src/repro/streaming/residency.py",
+               r"^EVICTION\s*=\s*\(([^)]*)\)", "EVICTION"),
+    # persistence-backend names (`backend="durable"`)
+    OptionLint(re.compile(r'backend="([A-Za-z0-9_]+)"'),
+               'backend="{name}"', "src/repro/streaming/durable.py",
+               r"^BACKENDS\s*=\s*\(([^)]*)\)", "BACKENDS"),
+)
+
+
+def code_names(lint: OptionLint) -> set:
+    """The option tuple of ``lint.src``, read from source text."""
+    src = open(os.path.join(ROOT, lint.src)).read()
+    m = re.search(lint.src_re, src, re.M)
     return set(re.findall(r'"([A-Za-z0-9_]+)"', m.group(1))) if m else set()
 
 
-def check_layout_options(files) -> list:
-    """No dangling `layout=` names between the docs and the engine.
+def check_options(files, lint: OptionLint) -> list:
+    """No dangling option names between the docs and ``lint.src``.
 
-    docs -> code runs over the files being linted; code -> docs
-    ("every LAYOUTS entry is documented") always consults the full
-    DEFAULT_FILES set, so linting a single file never blames another file
-    for a name that is in fact documented there.
+    docs -> code runs over the files being linted; code -> docs ("every
+    tuple entry is documented") always consults the full DEFAULT_FILES
+    set, so linting a single file never blames another file for a name
+    that is in fact documented there.
     """
-    code = code_layouts()
+    code = code_names(lint)
     bad = []
 
     def names_in(f):
         path = os.path.join(ROOT, f)
-        return _LAYOUT_MD.findall(open(path).read()) \
+        return lint.md_re.findall(open(path).read()) \
             if os.path.exists(path) else []
 
     for f in files:
         for name in names_in(f):
             if name not in code:
-                bad.append((f, f'layout="{name}" not in '
-                               f'{_LAYOUTS_SRC} LAYOUTS'))
+                bad.append((f, f'{lint.spell.format(name=name)} not in '
+                               f'{lint.src} {lint.tuple_name}'))
     documented = {n for f in DEFAULT_FILES for n in names_in(f)}
-    for name in sorted(code - documented):
+    for name in sorted(code - documented - lint.exempt):
         bad.append((DEFAULT_FILES[0],
-                    f'layout="{name}" in {_LAYOUTS_SRC} LAYOUTS but '
-                    f'undocumented'))
-    return bad
-
-
-def code_suites() -> set:
-    """The --suite choices of bench_engine.py, read from source."""
-    src = open(os.path.join(ROOT, _SUITES_SRC)).read()
-    m = re.search(r'choices=\(([^)]*)\)', src)
-    return set(re.findall(r'"([A-Za-z0-9_]+)"', m.group(1))) if m else set()
-
-
-def check_suite_options(files) -> list:
-    """No dangling `--suite` names between the docs and bench_engine.py.
-
-    Same shape as the layout lint: docs -> code runs over the files being
-    linted; code -> docs always consults the full DEFAULT_FILES set.
-    ('all' is the run-everything alias, exempt from documentation.)
-    """
-    code = code_suites()
-    bad = []
-
-    def names_in(f):
-        path = os.path.join(ROOT, f)
-        return _SUITE_MD.findall(open(path).read()) \
-            if os.path.exists(path) else []
-
-    for f in files:
-        for name in names_in(f):
-            if name not in code:
-                bad.append((f, f'--suite {name} not in '
-                               f'{_SUITES_SRC} choices'))
-    documented = {n for f in DEFAULT_FILES for n in names_in(f)}
-    for name in sorted(code - documented - {"all"}):
-        bad.append((DEFAULT_FILES[0],
-                    f'--suite {name} in {_SUITES_SRC} choices but '
-                    f'undocumented'))
-    return bad
-
-
-def code_evictions() -> set:
-    """The EVICTION tuple of streaming/residency.py, read from source."""
-    src = open(os.path.join(ROOT, _EVICTION_SRC)).read()
-    m = re.search(r"^EVICTION\s*=\s*\(([^)]*)\)", src, re.M)
-    return set(re.findall(r'"([A-Za-z0-9_]+)"', m.group(1))) if m else set()
-
-
-def check_eviction_options(files) -> list:
-    """No dangling `eviction=` names between the docs and the residency
-    map.  Same shape as the layout lint: docs -> code runs over the files
-    being linted; code -> docs always consults the full DEFAULT_FILES set.
-    """
-    code = code_evictions()
-    bad = []
-
-    def names_in(f):
-        path = os.path.join(ROOT, f)
-        return _EVICTION_MD.findall(open(path).read()) \
-            if os.path.exists(path) else []
-
-    for f in files:
-        for name in names_in(f):
-            if name not in code:
-                bad.append((f, f'eviction="{name}" not in '
-                               f'{_EVICTION_SRC} EVICTION'))
-    documented = {n for f in DEFAULT_FILES for n in names_in(f)}
-    for name in sorted(code - documented):
-        bad.append((DEFAULT_FILES[0],
-                    f'eviction="{name}" in {_EVICTION_SRC} EVICTION but '
-                    f'undocumented'))
+                    f'{lint.spell.format(name=name)} in {lint.src} '
+                    f'{lint.tuple_name} but undocumented'))
     return bad
 
 
@@ -182,9 +139,8 @@ def main(argv) -> int:
             bad.append((f, "<file missing>"))
             continue
         bad += check(f)
-    bad += check_layout_options(files)
-    bad += check_suite_options(files)
-    bad += check_eviction_options(files)
+    for lint in OPTION_LINTS:
+        bad += check_options(files, lint)
     for md, target in bad:
         print(f"UNRESOLVED {md}: {target}")
     print(f"checked {len(files)} file(s): "

@@ -313,9 +313,14 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
     post-update rows are submitted for durable write-behind flush; device
     compute of the next group overlaps storage of the previous one.
     ``sink_group`` is the group-commit knob: larger groups amortize
-    per-dispatch host overhead against a longer durability lag.  The
-    caller owns the sink lifecycle — call ``sink.flush()`` (or close it)
-    to wait for the trailing groups.  State values are identical to the
+    per-dispatch host overhead against a longer durability lag.  With a
+    durable-backed sink (``WriteBehindSink(backend="durable")``) that
+    boundary is physical, not modeled: each flush group lands on each
+    touched partition as one atomic WAL batch under one fsync
+    (``streaming/durable.py``), so a crash loses at most the trailing
+    unflushed groups and recovery replays the log to exactly a group
+    boundary — never half a group.  The caller owns the sink lifecycle —
+    call ``sink.flush()`` (or close it) to wait for the trailing groups.  State values are identical to the
     single-scan path (the engine numerics are
     compilation-context-invariant — ``kernels/detmath.py``).
 

@@ -675,10 +675,35 @@ class ShardedFeatureEngine:
         layout: key -> partition is exactly the layout's key -> shard map,
         so every durable row lands on the store owned by the shard that
         computed it (no cross-partition traffic — the §5.3 no-coordination
-        property extends to storage)."""
+        property extends to storage).
+
+        ``**kw`` passes through to the sink — in particular
+        ``backend="durable", store_dir=...`` puts real WAL+compaction
+        stores (``streaming/durable.py``) behind this engine, one
+        partition directory per shard; ``hydrate_from_dir`` is the
+        matching restart path.
+        """
         return persistence.WriteBehindSink(
             self.cfg, n_partitions=self.n_shards,
             partition_fn=lambda ks: self.route(np.asarray(ks))[0], **kw)
+
+    def reopen_stores(self, store_dir: str, **kw):
+        """Recover this engine's per-shard ``DurableStore`` partitions from
+        an on-disk directory (WAL replay + segment load, torn tails
+        repaired — see ``streaming/durable.py``).  The returned list is
+        layout-aligned, so it can be passed to ``hydrate_state``,
+        ``materialize_cold``, or a fresh sink via ``make_sink(stores=...)``
+        to resume writing."""
+        from repro.streaming.durable import open_partition_stores
+        return open_partition_stores(store_dir, self.n_shards, **kw)
+
+    def hydrate_from_dir(self, store_dir: str, **kw) -> ProfileState:
+        """Real crash recovery: reopen the durable partition directories
+        under ``store_dir`` and rebuild the mesh-sharded state from what
+        the disk actually holds.  Unlike ``hydrate_state(sink.stores)``
+        (which reads the surviving *process* state), this path starts from
+        bytes alone — it is what a restarted process would run."""
+        return self.hydrate_state(self.reopen_stores(store_dir, **kw))
 
     def _row_of_key_host(self) -> np.ndarray:
         """Host map: global entity id -> flat state row, per the layout."""
@@ -750,7 +775,8 @@ class ShardedFeatureEngine:
             present = [i for i, r in enumerate(rows) if r is not None]
             if present:
                 lt, _, ag, _, _ = serde.unpack_rows(
-                    [rows[i] for i in present])
+                    [rows[i] for i in present],
+                    keys=keys_np[sel][np.asarray(present)], partition=int(p))
                 idx = sel[np.asarray(present)]
                 last_t[idx] = lt.astype(np.float32)
                 agg[idx] = ag

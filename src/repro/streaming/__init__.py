@@ -1,9 +1,10 @@
 """Streaming substrate: workload generation, byte-backed KV store with an
-LSM cost model, per-event workers, write-behind persistence for the
-vectorized fast path, slot-based bounded residency, and closed-loop /
-fixed-rate replay."""
-from repro.streaming import (kvstore, persistence, replay, residency,
-                             worker, workload)
+LSM cost model, a crash-safe durable WAL+compaction backend with fault
+injection, per-event workers, write-behind persistence for the vectorized
+fast path, slot-based bounded residency, and closed-loop / fixed-rate
+replay."""
+from repro.streaming import (durable, faults, kvstore, persistence, replay,
+                             residency, worker, workload)
 
-__all__ = ["kvstore", "persistence", "replay", "residency", "worker",
-           "workload"]
+__all__ = ["durable", "faults", "kvstore", "persistence", "replay",
+           "residency", "worker", "workload"]

@@ -1,0 +1,446 @@
+"""Crash-safe embedded durable backend: WAL + memtable + compaction.
+
+``streaming/kvstore.py`` keeps the SerDe byte contract real but *models*
+the storage medium (a dict plus Gamma-distributed service times) — a crash
+anywhere in the write-behind pipeline silently loses everything and the
+``modeled_io_s``/WAF columns are simulations.  ``DurableStore`` is the real
+thing at container scale: an embedded append-only store with the same
+``get/put/multi_get/multi_put/keys`` surface as ``KVStore`` (it *is* a
+``KVStore`` subclass — every parity test in ``tests/test_persistence.py``
+applies backend-agnostically), whose bytes actually land on disk:
+
+* **Write-ahead log.**  Every ``put``/``multi_put`` appends one *batch
+  record* to ``wal.log`` — header (magic, monotonic seq, row count, body
+  length, header CRC32), body (key/length-prefixed SerDe rows) and a
+  commit footer whose CRC32 chains header and body.  A batch is atomic:
+  recovery applies it only when its commit footer validates, so a durable
+  store never exposes half a flush group.
+* **Group commit.**  One ``multi_put`` is one batch record written with a
+  single ``write`` and (by default) a single ``fsync`` — and the
+  write-behind sink issues exactly one ``multi_put`` per partition per
+  flush group, so the fsync boundary *is* the engine's flush-group
+  boundary (``core.stream.run_stream(sink=, sink_group=)``): a crash loses
+  at most the uncommitted tail, never a committed group.
+* **Memtable.**  ``self.data`` (the inherited dict) doubles as the
+  memtable: reads are served from memory, the log is write-only until
+  recovery.  The modeled service-time accounting of the base class keeps
+  running unchanged, so modeled and measured columns can be reported side
+  by side.
+* **Compaction.**  When the WAL exceeds ``compact_threshold_bytes`` the
+  memtable is written as one sorted segment file (same batch framing, one
+  file per snapshot), the WAL is truncated and older segments are removed.
+  Crash ordering: segment → fsync → atomic rename → dir fsync → WAL
+  truncate → stale-segment unlink; a crash between any two steps recovers
+  correctly because replay is seq-guarded (below).
+
+Recovery (``DurableStore(path)`` on an existing directory) replays segments
+in ascending seq order, then WAL batches, skipping any batch whose seq is
+not greater than the last applied one — which makes replay *idempotent*
+(replaying a log prefix twice equals once) and makes the
+crash-mid-compaction window safe (stale WAL batches older than the segment
+are ignored).  Failure classification is deterministic:
+
+* a record whose claimed extent runs past end-of-file is a **torn write**
+  (the single-writer append-only discipline means a process kill can only
+  truncate the tail): the tail is dropped, the file repaired by
+  truncation, and ``torn_tails`` counts it;
+* a record whose bytes are all present but whose header or commit CRC
+  fails is **corruption** (bit flip / medium error): recovery raises
+  ``CorruptionError`` naming the file and offset — silent data loss is
+  never an option.
+
+``streaming/faults.py`` injects exactly these failure modes through the
+``fileops`` seam, and ``tests/test_durable.py`` pins the kill-mid-flush
+contract: SIGKILL mid-write, then ``hydrate_state`` from the reopened
+store, equals an uninterrupted run over the acknowledged prefix bit for
+bit, for every policy in both engine modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+import time
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.streaming.kvstore import KVStore, StorageModel
+
+__all__ = ["DurableStore", "DurableCounters", "CorruptionError", "FileOps",
+           "open_partition_stores", "BACKENDS"]
+
+# Persistence backends the write-behind sink can sit on
+# (``WriteBehindSink(backend=...)`` / ``ShardedFeatureEngine.make_sink``).
+# README.md documents each; scripts/check_docs.py lints the two lists
+# against each other (same pattern as LAYOUTS / EVICTION).
+BACKENDS = ("memory", "durable")
+
+WAL_NAME = "wal.log"
+SEG_SUFFIX = ".seg"
+
+_BATCH_MAGIC = 0x57414C31       # 'WAL1'
+_COMMIT_MAGIC = 0x434D5431      # 'CMT1'
+_HDR = struct.Struct("<IQII")   # magic, seq, n_rows, body_len
+_HDR_CRC = struct.Struct("<I")
+_ROW = struct.Struct("<qI")     # key, row_len
+_FOOT = struct.Struct("<II")    # commit magic, body crc (chained on header)
+HEADER_BYTES = _HDR.size + _HDR_CRC.size
+FOOTER_BYTES = _FOOT.size
+
+
+class CorruptionError(RuntimeError):
+    """Checksum mismatch on fully-present bytes: a bit flip or medium
+    error, not a torn tail.  Recovery refuses to guess — it names the file
+    and byte offset and stops."""
+
+
+class FileOps:
+    """The file layer seam: every byte ``DurableStore`` moves goes through
+    one of these methods, so ``streaming.faults.FaultyFileOps`` can inject
+    torn writes, transient errors, stalls and kill points deterministically
+    without monkey-patching ``os``."""
+
+    def open(self, path: str, mode: str):
+        return open(path, mode)
+
+    def fsync(self, f) -> None:
+        f.flush()
+        os.fsync(f.fileno())
+
+    def replace(self, src: str, dst: str) -> None:
+        os.replace(src, dst)
+
+    def remove(self, path: str) -> None:
+        os.remove(path)
+
+    def fsync_dir(self, path: str) -> None:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+
+@dataclasses.dataclass
+class DurableCounters:
+    """Measured (not modeled) durability accounting.
+
+    ``wal_bytes``/``seg_bytes`` are physical bytes appended to the log and
+    written to segment files; together with the base class's logical
+    ``bytes_written`` they give the *measured* write amplification
+    (``DurableStore.measured_waf``) the bench persist suite reports next
+    to the modeled column.
+    """
+    fsyncs: int = 0
+    wal_bytes: int = 0
+    seg_bytes: int = 0
+    compactions: int = 0
+    batches: int = 0
+    # recovery-side
+    recovered_batches: int = 0
+    stale_batches_skipped: int = 0
+    torn_tails: int = 0
+    torn_bytes_dropped: int = 0
+    recovery_s: float = 0.0
+    # measured wall time inside write/fsync calls
+    io_write_s: float = 0.0
+    io_sync_s: float = 0.0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _encode_batch(seq: int, keys: Sequence[int], rows: Sequence[bytes]
+                  ) -> bytes:
+    """One atomic batch record: header+CRC, key/len-prefixed rows, commit
+    footer whose CRC chains header and body (binding the payload to the
+    seq it claims)."""
+    body = b"".join(_ROW.pack(int(k), len(r)) + r
+                    for k, r in zip(keys, rows))
+    hdr = _HDR.pack(_BATCH_MAGIC, seq, len(keys), len(body))
+    hdr += _HDR_CRC.pack(zlib.crc32(hdr))
+    crc = zlib.crc32(body, zlib.crc32(hdr))
+    return hdr + body + _FOOT.pack(_COMMIT_MAGIC, crc)
+
+
+def _decode_batches(buf: bytes, path: str):
+    """Yield ``(seq, [(key, row)...])`` for every committed batch in
+    ``buf``; returns the offset where valid data ends (< len(buf) iff a
+    torn tail was dropped).  Raises ``CorruptionError`` on any checksum
+    failure over fully-present bytes (see the module docstring for the
+    torn-vs-corrupt classification)."""
+    out = []
+    off, end = 0, len(buf)
+    while off < end:
+        if off + HEADER_BYTES > end:
+            break                                    # torn header at tail
+        hdr = buf[off:off + _HDR.size]
+        magic, seq, n_rows, body_len = _HDR.unpack(hdr)
+        (hcrc,) = _HDR_CRC.unpack_from(buf, off + _HDR.size)
+        if magic != _BATCH_MAGIC or hcrc != zlib.crc32(hdr):
+            raise CorruptionError(
+                f"{path}: bad batch header at offset {off} "
+                f"(magic={magic:#x})")
+        total = HEADER_BYTES + body_len + FOOTER_BYTES
+        if off + total > end:
+            break                                    # torn body/footer
+        body = buf[off + HEADER_BYTES:off + HEADER_BYTES + body_len]
+        cmagic, crc = _FOOT.unpack_from(buf, off + HEADER_BYTES + body_len)
+        want = zlib.crc32(body, zlib.crc32(buf[off:off + HEADER_BYTES]))
+        if cmagic != _COMMIT_MAGIC or crc != want:
+            raise CorruptionError(
+                f"{path}: batch seq={seq} at offset {off} fails its "
+                f"commit checksum")
+        rows, roff = [], 0
+        for _ in range(n_rows):
+            key, rlen = _ROW.unpack_from(body, roff)
+            roff += _ROW.size
+            rows.append((key, body[roff:roff + rlen]))
+            roff += rlen
+        if roff != body_len:
+            raise CorruptionError(
+                f"{path}: batch seq={seq} at offset {off} row framing "
+                f"does not cover its body ({roff} != {body_len})")
+        out.append((seq, rows))
+        off += total
+    return out, off
+
+
+class DurableStore(KVStore):
+    """Embedded WAL+memtable+compaction store, drop-in behind ``KVStore``.
+
+    ``DurableStore(path)`` creates the directory (or recovers from it if it
+    exists — segments first, then the seq-guarded WAL replay).  The modeled
+    service-time machinery of the base class keeps running so modeled and
+    measured IO can be reported side by side; the measured columns live on
+    ``self.durable`` (see ``DurableCounters``) and are surfaced through
+    ``measured()`` into ``SinkStats.snapshot()``.
+
+    ``sync=True`` (default) fsyncs once per batch append — the group-commit
+    contract.  ``sync=False`` is for tests/benchmarks that only need the
+    byte path, not the durability guarantee.  Single-writer: exactly one
+    thread may mutate a store at a time (the write-behind sink dedicates
+    one flush worker per store, satisfying this by construction).
+    """
+
+    def __init__(self, path: str, *, model: Optional[StorageModel] = None,
+                 seed: int = 0, fileops: Optional[FileOps] = None,
+                 compact_threshold_bytes: int = 1 << 20,
+                 sync: bool = True, recover: bool = True):
+        super().__init__(model=model, seed=seed)
+        self.path = str(path)
+        self.fops = fileops or FileOps()
+        self.compact_threshold_bytes = int(compact_threshold_bytes)
+        self.sync = bool(sync)
+        self.durable = DurableCounters()
+        self._next_seq = 1
+        self._applied_seq = 0
+        self._wal_size = 0
+        self._closed = False
+        os.makedirs(self.path, exist_ok=True)
+        if recover:
+            t0 = time.perf_counter()
+            self._recover()
+            self.durable.recovery_s = time.perf_counter() - t0
+        self._wal_f = self.fops.open(self._wal_path(), "ab")
+        self._wal_size = os.path.getsize(self._wal_path())
+
+    # ------------------------------------------------------------- paths
+    def _wal_path(self) -> str:
+        return os.path.join(self.path, WAL_NAME)
+
+    def _seg_path(self, seq: int) -> str:
+        return os.path.join(self.path, f"seg-{seq:012d}{SEG_SUFFIX}")
+
+    def _seg_files(self) -> List[Tuple[int, str]]:
+        out = []
+        for name in os.listdir(self.path):
+            if name.startswith("seg-") and name.endswith(SEG_SUFFIX):
+                out.append((int(name[4:-len(SEG_SUFFIX)]),
+                            os.path.join(self.path, name)))
+        return sorted(out)
+
+    # ---------------------------------------------------------- recovery
+    def _recover(self) -> None:
+        """Segments (ascending seq), then the WAL, batches seq-guarded.
+
+        A ``.tmp`` segment is an unfinished compaction (crash before the
+        atomic rename) and is discarded.  A torn WAL tail is dropped and
+        the file repaired by truncation; corruption raises."""
+        d = self.durable
+        for name in os.listdir(self.path):
+            if name.endswith(".tmp"):
+                os.remove(os.path.join(self.path, name))
+        for seq, seg in self._seg_files():
+            with self.fops.open(seg, "rb") as f:
+                buf = f.read()
+            batches, valid = _decode_batches(buf, seg)
+            if valid != len(buf):
+                # a published (renamed) segment was written and fsynced in
+                # full before the rename — a short one is corruption
+                raise CorruptionError(f"{seg}: truncated segment file")
+            for bseq, rows in batches:
+                self._apply(bseq, rows, recovered=True)
+        wal = self._wal_path()
+        if os.path.exists(wal):
+            with self.fops.open(wal, "rb") as f:
+                buf = f.read()
+            batches, valid = _decode_batches(buf, wal)
+            for bseq, rows in batches:
+                self._apply(bseq, rows, recovered=True)
+            if valid != len(buf):
+                d.torn_tails += 1
+                d.torn_bytes_dropped += len(buf) - valid
+                with self.fops.open(wal, "r+b") as f:
+                    f.truncate(valid)
+
+    def _apply(self, seq: int, rows, recovered: bool = False) -> None:
+        d = self.durable
+        if seq <= self._applied_seq:
+            if recovered:
+                d.stale_batches_skipped += 1
+            return
+        for key, raw in rows:
+            self.data[int(key)] = raw
+        self._applied_seq = seq
+        self._next_seq = max(self._next_seq, seq + 1)
+        if recovered:
+            d.recovered_batches += 1
+
+    # ------------------------------------------------------------ writes
+    def _append_batch(self, keys, rows) -> None:
+        """Failure-atomic WAL append: either the whole batch is on the log
+        (and fsynced, under ``sync=True``) or the file is restored to its
+        pre-batch length — so a transient write error can simply be
+        retried by the caller (the sink's backoff loop) without leaving a
+        torn record mid-file."""
+        if self._closed:
+            raise RuntimeError("write on a closed DurableStore")
+        seq = self._next_seq
+        buf = _encode_batch(seq, keys, rows)
+        d = self.durable
+        pos = self._wal_size
+        t0 = time.perf_counter()
+        try:
+            self._wal_f.write(buf)
+            self._wal_f.flush()
+        except OSError:
+            d.io_write_s += time.perf_counter() - t0
+            try:        # restore the pre-batch length: keep the log clean
+                self._wal_f.truncate(pos)
+                self._wal_f.seek(pos)
+            except OSError:
+                pass    # a kill here leaves a torn tail — recovery drops it
+            raise
+        d.io_write_s += time.perf_counter() - t0
+        if self.sync:
+            t0 = time.perf_counter()
+            self.fops.fsync(self._wal_f)
+            d.io_sync_s += time.perf_counter() - t0
+            d.fsyncs += 1
+        self._wal_size = pos + len(buf)
+        d.wal_bytes += len(buf)
+        d.batches += 1
+        self._next_seq = seq + 1
+        self._apply(seq, list(zip(map(int, np.asarray(keys).reshape(-1)),
+                                  rows)))
+        if self._wal_size >= self.compact_threshold_bytes:
+            self.compact()
+
+    @staticmethod
+    def _as_bytes(rows) -> List[bytes]:
+        return [r.tobytes() if isinstance(r, np.ndarray) else bytes(r)
+                for r in rows]
+
+    def put(self, key: int, raw: bytes) -> None:
+        raw = bytes(raw)
+        self._append_batch([int(key)], [raw])
+        # modeled accounting + memtable write ride the base implementation
+        super().put(int(key), raw)
+
+    def multi_put(self, keys, rows) -> None:
+        """One flush group's batch: a single atomic WAL record, a single
+        group-commit fsync."""
+        rows_b = self._as_bytes(rows)
+        keys = np.asarray(keys).reshape(-1)
+        self._append_batch(keys, rows_b)
+        super().multi_put(keys, rows_b)
+
+    # -------------------------------------------------------- compaction
+    def compact(self) -> None:
+        """Write the memtable as one sorted segment, truncate the WAL,
+        drop superseded segments.  Every step is individually crash-safe
+        (see the module docstring for the ordering argument)."""
+        d = self.durable
+        seq = self._next_seq
+        self._next_seq = seq + 1
+        ks = sorted(self.data)
+        buf = _encode_batch(seq, ks, [self.data[k] for k in ks])
+        old_segs = [p for _, p in self._seg_files()]
+        tmp = self._seg_path(seq) + ".tmp"
+        t0 = time.perf_counter()
+        with self.fops.open(tmp, "wb") as f:
+            f.write(buf)
+            self.fops.fsync(f)
+        d.fsyncs += 1
+        self.fops.replace(tmp, self._seg_path(seq))
+        self.fops.fsync_dir(self.path)
+        d.fsyncs += 1
+        # segment durable: everything on the WAL is now stale (seq guard)
+        self._wal_f.truncate(0)
+        self._wal_f.seek(0)
+        self.fops.fsync(self._wal_f)
+        d.fsyncs += 1
+        d.io_write_s += time.perf_counter() - t0
+        self._wal_size = 0
+        self._applied_seq = seq
+        for p in old_segs:
+            self.fops.remove(p)
+        d.seg_bytes += len(buf)
+        d.compactions += 1
+
+    # --------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            try:
+                if self.sync:
+                    self.fops.fsync(self._wal_f)
+                    self.durable.fsyncs += 1
+            finally:
+                self._wal_f.close()
+
+    def __enter__(self) -> "DurableStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------ observability
+    def measured(self) -> dict:
+        """Measured durability counters (merged into sink snapshots)."""
+        return self.durable.snapshot()
+
+    def measured_waf(self) -> float:
+        """Physical bytes (WAL appends + segment writes) per logical byte
+        ingested — the measured counterpart of the base class's modeled
+        ``waf()``."""
+        d = self.durable
+        logical = max(self.counters.bytes_written, 1)
+        return (d.wal_bytes + d.seg_bytes) / logical
+
+
+def open_partition_stores(path: str, n_partitions: int, *,
+                          model: Optional[StorageModel] = None,
+                          seed: int = 0, **kw) -> List[DurableStore]:
+    """Open (or create) one ``DurableStore`` per partition under ``path``
+    (``part-0000/`` ... layout-aligned with the sink's ``partition_fn``).
+    Reopening the same directory recovers every partition from its
+    WAL+segments — the restart path of ``ShardedFeatureEngine.
+    hydrate_from_dir`` and ``serving.pipeline.run_restart_demo``."""
+    os.makedirs(path, exist_ok=True)
+    return [DurableStore(os.path.join(path, f"part-{i:04d}"),
+                         model=model, seed=seed + i, **kw)
+            for i in range(int(n_partitions))]

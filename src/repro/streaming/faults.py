@@ -1,0 +1,295 @@
+"""Deterministic fault injection for the durable backend.
+
+``streaming/durable.py`` exposes every byte it moves through a ``FileOps``
+seam; this module plugs failure into that seam so the crash-safety claims
+are *tested*, not asserted:
+
+* **torn writes** — ``FaultPlan.kill_at_write`` SIGKILLs the process after
+  ``kill_partial_bytes`` of the Nth WAL append have reached the OS: a real
+  torn tail, produced the way a real crash produces one (the parent test
+  driver then recovers the directory and checks bit-exactness), and
+  ``truncate_at`` manufactures the same state post hoc;
+* **bit flips** — ``flip_bit`` corrupts one bit of an on-disk file, which
+  recovery must *refuse* (``CorruptionError``), never silently absorb;
+* **transient errors** — ``transient_at``/``transient_every`` raise
+  ``TransientIOError`` (an ``OSError``) on chosen WAL appends; the
+  write-behind sink's bounded-backoff retry must complete the run with no
+  data loss (``DurableStore._append_batch`` is failure-atomic, so a retried
+  batch never leaves a torn record mid-file);
+* **slow IO** — ``stall_s`` sleeps on every WAL append, driving the sink's
+  bounded queue into backpressure / overflow handling.
+
+The second half is the kill-mid-flush protocol behind the repo's headline
+recovery test (``tests/test_durable.py``, CI crash-recovery step).  Run as
+a module (``python -m repro.streaming.faults --dir ...``), this file is the
+*victim*: it streams ``crash_stream`` chunks through an engine with a
+serial durable sink (one flush group per chunk ⇒ one WAL append per chunk),
+prints ``ACK <events>`` after each durable chunk, and is SIGKILLed by its
+own fault plan mid-append.  ``spawn_kill_mid_flush`` is the parent half:
+it launches the victim, collects the ACKs, and returns them for the test
+to compare against ``run_reference`` — an uninterrupted in-memory run over
+exactly the acknowledged event prefix.  The comparison is byte-for-byte
+because the engine's thinning RNG is counter-based on (entity, time bits)
+and rows are end-of-group snapshots, so results are prefix- and
+chunking-invariant (see ``streaming/persistence.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import signal
+import subprocess
+import sys
+import time
+from typing import FrozenSet, List, Optional, Tuple
+
+import numpy as np
+
+from repro.streaming.durable import WAL_NAME, DurableStore, FileOps
+
+__all__ = ["TransientIOError", "FaultPlan", "FaultyFileOps", "flip_bit",
+           "truncate_at", "crash_cfg", "crash_stream", "run_reference",
+           "spawn_kill_mid_flush"]
+
+
+class TransientIOError(OSError):
+    """Injected retryable fault (an ``OSError``, so it matches the sink's
+    default ``RetryPolicy.retry_on``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """What to inject, keyed on the 1-indexed WAL append count.
+
+    The WAL append is the unit because group commit makes it the unit of
+    durability: one sink flush group = one ``multi_put`` = one append.
+    ``transient_*`` faults fire *before* any byte is written, so a retry
+    simply re-runs the append under the next count; ``kill_at_write``
+    writes ``kill_partial_bytes`` of the record (clamped below a full
+    record so the tail is genuinely torn) and SIGKILLs the process.
+    """
+    transient_at: FrozenSet[int] = frozenset()
+    transient_every: int = 0
+    fail_always: bool = False
+    stall_s: float = 0.0
+    kill_at_write: int = 0
+    kill_partial_bytes: int = 24
+
+    def wants_transient(self, n: int) -> bool:
+        return (self.fail_always or n in self.transient_at
+                or (self.transient_every > 0
+                    and n % self.transient_every == 0))
+
+
+class _FaultyFile:
+    """WAL file proxy: every ``write`` consults the plan first."""
+
+    def __init__(self, f, ops: "FaultyFileOps"):
+        self._f = f
+        self._ops = ops
+
+    def write(self, buf) -> int:
+        ops = self._ops
+        plan = ops.plan
+        ops.wal_writes += 1
+        n = ops.wal_writes
+        if plan.stall_s > 0.0:
+            time.sleep(plan.stall_s)
+        if plan.kill_at_write and n == plan.kill_at_write:
+            k = min(int(plan.kill_partial_bytes), max(len(buf) - 1, 0))
+            self._f.write(buf[:k])
+            self._f.flush()         # push the torn prefix to the OS
+            os.kill(os.getpid(), signal.SIGKILL)
+        if plan.wants_transient(n):
+            ops.injected_transients += 1
+            raise TransientIOError(f"injected transient fault on WAL "
+                                   f"append #{n}")
+        return self._f.write(buf)
+
+    def __getattr__(self, name):
+        return getattr(self._f, name)
+
+
+class FaultyFileOps(FileOps):
+    """``FileOps`` that wraps writable WAL handles in ``_FaultyFile``.
+
+    Counts are process-wide per instance (``wal_writes``,
+    ``injected_transients``) so a test can assert exactly how many faults
+    fired.  Segment/compaction files pass through untouched — the WAL
+    append is the deterministic injection point.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.wal_writes = 0
+        self.injected_transients = 0
+
+    def open(self, path: str, mode: str):
+        f = super().open(path, mode)
+        if os.path.basename(path) == WAL_NAME and ("a" in mode
+                                                   or "+" in mode
+                                                   or "w" in mode):
+            return _FaultyFile(f, self)
+        return f
+
+
+# ------------------------------------------------------ post-hoc corruption
+def flip_bit(path: str, offset: int, bit: int = 0) -> None:
+    """Flip one bit of an on-disk file (bit-flip / medium corruption)."""
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        if len(b) != 1:
+            raise ValueError(f"{path}: offset {offset} past end of file")
+        f.seek(offset)
+        f.write(bytes([b[0] ^ (1 << bit)]))
+
+
+def truncate_at(path: str, k: int) -> None:
+    """Truncate a file at byte ``k`` (manufactured torn write)."""
+    with open(path, "r+b") as f:
+        f.truncate(k)
+
+
+# ------------------------------------------------- kill-mid-flush protocol
+CRASH_N_KEYS = 64
+CRASH_BATCH = 128
+CRASH_GROUP = 2         # blocks per flush group ⇒ chunk = 256 events
+
+
+def crash_cfg(policy: str):
+    """Small-but-real engine config shared by victim and reference (both
+    sides must agree exactly — the comparison is bit-for-bit)."""
+    from repro.core.types import EngineConfig
+    return EngineConfig(taus=(60.0, 3600.0), h=600.0, budget=0.002,
+                        alpha=1.0, policy=policy, fixed_rate=0.3,
+                        mu_tau_index=1, exact_rounds=64)
+
+
+CRASH_MAX_EVENTS = 8192
+
+
+def crash_stream(n_events: int, seed: int = 0
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Deterministic event stream for the crash protocol (both processes
+    regenerate it from the seed; nothing is piped between them).
+
+    Always drawn at the full ``CRASH_MAX_EVENTS`` length and sliced, so a
+    shorter request is an exact *prefix* of a longer one — the victim
+    (full stream) and the reference (acknowledged prefix) must see
+    identical events, and column-at-a-time RNG draws would otherwise make
+    the q/t columns depend on the requested length.
+    """
+    if n_events > CRASH_MAX_EVENTS:
+        raise ValueError(f"n_events={n_events} > {CRASH_MAX_EVENTS}")
+    r = np.random.default_rng(seed)
+    keys = r.integers(0, CRASH_N_KEYS, CRASH_MAX_EVENTS).astype(np.int64)
+    qs = r.gamma(2.0, 1.0, CRASH_MAX_EVENTS).astype(np.float32)
+    ts = np.cumsum(r.exponential(0.05, CRASH_MAX_EVENTS)).astype(np.float32)
+    return keys[:n_events], qs[:n_events], ts[:n_events]
+
+
+def _chunk_events() -> int:
+    return CRASH_BATCH * CRASH_GROUP
+
+
+def run_reference(policy: str, mode: str, n_events: int, seed: int = 0):
+    """Uninterrupted run over the first ``n_events`` events, serial sink on
+    a plain in-memory ``KVStore``.  Returns the store (its ``.data`` is the
+    byte-exact expectation for a recovered durable store)."""
+    import jax
+    from repro.core.stream import run_stream
+    from repro.core.types import init_state
+    from repro.streaming.kvstore import KVStore
+    from repro.streaming.persistence import WriteBehindSink
+
+    cfg = crash_cfg(policy)
+    store = KVStore(seed=0)
+    sink = WriteBehindSink(cfg, stores=[store], queue_depth=0)
+    keys, qs, ts = crash_stream(n_events, seed)
+    state = init_state(CRASH_N_KEYS, len(cfg.taus))
+    chunk = _chunk_events()
+    rng = jax.random.PRNGKey(0)
+    # same chunking as the victim: flush-group boundaries line up exactly
+    # (results are chunking-invariant, but identical dispatch is cheap
+    # insurance and keeps the two programs structurally identical)
+    for lo in range(0, n_events, chunk):
+        state, _ = run_stream(cfg, state, keys[lo:lo + chunk],
+                              qs[lo:lo + chunk], ts[lo:lo + chunk],
+                              batch=CRASH_BATCH, mode=mode, rng=rng,
+                              collect_info=False, sink=sink,
+                              sink_group=CRASH_GROUP)
+        sink.flush()
+    sink.close()
+    return store
+
+
+def _victim_main(argv: Optional[List[str]] = None) -> None:
+    """The process that gets killed: chunked stream through a serial
+    durable sink, ``ACK <events>`` after each durable chunk."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", required=True)
+    ap.add_argument("--policy", required=True)
+    ap.add_argument("--mode", default="exact", choices=("exact", "fast"))
+    ap.add_argument("--n-chunks", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kill-at-write", type=int, default=0)
+    ap.add_argument("--kill-partial-bytes", type=int, default=24)
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.core.stream import run_stream
+    from repro.core.types import init_state
+    from repro.streaming.persistence import WriteBehindSink
+
+    plan = FaultPlan(kill_at_write=args.kill_at_write,
+                     kill_partial_bytes=args.kill_partial_bytes)
+    # one partition, serial sink, compaction disabled: exactly one WAL
+    # append per non-empty flush group, so kill_at_write=N dies in chunk N
+    store = DurableStore(args.dir, fileops=FaultyFileOps(plan),
+                         compact_threshold_bytes=1 << 40)
+    cfg = crash_cfg(args.policy)
+    sink = WriteBehindSink(cfg, stores=[store], queue_depth=0)
+    chunk = _chunk_events()
+    keys, qs, ts = crash_stream(args.n_chunks * chunk, args.seed)
+    state = init_state(CRASH_N_KEYS, len(cfg.taus))
+    rng = jax.random.PRNGKey(0)
+    for c in range(args.n_chunks):
+        lo = c * chunk
+        state, _ = run_stream(cfg, state, keys[lo:lo + chunk],
+                              qs[lo:lo + chunk], ts[lo:lo + chunk],
+                              batch=CRASH_BATCH, mode=args.mode, rng=rng,
+                              collect_info=False, sink=sink,
+                              sink_group=CRASH_GROUP)
+        sink.flush()
+        # group commit done: this chunk is durable — say so, then carry on
+        print(f"ACK {lo + chunk}", flush=True)
+    sink.close()
+    print("CLEAN", flush=True)
+
+
+def spawn_kill_mid_flush(store_dir: str, *, policy: str, mode: str,
+                         kill_at_write: int, n_chunks: int = 4,
+                         seed: int = 0, timeout_s: float = 300.0):
+    """Run the victim process to its SIGKILL; returns
+    ``(returncode, acked_events, stderr)``.
+
+    ``returncode == -signal.SIGKILL`` and ``acked_events`` (the largest
+    ``ACK``, 0 if none) tell the caller exactly which durable prefix the
+    recovered store must equal.  The victim inherits the environment
+    (``PYTHONPATH=src`` under the test runner).
+    """
+    cmd = [sys.executable, "-m", "repro.streaming.faults",
+           "--dir", store_dir, "--policy", policy, "--mode", mode,
+           "--n-chunks", str(n_chunks), "--seed", str(seed),
+           "--kill-at-write", str(kill_at_write)]
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout_s)
+    acks = [int(ln.split()[1]) for ln in proc.stdout.splitlines()
+            if ln.startswith("ACK ")]
+    return proc.returncode, (max(acks) if acks else 0), proc.stderr
+
+
+if __name__ == "__main__":
+    _victim_main()

@@ -104,21 +104,34 @@ class SerDe:
     def row_bytes(self) -> int:
         return self._head.size + self.n_taus * 3 * 4 + self._tail.size
 
+    @staticmethod
+    def _ctx(key=None, partition=None) -> str:
+        """Error-message suffix naming where a bad row came from, so a
+        corrupt byte string is attributable without a debugger."""
+        out = ""
+        if key is not None:
+            out += f" for key {int(key)}"
+        if partition is not None:
+            out += f" in partition {int(partition)}"
+        return out
+
     def pack(self, last_t: float, v_f: float, agg: np.ndarray,
              v_full: float, last_t_full: float) -> bytes:
         return (self._head.pack(PROFILE_MAGIC, self.n_taus, last_t, v_f)
                 + agg.astype("<f4").tobytes()
                 + self._tail.pack(v_full, last_t_full))
 
-    def unpack(self, raw: bytes):
+    def unpack(self, raw: bytes, *, key=None, partition=None):
         if len(raw) < self.row_bytes():
             raise ValueError(
-                f"truncated profile row: {len(raw)} < {self.row_bytes()} bytes")
+                f"truncated profile row{self._ctx(key, partition)}: "
+                f"{len(raw)} < {self.row_bytes()} bytes")
         magic, n, last_t, v_f = self._head.unpack_from(raw, 0)
         if magic != PROFILE_MAGIC or n != self.n_taus:
             # explicit (not `assert`): corruption must surface under -O too
             raise ValueError(
-                f"corrupt profile row: magic={magic:#x} n_taus={n} "
+                f"corrupt profile row{self._ctx(key, partition)}: "
+                f"magic={magic:#x} n_taus={n} "
                 f"(want {PROFILE_MAGIC:#x}/{self.n_taus})")
         off = self._head.size
         agg = np.frombuffer(raw, "<f4", count=n * 3, offset=off
@@ -144,26 +157,37 @@ class SerDe:
         out["last_t_full"] = np.asarray(last_t_full, np.float64)
         return out.view(np.uint8).reshape(n, self.row_bytes())
 
-    def unpack_rows(self, raws: Sequence[bytes]):
+    def unpack_rows(self, raws: Sequence[bytes], *, keys=None,
+                    partition=None):
         """Inverse of ``pack_rows`` over a sequence of row byte strings.
 
         Returns ``(last_t, v_f, agg, v_full, last_t_full)`` numpy columns
-        (``agg`` is ``[N, n_taus, 3] float32``).  Raises ``ValueError`` on a
-        truncated buffer or any corrupt row, like the scalar ``unpack``.
+        (``agg`` is ``[N, n_taus, 3] float32``).  Every entry must be
+        exactly one packed row: an empty byte string, an off-by-one row or
+        a non-multiple blob raises ``ValueError`` — joining first and
+        checking only the total length would let a dropped row and a
+        padded row cancel out.  ``keys``/``partition`` (optional, aligned
+        with ``raws``) put the owning key and partition in the message,
+        like the scalar ``unpack``.
         """
-        buf = b"".join(raws)
         rb = self.row_bytes()
-        if len(buf) % rb:
-            raise ValueError(
-                f"truncated profile rows: {len(buf)} is not a multiple of "
-                f"row_bytes={rb}")
+        for i, r in enumerate(raws):
+            if len(r) != rb:
+                key = keys[i] if keys is not None else None
+                raise ValueError(
+                    f"truncated profile row at index "
+                    f"{i}{self._ctx(key, partition)}: {len(r)} bytes "
+                    f"(want exactly row_bytes={rb})")
+        buf = b"".join(raws)
         arr = np.frombuffer(buf, self._row_dtype)
         if arr.size and not (np.all(arr["magic"] == PROFILE_MAGIC)
                              and np.all(arr["n"] == self.n_taus)):
             bad = int(np.argmax((arr["magic"] != PROFILE_MAGIC)
                                 | (arr["n"] != self.n_taus)))
+            key = keys[bad] if keys is not None else None
             raise ValueError(
-                f"corrupt profile row at index {bad}: "
+                f"corrupt profile row at index "
+                f"{bad}{self._ctx(key, partition)}: "
                 f"magic={int(arr['magic'][bad]):#x} n_taus={int(arr['n'][bad])} "
                 f"(want {PROFILE_MAGIC:#x}/{self.n_taus})")
         return (arr["last_t"].copy(), arr["v_f"].copy(), arr["agg"].copy(),
@@ -259,6 +283,13 @@ class KVStore:
 
     def waf(self) -> float:
         return self.model.waf(self.counters.bytes_written)
+
+    def measured(self) -> dict:
+        """Measured durability counters.  The modeled in-memory store has
+        none (empty dict); ``streaming.durable.DurableStore`` overrides
+        this with real fsync/byte/recovery numbers, which the sink's
+        ``snapshot()`` aggregates next to the modeled columns."""
+        return {}
 
 
 def partition_of(key: int, n_partitions: int) -> int:

@@ -60,16 +60,40 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import EngineConfig, ProfileState
+from repro.streaming.durable import BACKENDS, open_partition_stores
 from repro.streaming.kvstore import KVStore, SerDe, StorageModel
 
-__all__ = ["WriteBehindSink", "SinkStats", "ReadTicket", "hydrate_state",
-           "FULL_STREAM_POLICIES"]
+__all__ = ["WriteBehindSink", "SinkStats", "ReadTicket", "RetryPolicy",
+           "hydrate_state", "FULL_STREAM_POLICIES"]
 
 # Policies whose durable rows include the full-stream control column (they
 # write back on every event, so the stored column stays current).
 FULL_STREAM_POLICIES = ("full", "unfiltered")
 
 _STOP = object()
+
+OVERFLOW_POLICIES = ("block", "degrade-to-serial")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff for transient storage errors.
+
+    Every store op a flush worker issues (``multi_put``/``multi_get``) runs
+    under this policy: an exception matching ``retry_on`` is retried up to
+    ``retries`` times, sleeping ``base_s * factor**attempt`` between
+    attempts; exhaustion re-raises and poisons the sink like any other
+    flush failure.  Safe because the durable backend's append is
+    failure-atomic (``DurableStore._append_batch`` restores the WAL to its
+    pre-batch length on error) and its seq guard makes replay idempotent —
+    a retried batch can never be applied twice or leave a torn record
+    mid-file.  ``streaming.faults.TransientIOError`` is an ``OSError``, so
+    injected faults exercise exactly this path.
+    """
+    retries: int = 4
+    base_s: float = 0.002
+    factor: float = 2.0
+    retry_on: Tuple[type, ...] = (OSError,)
 
 
 @dataclasses.dataclass
@@ -88,6 +112,14 @@ class SinkStats:
     reads: int = 0
     rows_read: int = 0
     read_wait_s: float = 0.0
+    # fault handling: transient store errors seen, retries issued, time
+    # slept in backoff, ops that exhausted the retry budget, and flushes
+    # degraded to the driver thread by the overflow policy
+    transient_errors: int = 0
+    retries: int = 0
+    retry_wait_s: float = 0.0
+    flush_errors: int = 0
+    degraded_flushes: int = 0
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -167,6 +199,26 @@ class WriteBehindSink:
     ``submit_read`` hydration reads correctly ordered after earlier
     flushes of the same keys.
 
+    ``backend`` selects the partition stores when none are passed in:
+    ``"memory"`` (default) is the modeled in-process ``KVStore``;
+    ``"durable"`` opens real WAL+memtable+compaction ``DurableStore``
+    partitions under ``store_dir`` (required), recovering from disk if the
+    directory already holds a previous run — see ``streaming/durable.py``.
+    Both present the identical ``KVStore`` API and SerDe byte contract.
+
+    Fault handling: every store op a flush worker issues runs under
+    ``retry`` (bounded exponential backoff, default ``RetryPolicy()``) so
+    transient ``OSError``s complete the run instead of poisoning it;
+    exhaustion — like any other worker exception — is surfaced to the
+    driver thread on the *next* ``submit()``/``flush()`` call, not just at
+    ``close()``.  ``overflow`` picks the behavior when the bounded queue
+    is full at ``submit()``: ``"block"`` (default) waits — pure
+    backpressure — while ``"degrade-to-serial"`` drains the pipeline and
+    flushes the offered block inline on the driver thread (counted in
+    ``degraded_flushes``); draining first preserves per-partition FIFO
+    order and the one-thread-per-store invariant, so last-write-wins
+    semantics are unchanged.
+
     Thread-safety: ``submit``/``submit_read``/``flush``/``close`` are
     driver-thread calls; each store is touched by exactly one worker
     thread until ``flush``/``close`` returns.
@@ -178,17 +230,36 @@ class WriteBehindSink:
                  = None,
                  stores: Optional[List[KVStore]] = None,
                  storage: Optional[StorageModel] = None,
-                 seed: int = 0, queue_depth: int = 2):
+                 seed: int = 0, queue_depth: int = 2,
+                 backend: str = "memory",
+                 store_dir: Optional[str] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 overflow: str = "block"):
         self.cfg = cfg
         self.serde = SerDe(len(cfg.taus))
         self.full_stream = cfg.policy in FULL_STREAM_POLICIES
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend={backend!r} "
+                             f"(expected one of {BACKENDS})")
+        if overflow not in OVERFLOW_POLICIES:
+            raise ValueError(f"unknown overflow={overflow!r} "
+                             f"(expected one of {OVERFLOW_POLICIES})")
+        self._owns_stores = stores is None
         if stores is not None:
             self.stores = list(stores)
+        elif backend == "durable":
+            if store_dir is None:
+                raise ValueError("backend='durable' requires store_dir=")
+            self.stores = open_partition_stores(
+                store_dir, n_partitions, model=storage, seed=seed)
         else:
             self.stores = [KVStore(storage or StorageModel(), seed=seed + i)
                            for i in range(n_partitions)]
         self._partition_fn = partition_fn or \
             (lambda keys: keys % len(self.stores))
+        self.retry = retry or RetryPolicy()
+        self._retry_lock = threading.Lock()
+        self._overflow = overflow
         self.stats = SinkStats()
         self._put_busy = [0.0] * len(self.stores)
         self._exc: Optional[BaseException] = None
@@ -236,6 +307,20 @@ class WriteBehindSink:
         if self._serial:
             self._flush_block(keys, z, valid, rows)
             return
+        if self._overflow == "degrade-to-serial" and self._q.full():
+            # graceful degradation: drain the pipeline (preserving FIFO
+            # order and the one-thread-per-store invariant — the workers
+            # are idle once the queues join), then flush this block inline
+            # on the driver thread instead of blocking behind the queue
+            t0 = time.perf_counter()
+            self._q.join()
+            for sq in self._store_qs:
+                sq.join()
+            self._check()
+            self.stats.degraded_flushes += 1
+            self._flush_block(keys, z, valid, rows, inline=True)
+            self.stats.submit_wait_s += time.perf_counter() - t0
+            return
         t0 = time.perf_counter()
         self._q.put(("block", keys, z, valid, rows))
         self.stats.submit_wait_s += time.perf_counter() - t0
@@ -275,7 +360,8 @@ class WriteBehindSink:
         ticket = ReadTicket(int(keys.size), len(splits), self.stats)
         if self._serial:
             for p, idx, ks in splits:
-                ticket._deliver(idx, self.stores[p].multi_get(ks))
+                ticket._deliver(idx, self._with_retry(
+                    self.stores[p].multi_get, ks))
             return ticket
         if ordered:
             self._q.put(("read", ticket, splits))
@@ -295,7 +381,9 @@ class WriteBehindSink:
         return self.snapshot()
 
     def close(self) -> None:
-        """Drain and stop the flush threads (idempotent)."""
+        """Drain and stop the flush threads (idempotent); stores the sink
+        opened itself (``backend=``) are closed too — a durable store's
+        close is its final group-commit fsync."""
         if not self._closed:
             self._closed = True
             if not self._serial:
@@ -303,6 +391,9 @@ class WriteBehindSink:
                 self._thread.join()
                 for th in self._store_threads:
                     th.join()
+            if self._owns_stores:
+                for s in self.stores:
+                    getattr(s, "close", lambda: None)()
         self._check()
 
     def __enter__(self) -> "WriteBehindSink":
@@ -343,6 +434,21 @@ class WriteBehindSink:
         agg["store_path_s_max"] = max(
             (busy + s.counters.modeled_io_s
              for busy, s in zip(self._put_busy, self.stores)), default=0.0)
+        # measured durability counters (durable backend only; the base
+        # KVStore reports {}): summed across partitions, plus the measured
+        # WAF — physical WAL+segment bytes per logical byte ingested —
+        # reported *next to* the modeled ``waf`` column, never replacing it
+        measured: dict = {}
+        for s in self.stores:
+            for k, v in s.measured().items():
+                measured[k] = measured.get(k, 0) + v
+        if measured:
+            measured["measured_bytes_written"] = (
+                measured.get("wal_bytes", 0) + measured.get("seg_bytes", 0))
+            measured["measured_waf"] = (
+                measured["measured_bytes_written"]
+                / max(agg["bytes_written"], 1))
+            agg["measured"] = measured
         agg.update(self.stats.snapshot())
         return agg
 
@@ -350,6 +456,29 @@ class WriteBehindSink:
         if self._exc is not None:
             exc, self._exc = self._exc, None
             raise RuntimeError("write-behind flush failed") from exc
+
+    def _with_retry(self, fn, *args):
+        """One store op under the bounded-backoff ``RetryPolicy``.
+
+        Counters are taken under a lock (workers run concurrently); the
+        final attempt's failure re-raises for the caller's normal error
+        surface (worker → ``self._exc`` → next driver ``_check``).
+        """
+        rp = self.retry
+        delay = rp.base_s
+        for attempt in range(rp.retries + 1):
+            try:
+                return fn(*args)
+            except rp.retry_on:
+                with self._retry_lock:
+                    self.stats.transient_errors += 1
+                    if attempt >= rp.retries:
+                        self.stats.flush_errors += 1
+                        raise
+                    self.stats.retries += 1
+                    self.stats.retry_wait_s += delay
+                time.sleep(delay)
+                delay *= rp.factor
 
     # ---------------------------------------------------- flush threads
     def _drain(self) -> None:
@@ -388,31 +517,33 @@ class WriteBehindSink:
                 if item[0] == "read":
                     _, ticket, idx, ks = item
                     try:
-                        ticket._deliver(idx, self.stores[i].multi_get(ks))
+                        ticket._deliver(idx, self._with_retry(
+                            self.stores[i].multi_get, ks))
                     except BaseException as e:
                         ticket._deliver(idx, (), exc=e)
                         raise
                 elif self._exc is None:
                     _, ks, rows = item
                     t0 = time.perf_counter()
-                    self.stores[i].multi_put(ks, rows)
+                    self._with_retry(self.stores[i].multi_put, ks, rows)
                     self._put_busy[i] += time.perf_counter() - t0
             except BaseException as e:
                 self._exc = e
             finally:
                 sq.task_done()
 
-    def _put(self, p: int, keys, rows) -> None:
-        """Route one partition's packed rows to its store (worker or
-        inline under the serial strawman)."""
-        if self._serial:
+    def _put(self, p: int, keys, rows, inline: bool = False) -> None:
+        """Route one partition's packed rows to its store (worker thread,
+        or directly under the serial strawman / a degraded flush)."""
+        if self._serial or inline:
             t0 = time.perf_counter()
-            self.stores[p].multi_put(keys, rows)
+            self._with_retry(self.stores[p].multi_put, keys, rows)
             self._put_busy[p] += time.perf_counter() - t0
         else:
             self._store_qs[p].put(("put", keys, rows))
 
-    def _flush_block(self, keys, z, valid, rows) -> None:
+    def _flush_block(self, keys, z, valid, rows, inline: bool = False
+                     ) -> None:
         t0 = time.perf_counter()
         # flush groups arrive with z shaped [G, B]; lanes are flat below
         keys = np.asarray(keys).reshape(-1)
@@ -453,7 +584,7 @@ class WriteBehindSink:
             part = self._partition_fn(uk)
             for p in np.unique(part):
                 m = part == p
-                self._put(int(p), uk[m], packed[m])
+                self._put(int(p), uk[m], packed[m], inline=inline)
         st.flush_s += time.perf_counter() - t0
 
 
@@ -480,12 +611,12 @@ def hydrate_state(stores: Sequence[KVStore], num_rows: int, n_taus: int,
     agg = np.zeros((num_rows, n_taus, 3), np.float32)
     v_full = np.zeros(num_rows, np.float32)
     last_t_full = np.full(num_rows, -np.inf, np.float32)
-    for store in stores:
+    for p, store in enumerate(stores):
         ks = np.asarray(store.keys(), np.int64)
         if ks.size == 0:
             continue
         raws = store.multi_get(ks)
-        lt, vf, ag, vfl, ltf = serde.unpack_rows(raws)
+        lt, vf, ag, vfl, ltf = serde.unpack_rows(raws, keys=ks, partition=p)
         rows = row_of_key[ks] if row_of_key is not None else ks
         last_t[rows] = lt.astype(np.float32)
         v_f[rows] = vf.astype(np.float32)

@@ -151,7 +151,7 @@ class FeatureWorker:
             row = (-math.inf, 0.0, np.zeros((len(self.taus), 3), np.float32),
                    0.0, -math.inf)
         else:
-            row = serde.unpack(raw)
+            row = serde.unpack(raw, key=int(key))
         store.counters.serde_s += time.perf_counter() - ts0
         last_t, v_f, agg, v_full, last_t_full = row
 
@@ -206,7 +206,7 @@ class FeatureWorker:
         if raw is None:
             agg_now = np.zeros((len(self.taus), 3), np.float32)
         else:
-            last_t, v_f, agg, *_ = self.serde.unpack(raw)
+            last_t, v_f, agg, *_ = self.serde.unpack(raw, key=int(key))
             dt = t - last_t
             agg_now = agg * np.exp(
                 -np.clip(dt, 0, None) / self.taus)[:, None] \

@@ -94,6 +94,47 @@ def test_unpack_rejects_corrupt_and_truncated():
         SerDe(2).unpack(raw)
 
 
+def test_unpack_rows_truncated_and_garbage_tail_matrix():
+    """Every entry must be exactly one packed row — the length check is
+    per row, so a dropped row and a padded neighbor cannot cancel out to
+    a plausible total length."""
+    sd = SerDe(2)
+    raw = sd.pack(1.0, 2.0, np.ones((2, 3), np.float32), 3.0, 4.0)
+    rb = sd.row_bytes()
+    # empty bytes is a truncated row, not silently zero rows
+    with pytest.raises(ValueError, match="truncated"):
+        sd.unpack_rows([b""])
+    with pytest.raises(ValueError, match="index 1"):
+        sd.unpack_rows([raw, b""])
+    # off-by-one row size, both directions
+    with pytest.raises(ValueError, match="truncated"):
+        sd.unpack_rows([raw[:-1]])
+    with pytest.raises(ValueError, match="truncated"):
+        sd.unpack_rows([raw + b"\x00"])
+    # non-multiple blob: two rows + a garbage tail in one byte string
+    with pytest.raises(ValueError, match="truncated"):
+        sd.unpack_rows([raw + raw + raw[: rb // 2]])
+    # a whole-multiple blob in one entry is still not a row
+    with pytest.raises(ValueError, match="truncated"):
+        sd.unpack_rows([raw + raw])
+    # the valid matrix boundary: exact rows still round-trip
+    lt, *_ = sd.unpack_rows([raw, raw])
+    np.testing.assert_array_equal(lt, [1.0, 1.0])
+
+
+def test_serde_errors_name_key_and_partition():
+    sd = SerDe(2)
+    raw = sd.pack(0.0, 0.0, np.zeros((2, 3), np.float32), 0.0, 0.0)
+    with pytest.raises(ValueError, match=r"key 77.*partition 3"):
+        sd.unpack_rows([raw, b""], keys=[5, 77], partition=3)
+    with pytest.raises(ValueError, match=r"key 5.*partition 1"):
+        sd.unpack_rows([b"\xff\xff" + raw[2:]], keys=[5], partition=1)
+    with pytest.raises(ValueError, match=r"key 9.*partition 0"):
+        sd.unpack(raw[:-2], key=9, partition=0)
+    with pytest.raises(ValueError, match=r"key 11"):
+        sd.unpack(b"\xff\xff" + raw[2:], key=11)
+
+
 def test_multi_ops_batched_accounting():
     store = KVStore(StorageModel(), seed=0)
     sd = SerDe(2)
@@ -266,13 +307,40 @@ def test_sharded_sink_parity_and_hydrate(layout):
 
 # ------------------------------------------------------------ lifecycle
 def test_sink_surfaces_background_errors():
+    """A poisoned block surfaces on the next single ``flush()`` call —
+    deterministically, not after repeated polling and not only at
+    ``close()``."""
     cfg = _cfg("pp")
     sink = WriteBehindSink(cfg, n_partitions=1)
     bad_rows = (np.zeros(4, np.float32),) * 5   # agg has the wrong rank
     sink.submit(np.arange(4), np.ones(4, bool), np.ones(4, bool), bad_rows)
     with pytest.raises(RuntimeError, match="write-behind flush failed"):
-        for _ in range(50):
-            sink.flush()
+        sink.flush()
+    sink.close()
+
+
+def test_poisoned_store_surfaces_on_next_submit():
+    """Regression (satellite): a store that fails in the background poisons
+    the sink promptly — a later ``submit()`` raises within a bounded number
+    of calls; the error does not sit hidden until ``close()``."""
+    import time as _time
+
+    class PoisonedStore(KVStore):
+        def multi_put(self, keys, rows):
+            raise RuntimeError("store is poisoned")
+
+    cfg = _cfg("unfiltered")
+    sink = WriteBehindSink(cfg, stores=[PoisonedStore()], queue_depth=2)
+    B = 4
+    block = (np.arange(B), np.ones(B, bool), np.ones(B, bool),
+             (np.zeros((4, B), np.float32), np.zeros((B, 2, 3), np.float32)))
+    with pytest.raises(RuntimeError, match="write-behind flush failed"):
+        # first submit triggers the background failure; subsequent submits
+        # must surface it as soon as the workers have recorded it
+        for _ in range(200):
+            sink.submit(*block)
+            _time.sleep(0.002)
+        pytest.fail("poisoned store never surfaced through submit()")
     sink.close()
 
 
