@@ -547,9 +547,28 @@ def _run_skew_suite(n_events, batch, seed,
 
 def _suite_of_row(row: dict) -> str:
     """Which suite produced a JSON row (for partial-run merging)."""
-    if row.get("suite") in ("skew", "persist", "residency"):
+    if row.get("suite") in ("skew", "persist", "residency", "serving"):
         return row["suite"]
     return "sharded" if "mesh" in row else "engine"
+
+
+def write_rows(rows, suites) -> None:
+    """Merge ``rows`` into BENCH_engine.json, keeping every row whose
+    suite was NOT run this invocation — a partial run never clobbers the
+    other suites' trajectories.  Shared with ``bench_serving``."""
+    try:
+        kept = []
+        if os.path.exists(_OUT_PATH):
+            try:
+                with open(_OUT_PATH) as f:
+                    old = json.load(f).get("rows", [])
+                kept = [r for r in old if _suite_of_row(r) not in suites]
+            except (ValueError, OSError):
+                kept = []
+        with open(_OUT_PATH, "w") as f:
+            json.dump({"bench": "engine", "rows": kept + rows}, f, indent=1)
+    except OSError:
+        pass
 
 
 def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
@@ -569,23 +588,12 @@ def run(n_events: int = 65_536, n_keys: int = 4_096, batch: int = 4_096,
     if "residency" in suites:
         rows += _run_residency_suite(n_events, n_keys, min(batch, 1024),
                                      seed)
+    if "serving" in suites:
+        from benchmarks import bench_serving
+        rows += bench_serving.run(seed=seed, write_json=False)
     if not write_json:          # CI-sized rows must never overwrite the
         return rows             # tracked full-scale trajectory
-    try:
-        # merge with the suite(s) NOT run this invocation so a partial run
-        # never clobbers the other suites' trajectories
-        kept = []
-        if os.path.exists(_OUT_PATH):
-            try:
-                with open(_OUT_PATH) as f:
-                    old = json.load(f).get("rows", [])
-                kept = [r for r in old if _suite_of_row(r) not in suites]
-            except (ValueError, OSError):
-                kept = []
-        with open(_OUT_PATH, "w") as f:
-            json.dump({"bench": "engine", "rows": kept + rows}, f, indent=1)
-    except OSError:
-        pass
+    write_rows(rows, suites)
     return rows
 
 
@@ -593,20 +601,22 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
                     choices=("engine", "sharded", "skew", "persist",
-                             "residency", "all"),
+                             "residency", "serving", "all"),
                     help="engine: local throughput (+ masked-vs-compact "
                          "exact rows); sharded: 8-fake-device run_stream; "
                          "skew: block-vs-virtual layout padding over the "
                          "Table 2 regimes; persist: write-behind durable "
                          "fast path vs no-persistence baseline; residency: "
                          "slot-based hot set, throughput + hydration cost "
-                         "vs resident fraction")
+                         "vs resident fraction; serving: open-loop tail "
+                         "latency vs offered load (bench_serving.py)")
     ap.add_argument("--n-events", type=int, default=65_536)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized stream (shrinks n_events; rows go to "
                          "stdout only, BENCH_engine.json is untouched)")
     args = ap.parse_args()
-    suites = ("engine", "sharded", "skew", "persist", "residency") \
+    suites = ("engine", "sharded", "skew", "persist", "residency",
+              "serving") \
         if args.suite == "all" else (args.suite,)
     n_events = min(args.n_events, 8_192) if args.smoke else args.n_events
     run(n_events=n_events, suites=suites, write_json=not args.smoke)

@@ -19,6 +19,8 @@ SUITES = {
     "fig10": ("bench_fidelity", "Fig 10: approximation fidelity"),
     "kernels": ("bench_kernels", "Pallas kernels vs oracles"),
     "engine": ("bench_engine", "Engine throughput (events/s, BENCH_engine.json)"),
+    "serving": ("bench_serving",
+                "Serving tier: open-loop tail latency vs offered load"),
     "roofline": ("bench_roofline", "Roofline terms from dry-run artifacts"),
 }
 
@@ -30,6 +32,7 @@ QUICK_KW = {
     "fig10": dict(n_events=20_000, lambdas_pm=(0.002, 0.02, 0.2)),
     "fig5": dict(alphas=(0.0, 1.0, 3.0)),
     "engine": dict(n_events=16_384),
+    "serving": dict(n_events=6_000),
 }
 
 

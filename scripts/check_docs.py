@@ -72,6 +72,10 @@ OPTION_LINTS = (
     OptionLint(re.compile(r'backend="([A-Za-z0-9_]+)"'),
                'backend="{name}"', "src/repro/streaming/durable.py",
                r"^BACKENDS\s*=\s*\(([^)]*)\)", "BACKENDS"),
+    # serving-frontend names as the docs spell them (`--frontend scoring`)
+    OptionLint(re.compile(r"--frontend[= ]([A-Za-z0-9_]+)"),
+               "--frontend {name}", "src/repro/launch/serve.py",
+               r"^FRONTENDS\s*=\s*\(([^)]*)\)", "FRONTENDS"),
 )
 
 

@@ -70,6 +70,13 @@ def generate(run: RunConfig, params, prompt_tokens: jax.Array, *,
     mcfg = run.model
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     B, S = prompt_tokens.shape
+    if S == 0:
+        # there are no logits to sample the first token from; surface a
+        # clear contract error instead of the shape failure prefill hits
+        raise ValueError("generate requires a non-empty prompt "
+                         "(prompt_tokens has sequence length 0)")
+    if max_new_tokens < 1:
+        raise ValueError("max_new_tokens must be >= 1")
     max_len = S + max_new_tokens
 
     logits, state = backbone.prefill(

@@ -1,0 +1,505 @@
+"""Open-loop serving tier: admission queue, dynamic batching, prefetch.
+
+Everything before this module runs *closed-loop*: the engine drivers pull
+pre-partitioned blocks as fast as the device finishes them, so the repo
+could not answer the question its north star asks — what latency does a
+*request* see under offered load?  ``ServingFrontend`` is that missing
+tier: per-event score requests enter an admission queue, the queue is
+drained into engine dispatches by a dynamic batcher, and the responses
+carry the same bit-exact scores the closed-loop engine would have
+produced for the identical event sequence.
+
+Batching policy (the classic lateness/completeness trade, cf. Aion):
+
+* a **full batch** (``batch`` queued requests) dispatches immediately;
+* a **partial batch** dispatches when its *deadline* expires — the oldest
+  queued request's arrival plus ``max_wait_s`` — so no request waits more
+  than ``max_wait_s`` for co-riders;
+* requests dispatch strictly in arrival (FIFO) order, so per-key event
+  order is preserved and no request is dropped, duplicated or reordered.
+
+Bit-exactness vs the closed-loop engine is a semantics statement, not a
+numerics hope, and it is mode-dependent — exactly as the paper's §5
+decoupling predicts:
+
+* **exact mode** enforces per-key sequential semantics inside each block,
+  so outputs are invariant to where the batcher cuts the stream: the
+  frontend is bit-exact vs ``process_stream`` under *any* arrival
+  pattern, deadlines, partial batches and all.
+* **fast mode** deliberately lets every event in a micro-batch read
+  start-of-batch state (inference decoupled from state updates), so block
+  boundaries are semantic.  What holds — and what the engine's
+  shape-invariant numerics (``kernels/detmath.py``) plus masked padding
+  lanes guarantee — is that a *padded* partial batch is bit-identical to
+  an unpadded block of the same events: the frontend equals a closed-loop
+  run over its own dispatch boundaries, and equals ``process_stream``
+  outright whenever the boundaries coincide (e.g. full batches).
+
+``tests/test_frontend.py`` pins both halves for all five policies.  The
+scorer MLP is only *shape*-stable, so the frontend always scores at the
+fixed padded width ``batch`` (``score_at_width``): partial batches ride
+the same XLA program as full ones and their scores equal the closed-loop
+scores computed through the same helper.
+
+Prefetched hydration (the timely-prefetching design of Zapridou &
+Ailamaki): with a bounded resident set (``residency=``), queued keys that
+miss the slot table are read from the write-behind sink's durable stores
+*ahead of their dispatch* — at admission, and again right after each
+dispatch's flush is submitted (so the read rides the sink FIFO behind
+that flush and always observes the latest durable row).  By the time the
+batch dispatches, its hydration rows are already in flight or landed;
+dispatch never stalls on the durable store in steady state.  A prefetched
+row is dropped (never reused) whenever its key is part of a dispatched
+batch — the only way a durable row can change — which is what keeps a
+mid-wait evict→rehydrate bit-exact.
+
+Determinism seam: all waiting goes through a ``Clock`` (``now``/
+``sleep``).  ``RealClock`` serves; ``VirtualClock`` advances time only
+inside ``sleep``, so every batching/ordering/hydration invariant is
+assertable in tests with zero wall-clock sleeps — compute takes no
+virtual time, a partial batch dispatches at *exactly* its deadline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import List, NamedTuple, Optional, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stream import (_block_runner, _residency_step, _sink_step,
+                               hydration_width, pack_hydration)
+from repro.core.types import EngineConfig, Event
+from repro.streaming.residency import ResidencyMap
+
+__all__ = ["Clock", "RealClock", "VirtualClock", "Request", "BatchRecord",
+           "FrontendStats", "ServeResult", "ServingFrontend",
+           "make_requests", "poisson_arrivals", "score_at_width"]
+
+
+class Clock(Protocol):
+    """Injectable time source: the frontend never touches wall time
+    directly, so tests can drive the admission loop deterministically."""
+
+    def now(self) -> float: ...
+
+    def sleep(self, dt: float) -> None: ...
+
+
+class RealClock:
+    """Monotonic wall clock (serving / benchmarking)."""
+
+    def __init__(self) -> None:
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"RealClock(t={self.now():.6f})"
+
+
+class VirtualClock:
+    """Deterministic clock: time advances only inside ``sleep``.
+
+    Compute and storage take zero virtual time, so dispatch instants are
+    exact functions of the arrival schedule and ``max_wait_s`` — the seam
+    every batching/deadline test stands on (no wall-clock sleeps).
+    """
+
+    def __init__(self, t0: float = 0.0) -> None:
+        self._t = float(t0)
+        self.sleeps = 0
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            self._t += dt
+            self.sleeps += 1
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"VirtualClock(t={self._t:.6f}, sleeps={self.sleeps})"
+
+
+class Request(NamedTuple):
+    """One score request: an event plus its admission-clock arrival."""
+    rid: int            # position in the caller's request list
+    key: int            # global entity id
+    q: float            # event mark
+    t: float            # event timestamp (engine time, not clock time)
+    arrival_s: float    # admission-clock arrival
+
+
+class BatchRecord(NamedTuple):
+    """One dispatch, as the admission loop saw it."""
+    t_dispatch: float   # clock time the batch left the queue
+    t_complete: float   # clock time its outputs were materialized
+    size: int           # valid lanes (<= batch)
+    full: bool          # True: dispatched because the batch filled
+    deadline: float     # the deadline that applied (inf for full batches)
+    n_miss: int         # resident-set misses hydrated for this batch
+    n_prefetched: int   # misses served by an already-in-flight read
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    """Admission/batching/prefetch accounting for one ``run``."""
+    dispatches: int = 0
+    full_batches: int = 0
+    deadline_batches: int = 0
+    events: int = 0
+    padded_lanes: int = 0
+    max_queue: int = 0
+    # hydration prefetch (residency mode only)
+    prefetch_issued: int = 0        # keys with a read submitted early
+    prefetch_hits: int = 0          # misses served from an in-flight read
+    prefetch_rehydrations: int = 0  # prefetches of a previously-seen key
+    demand_reads: int = 0           # misses that had to read at dispatch
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Per-request outputs in the caller's request order (index = rid)."""
+    z: np.ndarray             # [N] persistence decisions
+    p: np.ndarray             # [N] inclusion probabilities
+    lam_hat: np.ndarray       # [N] intensity estimates
+    features: np.ndarray      # [N, F] profile feature vectors
+    scores: Optional[np.ndarray]   # [N] anomaly logits (None: no scorer)
+    latency_s: np.ndarray     # [N] completion - arrival on the clock
+    order: np.ndarray         # [N] rids in dispatch order (FIFO audit)
+    batches: List[BatchRecord]
+    stats: FrontendStats
+
+    def latency_quantiles(self, qs=(0.5, 0.99, 0.999)) -> dict:
+        lat = np.asarray(self.latency_s, np.float64)
+        name = lambda q: "p" + format(q * 100, "g").replace(".", "")
+        if lat.size == 0:
+            return {name(q): float("nan") for q in qs}
+        return {name(q): float(np.quantile(lat, q)) for q in qs}
+
+
+def make_requests(keys, qs, ts, arrival_s=None) -> List[Request]:
+    """Wrap flat event arrays as requests.
+
+    ``arrival_s`` defaults to ``ts`` rebased to start at 0 — open-loop
+    arrivals at the event timestamps.  Requests are sorted by arrival
+    (stable, so same-instant requests keep stream order and per-key order
+    is preserved).
+    """
+    keys = np.asarray(keys).reshape(-1)
+    qs = np.asarray(qs, np.float32).reshape(-1)
+    ts = np.asarray(ts, np.float32).reshape(-1)
+    if arrival_s is None:
+        arrival_s = ts - (ts[0] if ts.size else 0.0)
+    arrival_s = np.asarray(arrival_s, np.float64).reshape(-1)
+    if not (keys.size == qs.size == ts.size == arrival_s.size):
+        raise ValueError("keys/qs/ts/arrival_s length mismatch")
+    order = np.argsort(arrival_s, kind="stable")
+    return [Request(int(i), int(keys[i]), float(qs[i]), float(ts[i]),
+                    float(arrival_s[i])) for i in order]
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0,
+                     start: float = 0.0) -> np.ndarray:
+    """Open-loop Poisson arrival times: ``n`` events at ``rate`` per sec."""
+    if rate <= 0.0:
+        raise ValueError("rate must be positive")
+    rng = np.random.default_rng(seed)
+    return start + np.cumsum(rng.exponential(1.0 / rate, n))
+
+
+def score_at_width(scorer, features: np.ndarray, width: int) -> np.ndarray:
+    """Score ``k <= width`` feature rows at the fixed padded width.
+
+    The scorer MLP's XLA program is shape-stable but not shape-*invariant*
+    (different batch widths may tile the matmuls differently), so the
+    serving tier always scores ``[width, F]`` padded batches and trims —
+    partial batches produce bit-identical scores to the same rows scored
+    inside any other ``width``-wide batch.  The closed-loop comparison in
+    ``tests/test_frontend.py`` scores reference features through this same
+    helper.
+    """
+    from repro.serving.pipeline import score
+
+    feats = np.asarray(features)
+    k = feats.shape[0]
+    if k > width:
+        raise ValueError(f"{k} rows exceed scoring width {width}")
+    pad = np.zeros((width - k,) + feats.shape[1:], feats.dtype)
+    out = score(scorer, jnp.asarray(np.concatenate([feats, pad], axis=0)))
+    return np.asarray(out)[:k]
+
+
+class ServingFrontend:
+    """Admission queue + dynamic batcher over the engine's step programs.
+
+    ``cfg``/``mode``/``exact_impl`` select the same jitted per-group step
+    programs the closed-loop drivers use (``core.stream``): plain scan
+    step (no sink), sink step (write-behind persistence), or residency
+    step (bounded slot state + hydration scatter) — all driven one
+    ``[1, batch]`` block at a time, padded with invalid lanes.  The
+    donated ``state`` lives on the frontend and is dead to the caller.
+
+    ``residency`` must be a prebuilt ``streaming.residency.ResidencyMap``
+    whose slot count equals ``state.num_entities`` and is >= ``batch``
+    (a batch's distinct keys must fit the resident set); it requires
+    ``sink`` — the durable stores are the backing level misses hydrate
+    from.  Thinning stays keyed on global entity ids, so frontend
+    decisions are residency-invariant like the closed-loop driver's.
+
+    Thread model: single driver thread (the caller of ``run``); the only
+    concurrency is the sink's own flush/read workers, reached through the
+    same ordered ``submit``/``submit_read`` calls as the closed-loop
+    residency driver.
+    """
+
+    def __init__(self, cfg: EngineConfig, state, *, batch: int,
+                 max_wait_s: float, mode: str = "fast",
+                 exact_impl: str = "compact", rng=None,
+                 clock: Optional[Clock] = None, sink=None,
+                 residency: Optional[ResidencyMap] = None, scorer=None):
+        if batch <= 0:
+            raise ValueError("batch must be positive")
+        if max_wait_s < 0:
+            raise ValueError("max_wait_s must be >= 0")
+        self.cfg = cfg
+        self.batch = int(batch)
+        self.max_wait_s = float(max_wait_s)
+        self.mode = mode
+        self.clock: Clock = clock if clock is not None else RealClock()
+        self.sink = sink
+        self.scorer = scorer
+        self.state = state
+        self.rng = jax.random.PRNGKey(0) if rng is None else rng
+        self.stats = FrontendStats()
+        self._rmap = residency
+        self._n_taus = int(state.num_taus)
+        # key -> (ReadTicket, index into the ticket's key list)
+        self._prefetch: dict = {}
+        if residency is not None:
+            if sink is None:
+                raise ValueError("residency requires a write-behind sink: "
+                                 "misses hydrate from its durable stores")
+            if not isinstance(residency, ResidencyMap):
+                raise ValueError("residency must be a prebuilt ResidencyMap")
+            if state.num_entities != residency.n_slots:
+                raise ValueError(
+                    f"state holds {state.num_entities} rows but the "
+                    f"resident set has {residency.n_slots} slots")
+            if residency.n_slots < self.batch:
+                raise ValueError(
+                    f"batch={self.batch} can hold more distinct keys than "
+                    f"the {residency.n_slots}-slot resident set")
+            self._bstep = _residency_step(cfg, mode, True, True, exact_impl)
+            # fixed hydration width: the closed-loop driver lets H track
+            # the per-group miss count (next power of two), but a serving
+            # tier cannot afford the mid-run recompile each new width
+            # costs — one width = one program, compiled on the first
+            # dispatch, tail latencies stay batching-bound
+            self._hwidth = hydration_width(self.batch)
+        elif sink is not None:
+            self._bstep = _sink_step(cfg, mode, True, True, exact_impl)
+        else:
+            self._bstep = _block_runner(cfg, mode, True, True, exact_impl)
+
+    # ------------------------------------------------------------- serve
+    def run(self, requests: Sequence[Request]) -> ServeResult:
+        """Drive the open-loop admission queue over a request schedule.
+
+        ``requests`` must be arrival-sorted (``make_requests`` does this);
+        the loop admits each request at its ``arrival_s`` on the clock,
+        dispatches full batches immediately and partial batches at their
+        deadline, and returns per-request outputs aligned with rids.
+        """
+        reqs = list(requests)
+        n = len(reqs)
+        for a, b in zip(reqs, reqs[1:]):
+            if b.arrival_s < a.arrival_s:
+                raise ValueError("requests must be sorted by arrival_s")
+        F = 4 * len(self.cfg.taus)
+        out = ServeResult(
+            z=np.zeros(n, bool), p=np.zeros(n, np.float32),
+            lam_hat=np.zeros(n, np.float32),
+            features=np.zeros((n, F), np.float32),
+            scores=np.zeros(n, np.float32) if self.scorer is not None
+            else None,
+            latency_s=np.zeros(n, np.float64),
+            order=np.zeros(n, np.int64), batches=[], stats=self.stats)
+        if n == 0:
+            return out
+        if self._rmap is not None:
+            # drain in-flight work a previous run left behind: the
+            # unordered fresh-read lane is only safe against writes
+            # submitted after this point (same rule as the closed-loop
+            # residency driver)
+            self.sink.flush()
+        pending: deque = deque()
+        i = 0
+        done = 0
+        while i < n or pending:
+            now = self.clock.now()
+            while i < n and reqs[i].arrival_s <= now:
+                pending.append(reqs[i])
+                self._prefetch_keys([reqs[i].key])
+                i += 1
+            self.stats.max_queue = max(self.stats.max_queue, len(pending))
+            if len(pending) >= self.batch:
+                done = self._dispatch(pending, out, done, full=True,
+                                      deadline=math.inf)
+                continue
+            deadline = (pending[0].arrival_s + self.max_wait_s
+                        if pending else math.inf)
+            if now >= deadline:
+                done = self._dispatch(pending, out, done, full=False,
+                                      deadline=deadline)
+                continue
+            next_arrival = reqs[i].arrival_s if i < n else math.inf
+            # ties admit first: a request landing exactly on the deadline
+            # still rides the dispatching batch
+            self.clock.sleep(min(deadline, next_arrival) - now)
+        return out
+
+    # --------------------------------------------------------- internals
+    def _dispatch(self, pending: deque, out: ServeResult, done: int, *,
+                  full: bool, deadline: float) -> int:
+        k = min(self.batch, len(pending))
+        batch_reqs = [pending.popleft() for _ in range(k)]
+        B = self.batch
+        keys = np.zeros(B, np.int32)
+        qs = np.zeros(B, np.float32)
+        ts = np.zeros(B, np.float32)
+        valid = np.zeros(B, bool)
+        for lane, r in enumerate(batch_reqs):
+            keys[lane], qs[lane], ts[lane], valid[lane] = (r.key, r.q, r.t,
+                                                           True)
+        t_disp = self.clock.now()
+        st = self.stats
+        st.dispatches += 1
+        st.events += k
+        st.padded_lanes += B - k
+        if full:
+            st.full_batches += 1
+        else:
+            st.deadline_batches += 1
+        ev = Event(key=keys[None], q=qs[None], t=ts[None], valid=valid[None])
+
+        n_miss = n_pre = 0
+        if self._rmap is not None:
+            asn = self._rmap.assign_group(keys, valid)
+            n_miss = int(asn.miss_keys.size)
+            rows, n_pre = self._hydration_rows(asn, keys[valid])
+            h_slots, h_scal, h_agg = pack_hydration(
+                rows, asn.miss_slots, self.sink.serde, self._rmap.n_slots,
+                self._n_taus, width=self._hwidth)
+            slots = asn.slot.astype(np.int32)
+            sev = Event(key=slots.reshape(1, B), q=ev.q, t=ev.t,
+                        valid=ev.valid)
+            self.state, outs, dev_rows = self._bstep(
+                self.state, (sev, keys[None]), self.rng, slots, h_slots,
+                h_scal, h_agg)
+            self.sink.submit(keys, outs.z, valid, dev_rows)
+        elif self.sink is not None:
+            self.state, outs, dev_rows = self._bstep(self.state, ev,
+                                                     self.rng, keys)
+            self.sink.submit(keys, outs.z, valid, dev_rows)
+        else:
+            self.state, outs = self._bstep(self.state, ev, self.rng)
+        # prefetch the *next* batch's misses now, while this batch's
+        # device compute and flush are still in flight: the ordered read
+        # rides the sink FIFO behind the flush just submitted, so a key
+        # this batch evicted (or updated) reads its latest durable row
+        if self._rmap is not None and pending:
+            self._prefetch_keys([r.key for r in pending])
+
+        feats = np.asarray(outs.features)[0]          # blocks on device
+        z = np.asarray(outs.z)[0]
+        p = np.asarray(outs.p)[0]
+        lam = np.asarray(outs.lam_hat)[0]
+        scores = (score_at_width(self.scorer, feats, B)
+                  if self.scorer is not None else None)
+        t_done = self.clock.now()
+        for lane, r in enumerate(batch_reqs):
+            out.z[r.rid] = z[lane]
+            out.p[r.rid] = p[lane]
+            out.lam_hat[r.rid] = lam[lane]
+            out.features[r.rid] = feats[lane]
+            if scores is not None:
+                out.scores[r.rid] = scores[lane]
+            out.latency_s[r.rid] = t_done - r.arrival_s
+            out.order[done + lane] = r.rid
+        out.batches.append(BatchRecord(t_disp, t_done, k, full, deadline,
+                                       n_miss, n_pre))
+        return done + k
+
+    def _hydration_rows(self, asn, batch_keys):
+        """Resolve this batch's miss rows: in-flight prefetch tickets
+        first, demand reads (fresh keys on the unordered fast lane,
+        rehydrations on the FIFO) for the rest.  Every key of the batch —
+        hit or miss — drops its prefetch entry: the flush about to be
+        submitted may change its durable row, so a held ticket would go
+        stale."""
+        st = self.stats
+        miss = [int(k) for k in asn.miss_keys]
+        picked = [self._prefetch.pop(k, None) for k in miss]
+        need = [j for j, t in enumerate(picked) if t is None]
+        need_fresh = [j for j in need if asn.miss_fresh[j]]
+        need_re = [j for j in need if not asn.miss_fresh[j]]
+        t_fresh = t_re = None
+        if need_fresh:
+            t_fresh = self.sink.submit_read(
+                np.asarray([miss[j] for j in need_fresh], np.int64),
+                ordered=False)
+        if need_re:
+            t_re = self.sink.submit_read(
+                np.asarray([miss[j] for j in need_re], np.int64))
+        st.demand_reads += len(need)
+        st.prefetch_hits += len(miss) - len(need)
+        rows: List[Optional[bytes]] = [None] * len(miss)
+        for j, ent in enumerate(picked):
+            if ent is not None:
+                ticket, idx = ent
+                rows[j] = ticket.result()[idx]
+        if t_fresh is not None:
+            got = t_fresh.result()
+            for pos, j in enumerate(need_fresh):
+                rows[j] = got[pos]
+        if t_re is not None:
+            got = t_re.result()
+            for pos, j in enumerate(need_re):
+                rows[j] = got[pos]
+        # invalidate held tickets for *every* key of the batch (hits too):
+        # their rows are about to be rewritten by this batch's flush
+        for k in np.unique(batch_keys):
+            self._prefetch.pop(int(k), None)
+        return rows, len(miss) - len(need)
+
+    def _prefetch_keys(self, keys) -> None:
+        """Submit ordered hydration reads for queued keys that are not
+        resident and have no read in flight (no-op without residency)."""
+        if self._rmap is None:
+            return
+        ks = np.unique(np.asarray(keys, np.int64))
+        want = [int(k) for k in ks
+                if self._rmap.slot_of_key[int(k)] < 0
+                and int(k) not in self._prefetch]
+        if not want:
+            return
+        seen = self._rmap.seen(want)
+        ticket = self.sink.submit_read(np.asarray(want, np.int64))
+        for idx, k in enumerate(want):
+            self._prefetch[k] = (ticket, idx)
+        self.stats.prefetch_issued += len(want)
+        self.stats.prefetch_rehydrations += int(np.count_nonzero(seen))

@@ -121,6 +121,52 @@ class ScoringPipeline:
                                       residency=residency,
                                       sink_group=sink_group)
 
+    # --------------------------------------------------- online serving
+    def serve(self, keys, qs, ts, *, arrival_s=None, batch: int = 256,
+              max_wait_s: float = 0.005, clock=None, rng=None, sink=None,
+              residency=None, exact_impl: str = "compact"):
+        """Open-loop serving: the same events as ``process_stream``, but
+        arriving as *requests* through the admission queue + dynamic
+        batcher of ``serving.frontend`` (full batches dispatch
+        immediately, partials at the ``max_wait_s`` deadline, resident-set
+        misses prefetched ahead of dispatch).
+
+        ``arrival_s`` is the admission-clock arrival of each event
+        (defaults to the event timestamps rebased to 0); ``clock`` is the
+        injectable time source — pass a
+        ``serving.frontend.VirtualClock`` for deterministic tests, omit
+        for wall-clock serving.  ``residency`` is an int slot budget or a
+        prebuilt ``streaming.residency.ResidencyMap`` (requires
+        ``sink``).  Scores/decisions are bit-exact vs ``process_stream``
+        on the same event sequence: unconditionally in exact mode (per-key
+        sequential semantics make outputs batching-invariant), and at
+        matching dispatch boundaries in fast mode, whose within-batch
+        decoupling makes boundaries semantic — see ``serving.frontend``;
+        ``tests/test_frontend.py`` pins both for all five policies.
+
+        Returns a ``serving.frontend.ServeResult`` with per-request
+        outputs, latencies, the dispatch log and frontend stats.  The
+        caller owns the sink lifecycle (flush/close), as in
+        ``process_stream``.
+        """
+        from repro.core import init_state
+        from repro.serving.frontend import (ServingFrontend, make_requests)
+        from repro.streaming.residency import ResidencyMap
+
+        cfg = self.engine.cfg
+        rmap = None
+        if residency is not None:
+            rmap = residency if isinstance(residency, ResidencyMap) \
+                else ResidencyMap(self.engine.num_entities, int(residency))
+        n_rows = rmap.n_slots if rmap is not None \
+            else self.engine.num_entities
+        state = init_state(n_rows, len(cfg.taus))
+        fe = ServingFrontend(cfg, state, batch=batch, max_wait_s=max_wait_s,
+                             mode=self.engine.mode, exact_impl=exact_impl,
+                             rng=rng, clock=clock, sink=sink, residency=rmap,
+                             scorer=self.scorer)
+        return fe.run(make_requests(keys, qs, ts, arrival_s))
+
     def restart_from(self, sink):
         """Rebuild engine state from the sink's durable stores.
 

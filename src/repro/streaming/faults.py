@@ -48,9 +48,9 @@ import numpy as np
 
 from repro.streaming.durable import WAL_NAME, DurableStore, FileOps
 
-__all__ = ["TransientIOError", "FaultPlan", "FaultyFileOps", "flip_bit",
-           "truncate_at", "crash_cfg", "crash_stream", "run_reference",
-           "spawn_kill_mid_flush"]
+__all__ = ["TransientIOError", "FaultPlan", "FaultyFileOps",
+           "StallingReads", "flip_bit", "truncate_at", "crash_cfg",
+           "crash_stream", "run_reference", "spawn_kill_mid_flush"]
 
 
 class TransientIOError(OSError):
@@ -132,6 +132,35 @@ class FaultyFileOps(FileOps):
                                                    or "w" in mode):
             return _FaultyFile(f, self)
         return f
+
+
+class StallingReads:
+    """Store proxy that delays every batched read (``multi_get``).
+
+    The WAL seam above injects faults into the *write* path; this is the
+    matching seam for the *read* path the serving tier's prefetched
+    hydration depends on (``serving/frontend.py``): each ``multi_get``
+    sleeps ``stall_s`` real seconds on the sink's store-worker thread
+    before delegating, and ``stalled_gets`` counts how many reads were
+    held up.  Everything else — ``multi_put``, ``keys``, counters —
+    passes straight through, so a stalled read can delay a dispatch but
+    never change what it observes: the FIFO ordering guarantees of
+    ``WriteBehindSink.submit_read`` are untouched.
+    """
+
+    def __init__(self, store, stall_s: float):
+        self._store = store
+        self.stall_s = float(stall_s)
+        self.stalled_gets = 0
+
+    def multi_get(self, keys):
+        self.stalled_gets += 1
+        if self.stall_s > 0.0:
+            time.sleep(self.stall_s)
+        return self._store.multi_get(keys)
+
+    def __getattr__(self, name):
+        return getattr(self._store, name)
 
 
 # ------------------------------------------------------ post-hoc corruption

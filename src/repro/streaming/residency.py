@@ -125,6 +125,13 @@ class ResidencyMap:
         """Keys currently holding a slot (unordered)."""
         return self.key_of_slot[self.key_of_slot >= 0].copy()
 
+    def seen(self, keys) -> np.ndarray:
+        """True where a key has ever been resident this run — i.e. a read
+        for it is a *re*hydration and must ride the sink FIFO behind any
+        in-flight flush that may hold it (the serving frontend uses this
+        to account prefetch-after-evict separately from first touches)."""
+        return self._seen[np.asarray(keys, np.int64).reshape(-1)].copy()
+
     # --------------------------------------------------------- assignment
     def assign_group(self, keys, valid: Optional[np.ndarray] = None
                      ) -> GroupAssignment:

@@ -1,0 +1,376 @@
+"""Online serving tier: admission, dynamic batching, prefetched hydration.
+
+CI-enforced contracts of ``serving/frontend.py`` (the open-loop tier the
+north star asks for), all on the injectable ``VirtualClock`` — no
+wall-clock sleeps anywhere in the batching/deadline assertions:
+
+* **Dispatch timing.**  A full batch dispatches the instant it fills; a
+  partial batch dispatches at *exactly* the oldest request's arrival +
+  ``max_wait_s``; a request landing on the deadline rides the batch.
+* **No drop / no dup / FIFO.**  ``ServeResult.order`` is exactly the
+  arrival-sorted request sequence for any interleaving (hypothesis
+  property + fixed twins), every dispatch holds <= ``batch`` events, and
+  no request ever waits more than ``max_wait_s``.
+* **Bit-exactness vs the closed-loop engine**, mode-split the way the
+  paper's decoupling dictates: exact mode equals ``run_stream`` under
+  arbitrary arrival patterns (partial batches included) for all five
+  policies; fast mode equals ``run_stream`` at matching dispatch
+  boundaries (burst arrivals -> all-full batches) for all five policies,
+  and equals a closed-loop replay cut at its *own* boundaries when
+  partials occur (padded partial == unpadded block).
+* **Prefetched hydration.**  With a bounded resident set, a key evicted
+  mid-wait is rehydrated from its latest durable row before dispatch —
+  outputs and stored bytes stay bit-identical to the dense engine — and
+  a stalled durable read (``streaming.faults.StallingReads``) delays a
+  dispatch but never changes what it computes.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import EngineConfig, init_state
+from repro.core.stream import run_stream
+from repro.serving.frontend import (ServingFrontend, VirtualClock,
+                                    make_requests, poisson_arrivals,
+                                    score_at_width)
+from repro.serving.pipeline import init_scorer
+from repro.streaming.faults import StallingReads
+from repro.streaming.kvstore import KVStore
+from repro.streaming.persistence import WriteBehindSink
+from repro.streaming.residency import ResidencyMap
+
+N_KEYS = 48
+POLICIES = ["pp", "pp_vr", "full", "fixed", "unfiltered"]
+
+
+def _stream(n_events=120, n_keys=N_KEYS, seed=0, skew=1.1):
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, n_keys + 1) ** skew
+    w /= w.sum()
+    keys = rng.choice(n_keys, n_events, p=w).astype(np.int32)
+    ts = np.cumsum(rng.exponential(20.0, n_events)).astype(np.float32)
+    qs = rng.lognormal(3.0, 1.0, n_events).astype(np.float32)
+    return keys, qs, ts
+
+
+def _cfg(policy, n_taus=2, exact_rounds=16):
+    return EngineConfig(taus=(60.0, 3600.0, 86400.0)[:n_taus], h=600.0,
+                        budget=0.002, alpha=1.0, policy=policy,
+                        fixed_rate=0.3, mu_tau_index=1,
+                        exact_rounds=exact_rounds)
+
+
+def _store_contents(stores):
+    merged = {}
+    for s in stores:
+        merged.update(s.data)
+    return merged
+
+
+def _frontend_run(cfg, keys, qs, ts, *, batch, mode, arrival_s,
+                  max_wait_s, sink=None, rmap=None, scorer=None,
+                  clock=None, rng=None):
+    n_rows = rmap.n_slots if rmap is not None else N_KEYS
+    fe = ServingFrontend(
+        cfg, init_state(n_rows, len(cfg.taus)), batch=batch,
+        max_wait_s=max_wait_s, mode=mode,
+        rng=jax.random.PRNGKey(7) if rng is None else rng,
+        clock=clock if clock is not None else VirtualClock(),
+        sink=sink, residency=rmap, scorer=scorer)
+    return fe.run(make_requests(keys, qs, ts, arrival_s))
+
+
+def _closed_loop(cfg, keys, qs, ts, *, batch, mode, sink=None):
+    state, info = run_stream(cfg, init_state(N_KEYS, len(cfg.taus)), keys,
+                             qs, ts, batch=batch, mode=mode,
+                             rng=jax.random.PRNGKey(7), sink=sink)
+    if sink is not None:
+        sink.flush()
+    return state, info
+
+
+def _assert_bit_equal(res, info):
+    assert np.array_equal(res.z, np.asarray(info.z))
+    assert np.array_equal(res.p, np.asarray(info.p))
+    assert np.array_equal(res.lam_hat, np.asarray(info.lam_hat))
+    assert np.array_equal(res.features, np.asarray(info.features))
+
+
+# ------------------------------------------------ dispatch timing (virtual)
+def test_full_batch_dispatches_immediately():
+    keys, qs, ts = _stream(16)
+    clock = VirtualClock()
+    res = _frontend_run(_cfg("pp"), keys, qs, ts, batch=4, mode="fast",
+                        arrival_s=np.zeros(16), max_wait_s=1.0, clock=clock)
+    assert res.stats.dispatches == 4 and res.stats.full_batches == 4
+    assert res.stats.deadline_batches == 0
+    # burst at t=0, compute is free on the virtual clock: no sleep is ever
+    # taken and every request completes at its arrival instant
+    assert clock.sleeps == 0
+    assert all(b.t_dispatch == 0.0 and b.full for b in res.batches)
+    assert np.all(res.latency_s == 0.0)
+
+
+def test_partial_batch_dispatches_at_exact_deadline():
+    keys, qs, ts = _stream(3)
+    res = _frontend_run(_cfg("pp"), keys, qs, ts, batch=8, mode="fast",
+                        arrival_s=np.zeros(3), max_wait_s=0.005)
+    assert res.stats.dispatches == 1 and res.stats.deadline_batches == 1
+    (b,) = res.batches
+    assert not b.full and b.size == 3
+    assert b.t_dispatch == b.deadline == pytest.approx(0.005, abs=1e-12)
+    assert np.all(res.latency_s == pytest.approx(0.005, abs=1e-12))
+
+
+def test_partial_batches_cut_by_arrival_gaps():
+    keys, qs, ts = _stream(4)
+    arrival = np.array([0.0, 0.001, 0.002, 0.010])
+    res = _frontend_run(_cfg("pp"), keys, qs, ts, batch=8, mode="fast",
+                        arrival_s=arrival, max_wait_s=0.004)
+    assert [b.size for b in res.batches] == [3, 1]
+    assert res.batches[0].t_dispatch == pytest.approx(0.004, abs=1e-12)
+    assert res.batches[1].t_dispatch == pytest.approx(0.014, abs=1e-12)
+    # latency = own wait, not the batch's: r0 waited the full deadline
+    assert res.latency_s[0] == pytest.approx(0.004, abs=1e-12)
+    assert res.latency_s[2] == pytest.approx(0.002, abs=1e-12)
+    q = res.latency_quantiles()
+    assert set(q) == {"p50", "p99", "p999"} and q["p999"] <= 0.004 + 1e-9
+
+
+def test_arrival_on_deadline_rides_the_dispatching_batch():
+    keys, qs, ts = _stream(3)
+    # third request lands exactly on the first request's deadline: ties
+    # admit first, so the batch fills and dispatches full
+    res = _frontend_run(_cfg("pp"), keys, qs, ts, batch=3, mode="fast",
+                        arrival_s=np.array([0.0, 0.001, 0.004]),
+                        max_wait_s=0.004)
+    assert res.stats.dispatches == 1 and res.stats.full_batches == 1
+    assert res.batches[0].size == 3 and res.batches[0].full
+
+
+def test_frontend_contract_errors():
+    keys, qs, ts = _stream(4)
+    cfg = _cfg("pp")
+    with pytest.raises(ValueError, match="batch"):
+        ServingFrontend(cfg, init_state(N_KEYS, 2), batch=0, max_wait_s=0.0)
+    with pytest.raises(ValueError, match="sink"):
+        ServingFrontend(cfg, init_state(8, 2), batch=4, max_wait_s=0.0,
+                        residency=ResidencyMap(N_KEYS, 8))
+    fe = ServingFrontend(cfg, init_state(N_KEYS, 2), batch=4, max_wait_s=0.0,
+                         clock=VirtualClock())
+    with pytest.raises(ValueError, match="sorted"):
+        fe.run(list(reversed(make_requests(keys, qs, ts,
+                                           np.arange(4.0)))))
+    with pytest.raises(ValueError, match="rate"):
+        poisson_arrivals(8, 0.0)
+
+
+# ------------------------------------- bit-exactness vs the closed loop
+@pytest.mark.parametrize("policy", POLICIES)
+def test_exact_mode_bit_exact_under_partial_batches(policy):
+    """Exact mode is batching-invariant: open-loop arrivals that force
+    deadline (partial) dispatches reproduce the closed-loop block driver
+    bit-for-bit, for every policy."""
+    keys, qs, ts = _stream(120)
+    cfg = _cfg(policy)
+    res = _frontend_run(cfg, keys, qs, ts, batch=8, mode="exact",
+                        arrival_s=np.arange(120) * 1e-3,
+                        max_wait_s=2.5e-3)
+    assert res.stats.deadline_batches > 0          # partials exercised
+    assert np.array_equal(np.sort(res.order), np.arange(120))
+    _, info = _closed_loop(cfg, keys, qs, ts, batch=8, mode="exact")
+    _assert_bit_equal(res, info)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_fast_mode_bit_exact_at_matching_boundaries(policy):
+    """Fast mode's block boundaries are semantic (within-batch
+    decoupling); when the batcher's boundaries line up with the
+    closed-loop blocks — burst arrivals, all batches full — the outputs
+    are bit-identical, for every policy."""
+    keys, qs, ts = _stream(96)
+    cfg = _cfg(policy)
+    res = _frontend_run(cfg, keys, qs, ts, batch=8, mode="fast",
+                        arrival_s=np.zeros(96), max_wait_s=0.001)
+    assert res.stats.full_batches == 12
+    assert res.stats.deadline_batches == 0
+    _, info = _closed_loop(cfg, keys, qs, ts, batch=8, mode="fast")
+    _assert_bit_equal(res, info)
+
+
+def test_fast_partial_batches_equal_closed_loop_at_own_boundaries():
+    """A padded partial batch is bit-identical to an unpadded block of the
+    same events: replaying the frontend's own dispatch chunks through
+    ``run_stream`` reproduces every output."""
+    keys, qs, ts = _stream(90)
+    cfg = _cfg("pp")
+    res = _frontend_run(cfg, keys, qs, ts, batch=8, mode="fast",
+                        arrival_s=np.arange(90) * 1e-3, max_wait_s=2.5e-3)
+    assert res.stats.deadline_batches > 0
+    state = init_state(N_KEYS, len(cfg.taus))
+    rng = jax.random.PRNGKey(7)
+    z = np.zeros(90, bool)
+    p = np.zeros(90, np.float32)
+    feats = np.zeros((90, res.features.shape[1]), np.float32)
+    pos = 0
+    for rec in res.batches:
+        rids = res.order[pos:pos + rec.size]
+        pos += rec.size
+        state, info = run_stream(cfg, state, keys[rids], qs[rids], ts[rids],
+                                 batch=8, mode="fast", rng=rng)
+        z[rids] = np.asarray(info.z)
+        p[rids] = np.asarray(info.p)
+        feats[rids] = np.asarray(info.features)
+    assert np.array_equal(res.z, z)
+    assert np.array_equal(res.p, p)
+    assert np.array_equal(res.features, feats)
+
+
+def test_frontend_sink_bytes_and_scores_match_closed_loop():
+    """With a write-behind sink and a scorer: the frontend's stored bytes
+    equal the closed-loop sink's (chunking-invariant end-of-group
+    snapshots) and its scores equal the reference features pushed through
+    the same fixed-width scoring helper."""
+    keys, qs, ts = _stream(120)
+    cfg = _cfg("pp")
+    scorer = init_scorer(jax.random.PRNGKey(1), 4 * len(cfg.taus))
+    sink_f = WriteBehindSink(cfg, n_partitions=3)
+    res = _frontend_run(cfg, keys, qs, ts, batch=8, mode="exact",
+                        arrival_s=np.arange(120) * 1e-3, max_wait_s=2.5e-3,
+                        sink=sink_f, scorer=scorer)
+    sink_f.flush()
+    sink_d = WriteBehindSink(cfg, n_partitions=3)
+    _, info = _closed_loop(cfg, keys, qs, ts, batch=8, mode="exact",
+                           sink=sink_d)
+    _assert_bit_equal(res, info)
+    assert _store_contents(sink_f.stores) == _store_contents(sink_d.stores)
+    ref_feats = np.asarray(info.features)
+    pos = 0
+    for rec in res.batches:
+        rids = res.order[pos:pos + rec.size]
+        pos += rec.size
+        want = score_at_width(scorer, ref_feats[rids], 8)
+        assert np.array_equal(res.scores[rids], want)
+    sink_f.close()
+    sink_d.close()
+
+
+# --------------------------------------- admission-queue property tests
+def _check_admission_invariants(arrivals, batch, max_wait):
+    """No drop, no dup, strict FIFO, bounded dispatch size, bounded wait —
+    for an arbitrary arrival schedule on the virtual clock."""
+    arrivals = np.asarray(arrivals, np.float64)
+    n = arrivals.size
+    keys = (np.arange(n) % 5).astype(np.int64)
+    qs = (1.0 + np.arange(n) % 3).astype(np.float32)
+    ts = np.cumsum(np.full(n, 0.1, np.float32))
+    fe = ServingFrontend(_cfg("pp"), init_state(8, 2), batch=batch,
+                         max_wait_s=max_wait, mode="fast",
+                         clock=VirtualClock(), rng=jax.random.PRNGKey(0))
+    res = fe.run(make_requests(keys, qs, ts, arrivals))
+    sizes = [b.size for b in res.batches]
+    assert sum(sizes) == n and all(1 <= s <= batch for s in sizes)
+    for b in res.batches:
+        if b.full:
+            assert b.size == batch
+        else:
+            assert b.size < batch
+            # a partial dispatch fires at exactly its deadline
+            assert b.t_dispatch == pytest.approx(b.deadline, abs=1e-9)
+    # strict FIFO: dispatch order IS the arrival-sorted request sequence
+    assert np.array_equal(res.order, np.argsort(arrivals, kind="stable"))
+    assert np.all(res.latency_s >= -1e-12)
+    assert np.all(res.latency_s <= max_wait + 1e-9)
+
+
+FIXED_SCHEDULES = [
+    (np.zeros(7), 3, 0.004),                       # pure burst, tail partial
+    (np.array([0.0, 0.001, 0.004, 0.004, 0.02]), 3, 0.004),  # deadline ties
+    (np.linspace(0.0, 0.01, 9), 4, 0.0),           # zero-wait singletons
+    (np.array([0.005, 0.0, 0.003, 0.001]), 2, 0.002),        # unsorted input
+]
+
+
+@pytest.mark.parametrize("arrivals,batch,max_wait", FIXED_SCHEDULES)
+def test_admission_invariants_fixed_examples(arrivals, batch, max_wait):
+    _check_admission_invariants(arrivals, batch, max_wait)
+
+
+def test_admission_invariants_hypothesis():
+    """Property form of the fixed examples: arbitrary arrival schedules,
+    batch sizes and deadlines (skipped if hypothesis is missing — the
+    fixed twins above always run)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(
+        arrivals=st.lists(st.floats(0.0, 0.05, allow_nan=False,
+                                    allow_infinity=False),
+                          min_size=1, max_size=18),
+        batch=st.integers(1, 5),
+        max_wait=st.floats(0.0, 0.01, allow_nan=False,
+                           allow_infinity=False))
+    @hyp.settings(max_examples=15, deadline=None)
+    def run_case(arrivals, batch, max_wait):
+        _check_admission_invariants(arrivals, batch, max_wait)
+
+    run_case()
+
+
+# --------------------------------------------------- prefetched hydration
+def test_residency_evict_mid_wait_rehydrates_bit_exact():
+    """Bounded resident set under open-loop partial batching: keys evicted
+    while queued are prefetched back from their latest durable row before
+    dispatch, and everything — outputs AND stored bytes — stays
+    bit-identical to the dense closed-loop engine."""
+    keys, qs, ts = _stream(600, seed=3)
+    cfg = _cfg("pp")
+    sink_d = WriteBehindSink(cfg, n_partitions=3)
+    _, info = _closed_loop(cfg, keys, qs, ts, batch=8, mode="exact",
+                           sink=sink_d)
+    rmap = ResidencyMap(N_KEYS, 12)        # 0.25 resident fraction
+    sink = WriteBehindSink(cfg, n_partitions=3)
+    res = _frontend_run(cfg, keys, qs, ts, batch=8, mode="exact",
+                        arrival_s=np.arange(600) * 1e-3, max_wait_s=2.5e-3,
+                        sink=sink, rmap=rmap)
+    sink.flush()
+    _assert_bit_equal(res, info)
+    assert _store_contents(sink.stores) == _store_contents(sink_d.stores)
+    st = res.stats
+    assert st.deadline_batches > 0             # partial batches exercised
+    assert st.prefetch_issued > 0
+    # the contract under test: previously-resident keys were evicted while
+    # waiting and re-read ahead of their dispatch...
+    assert st.prefetch_rehydrations > 0
+    # ...and every miss was served by an in-flight prefetch — dispatch
+    # never had to stop and read the store
+    assert st.demand_reads == 0
+    assert st.prefetch_hits == sum(b.n_miss for b in res.batches) > 0
+    sink.close()
+    sink_d.close()
+
+
+def test_stalled_durable_read_delays_but_never_corrupts_a_dispatch():
+    """Slow-read fault injection: every ``multi_get`` under the hydration
+    path stalls (``StallingReads``), which can only delay dispatches —
+    outputs and stored bytes still match the dense closed-loop engine
+    bit-for-bit."""
+    keys, qs, ts = _stream(240, seed=5)
+    cfg = _cfg("pp")
+    sink_d = WriteBehindSink(cfg, n_partitions=3)
+    _, info = _closed_loop(cfg, keys, qs, ts, batch=8, mode="exact",
+                           sink=sink_d)
+    stores = [StallingReads(KVStore(seed=i), stall_s=0.002)
+              for i in range(3)]
+    sink = WriteBehindSink(cfg, stores=stores)
+    rmap = ResidencyMap(N_KEYS, 12)
+    res = _frontend_run(cfg, keys, qs, ts, batch=8, mode="exact",
+                        arrival_s=np.zeros(240), max_wait_s=1e-3,
+                        sink=sink, rmap=rmap)
+    sink.flush()
+    assert sum(s.stalled_gets for s in stores) > 0
+    _assert_bit_equal(res, info)
+    assert _store_contents(sink.stores) == _store_contents(sink_d.stores)
+    sink.close()
+    sink_d.close()
