@@ -285,6 +285,11 @@ class _GroupPlan(NamedTuple):
     fresh_keys: np.ndarray
     rehydrate_keys: np.ndarray
     build_hydration: object  # (rows_fresh, rows_re) -> (h_slots, ...)
+    # False on all but the final sub-group of a split oversized flush
+    # group (``streaming.residency.split_oversized_group``): the driver
+    # merges sub-group outputs back into one per-group output at the
+    # ``last`` marker
+    last: bool = True
 
 
 def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
@@ -330,9 +335,14 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
     ``init_state(S, ...)``; ``S << num_entities``), event keys are
     translated to slots per flush group, misses are hydrated from the
     sink's durable stores with one ordered batched read per group
-    (prefetched while the previous group computes) and victims are
-    recycled clock/second-chance — see ``streaming/residency.py`` for the
-    eviction contract and why evict→rehydrate is bit-exact.  Requires
+    (prefetched while the previous group computes; a sink built with
+    ``l2=`` answers them from its host-RAM tier first) and victims are
+    recycled per the map's eviction policy and demoted into the L2 tier —
+    see ``streaming/residency.py`` for the eviction contract and why
+    evict→rehydrate is bit-exact.  A flush group with more distinct keys
+    than slots no longer raises: it is split into key-complete sub-groups
+    that each fit (``split_oversized_group``), dispatched back-to-back
+    with per-key FIFO order preserved.  Requires
     ``sink`` (the durable store is the backing level of the hierarchy);
     thinning decisions stay keyed on global entity ids, so ``z``/``p``/
     features and stored bytes are independent of the residency budget.
@@ -349,7 +359,8 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
     valid_h = host_blocks(np.ones(n, bool), False)
 
     if residency is not None:
-        from repro.streaming.residency import ResidencyMap
+        from repro.streaming.residency import (ResidencyMap,
+                                               split_oversized_group)
         if sink is None:
             raise ValueError(
                 "residency requires a write-behind sink: evicted slots "
@@ -369,22 +380,41 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
 
         def plan_group(lo, hi):
             kseg, vseg = key_h[lo:hi], valid_h[lo:hi]
-            asn = rmap.assign_group(kseg, vseg)
-            slots = asn.slot.reshape(kseg.shape)
-            ev = Event(key=slots, q=q_h[lo:hi], t=t_h[lo:hi], valid=vseg)
-            # rng entity ids: the raw key blocks (padding lanes are 0 from
-            # the packer; the engine masks invalid lanes itself)
-            ent = kseg
+            # A group with more distinct keys than slots is split into
+            # key-complete sub-groups that each fit; the common case is one
+            # segment == the group's own mask.  Sub-groups re-dispatch the
+            # same [G, B] block shapes with restricted valid masks (no new
+            # jit traces) and flush as separate sink batches, so per-key
+            # FIFO order and the fsync boundary are preserved.
+            segs = split_oversized_group(kseg, vseg, rmap.n_slots)
+            if len(segs) > 1:
+                rmap.stats.splits += len(segs) - 1
+            plans = []
+            for j, vmask in enumerate(segs):
+                vm = vmask.reshape(kseg.shape)
+                asn = rmap.assign_group(kseg, vm)
+                # victims leave the slot plane -> host L2 tier (no-op for
+                # sinks without one); their durable row is already queued
+                # or landed, see HostL2Cache's coherence contract
+                sink.demote(asn.evicted)
+                slots = asn.slot.reshape(kseg.shape)
+                ev = Event(key=slots, q=q_h[lo:hi], t=t_h[lo:hi], valid=vm)
+                # rng entity ids: the raw key blocks (padding lanes are 0
+                # from the packer; the engine masks invalid lanes itself)
+                ent = kseg
 
-            def build(rows_fresh, rows_re):
-                rows = merge_miss_rows(asn.miss_fresh, rows_fresh, rows_re)
-                return pack_hydration(rows, asn.miss_slots, serde,
-                                      rmap.n_slots, n_taus)
+                def build(rows_fresh, rows_re, asn=asn):
+                    rows = merge_miss_rows(asn.miss_fresh, rows_fresh,
+                                           rows_re)
+                    return pack_hydration(rows, asn.miss_slots, serde,
+                                          rmap.n_slots, n_taus)
 
-            return _GroupPlan((ev, ent), slots.reshape(-1),
-                              kseg.reshape(-1), vseg.reshape(-1),
-                              asn.miss_keys[asn.miss_fresh],
-                              asn.miss_keys[~asn.miss_fresh], build)
+                plans.append(_GroupPlan(
+                    (ev, ent), slots.reshape(-1), kseg.reshape(-1),
+                    vmask.reshape(-1), asn.miss_keys[asn.miss_fresh],
+                    asn.miss_keys[~asn.miss_fresh], build,
+                    last=j == len(segs) - 1))
+            return plans
 
         state, info = _drive_with_residency(
             bstep, state, key_h.shape[0], max(1, int(sink_group)),
@@ -491,8 +521,13 @@ def _drive_with_residency(bstep, state, n_blocks, group, plan_group, rng,
     only change on persisted events, so the store already holds every
     victim's current row (see ``streaming/residency.py``).
 
-    ``plan_group(lo, hi)`` returns a ``_GroupPlan`` for blocks [lo, hi);
-    it must be called in stream order (the ResidencyMap mutates).
+    ``plan_group(lo, hi)`` returns the list of ``_GroupPlan`` sub-groups
+    for blocks [lo, hi) — length 1 unless the group held more distinct
+    keys than slots and was split (``split_oversized_group``); the final
+    sub-group carries ``last=True``.  It must be called in stream order
+    (the ResidencyMap mutates).  Sub-group k+1's hydration reads are
+    submitted only after sub-group k's flush, so a key flushed by one
+    sub-group and rehydrated by the next still reads its latest row.
     """
     def reads_of(plan):
         # first-touch misses skip the FIFO (nothing in flight can hold
@@ -510,20 +545,64 @@ def _drive_with_residency(bstep, state, n_blocks, group, plan_group, rng,
     # queued flush of the same key.
     sink.flush()
     outs_all = []
-    plan = plan_group(0, min(group, n_blocks))
-    t_fresh, t_re = reads_of(plan)
-    lo = 0
-    while lo < n_blocks:
-        hi = min(lo + group, n_blocks)
+    part_outs = []          # finished sub-groups of the current group
+    pending = plan_group(0, min(group, n_blocks))
+    next_lo = min(group, n_blocks)
+    i = 0
+    t_fresh, t_re = reads_of(pending[0])
+    while True:
+        plan = pending[i]
         h_slots, h_scal, h_agg = plan.build_hydration(t_fresh.result(),
                                                       t_re.result())
         state, outs, rows = bstep(state, plan.events, rng, plan.gather_idx,
                                   h_slots, h_scal, h_agg, *consts)
         z = outs.z if collect_info else outs[0]
         sink.submit(plan.sink_keys, z, plan.valid, rows)
-        outs_all.append(outs)
-        lo = hi
-        if lo < n_blocks:
-            plan = plan_group(lo, min(lo + group, n_blocks))
-            t_fresh, t_re = reads_of(plan)
+        part_outs.append((outs, plan.valid))
+        if plan.last:
+            outs_all.append(_merge_subgroup_outs(part_outs, collect_info))
+            part_outs = []
+        i += 1
+        if i == len(pending):
+            if next_lo >= n_blocks:
+                break
+            pending = plan_group(next_lo, min(next_lo + group, n_blocks))
+            next_lo = min(next_lo + group, n_blocks)
+            i = 0
+        t_fresh, t_re = reads_of(pending[i])
     return state, _stack_group_outs(outs_all, collect_info)
+
+
+def _merge_subgroup_outs(parts, collect_info):
+    """Merge a split group's sub-group outputs back into one per-group
+    output.  Every real event lane is valid in exactly one sub-group (the
+    split partitions the valid mask), so each sub-group is authoritative
+    for its own lanes — later sub-groups overwrite lanes they own — and
+    per-block write counts sum.  The unsplit common case passes the single
+    sub-group's device output through untouched.
+    """
+    if len(parts) == 1:
+        return parts[0][0]
+    if not collect_info:
+        z = np.asarray(parts[0][0][0]).copy()
+        w = np.asarray(parts[0][0][1], np.int32)
+        for outs, vmask in parts[1:]:
+            m = np.asarray(vmask, bool).reshape(z.shape)
+            z[m] = np.asarray(outs[0])[m]
+            w = w + np.asarray(outs[1], np.int32)
+        return (jnp.asarray(z), jnp.asarray(w))
+    o0 = jax.tree.map(np.asarray, parts[0][0])
+    z, p = o0.z.copy(), o0.p.copy()
+    lam, feat = o0.lam_hat.copy(), o0.features.copy()
+    w = o0.writes
+    for outs, vmask in parts[1:]:
+        o = jax.tree.map(np.asarray, outs)
+        m = np.asarray(vmask, bool).reshape(z.shape)
+        z[m] = o.z[m]
+        p[m] = o.p[m]
+        lam[m] = o.lam_hat[m]
+        feat[m] = o.features[m]
+        w = w + o.writes
+    return StepInfo(z=jnp.asarray(z), p=jnp.asarray(p),
+                    lam_hat=jnp.asarray(lam), features=jnp.asarray(feat),
+                    writes=jnp.asarray(w))

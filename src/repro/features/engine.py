@@ -569,7 +569,8 @@ class ShardedFeatureEngine:
         width so the ``shard_map`` scatter sees a uniform [n_shards * H]
         layout.
         """
-        from repro.streaming.residency import ResidencyMap
+        from repro.streaming.residency import (ResidencyMap,
+                                               split_oversized_group)
         if sink is None:
             raise ValueError(
                 "residency requires a write-behind sink: evicted slots "
@@ -616,42 +617,70 @@ class ShardedFeatureEngine:
         def plan_group(lo, hi):
             G = hi - lo
             kseg, vseg = kb[lo:hi], vb[lo:hi]
-            slots = np.zeros((G, W), np.int32)
-            miss = []
+            # Per-shard oversized-group splitting: each shard's columns
+            # split independently against its own slot budget, and
+            # sub-group j dispatches the union of every shard's j-th
+            # segment (shards that split less run empty-masked sub-groups
+            # — a zero-miss assign_group is free).  Scan order per shard
+            # is preserved, so per-key FIFO order is too.
+            shard_segs = []
             for s in range(n):
                 cols = slice(s * B, (s + 1) * B)
-                asn = rmaps[s].assign_group(kseg[:, cols], vseg[:, cols])
-                slots[:, cols] = asn.slot.reshape(G, B)
-                miss.append(asn)
-            mmax = max(a.miss_keys.size for a in miss)
-            H = core_stream.hydration_width(mmax)
-            fresh_keys = np.concatenate(
-                [a.miss_keys[a.miss_fresh] for a in miss])
-            re_keys = np.concatenate(
-                [a.miss_keys[~a.miss_fresh] for a in miss])
-            ev = Event(key=put(slots), q=put(qb[lo:hi]), t=put(tb[lo:hi]),
-                       valid=put(vseg))
-            # rng entity ids: the raw key blocks (padding lanes are 0 from
-            # the packer; the engine masks invalid lanes itself)
-            ent = put(kseg)
-            gather_idx = (shard_of_col[None, :] * S + slots).reshape(-1)
+                segs = split_oversized_group(
+                    kseg[:, cols], vseg[:, cols], S)
+                if len(segs) > 1:
+                    rmaps[s].stats.splits += len(segs) - 1
+                shard_segs.append(segs)
+            n_sub = max(len(segs) for segs in shard_segs)
+            plans = []
+            for j in range(n_sub):
+                vm = np.zeros((G, W), bool)
+                for s in range(n):
+                    if j < len(shard_segs[s]):
+                        cols = slice(s * B, (s + 1) * B)
+                        vm[:, cols] = shard_segs[s][j].reshape(G, B)
+                slots = np.zeros((G, W), np.int32)
+                miss = []
+                for s in range(n):
+                    cols = slice(s * B, (s + 1) * B)
+                    asn = rmaps[s].assign_group(kseg[:, cols],
+                                                vm[:, cols])
+                    sink.demote(asn.evicted)
+                    slots[:, cols] = asn.slot.reshape(G, B)
+                    miss.append(asn)
+                mmax = max(a.miss_keys.size for a in miss)
+                H = core_stream.hydration_width(mmax)
+                fresh_keys = np.concatenate(
+                    [a.miss_keys[a.miss_fresh] for a in miss])
+                re_keys = np.concatenate(
+                    [a.miss_keys[~a.miss_fresh] for a in miss])
+                ev = Event(key=put(slots), q=put(qb[lo:hi]),
+                           t=put(tb[lo:hi]), valid=put(vm))
+                # rng entity ids: the raw key blocks (padding lanes are 0
+                # from the packer; the engine masks invalid lanes itself)
+                ent = put(kseg)
+                gather_idx = (shard_of_col[None, :] * S + slots
+                              ).reshape(-1)
 
-            def build(rows_fresh, rows_re):
-                # shared iterators: merge_miss_rows consumes each shard's
-                # slice of the two read lanes in per-shard miss order
-                it_f, it_r = iter(rows_fresh), iter(rows_re)
-                segs = [core_stream.pack_hydration(
-                            core_stream.merge_miss_rows(
-                                a.miss_fresh, it_f, it_r),
-                            a.miss_slots, serde, S, n_taus, width=H)
-                        for a in miss]
-                return (np.concatenate([g[0] for g in segs]),
-                        np.concatenate([g[1] for g in segs], axis=1),
-                        np.concatenate([g[2] for g in segs], axis=0))
+                def build(rows_fresh, rows_re, miss=miss, H=H):
+                    # shared iterators: merge_miss_rows consumes each
+                    # shard's slice of the two read lanes in per-shard
+                    # miss order
+                    it_f, it_r = iter(rows_fresh), iter(rows_re)
+                    segs = [core_stream.pack_hydration(
+                                core_stream.merge_miss_rows(
+                                    a.miss_fresh, it_f, it_r),
+                                a.miss_slots, serde, S, n_taus, width=H)
+                            for a in miss]
+                    return (np.concatenate([g[0] for g in segs]),
+                            np.concatenate([g[1] for g in segs], axis=1),
+                            np.concatenate([g[2] for g in segs], axis=0))
 
-            return core_stream._GroupPlan(
-                (ev, ent), gather_idx, kseg.reshape(-1), vseg.reshape(-1),
-                fresh_keys, re_keys, build)
+                plans.append(core_stream._GroupPlan(
+                    (ev, ent), gather_idx, kseg.reshape(-1),
+                    vm.reshape(-1), fresh_keys, re_keys, build,
+                    last=j == n_sub - 1))
+            return plans
 
         rkey = ("residency", collect_info, donate)
         if rkey not in self._runners:
@@ -747,7 +776,7 @@ class ShardedFeatureEngine:
         return core_engine.materialize_features(state, flat, t,
                                                 self.cfg.taus)
 
-    def materialize_cold(self, stores, keys, t) -> jax.Array:
+    def materialize_cold(self, stores, keys, t, l2=None) -> jax.Array:
         """Score straight from durable bytes — restart as cold-start
         hydration, with no dense state table ever built.
 
@@ -759,6 +788,12 @@ class ShardedFeatureEngine:
         profiles the scores are bit-identical to materializing a fully
         hydrated state; absent keys score as fresh profiles.  Device cost
         is O(len(keys)) rows, independent of ``num_entities``.
+
+        ``l2``: optional per-partition ``HostL2Cache`` list (a sink's
+        ``.l2``) probed before the durable gets — same packed bytes, so
+        scores are unchanged; only the durable-read count drops.  Only
+        coherent on a quiescent sink (``ScoringPipeline.score_cold``
+        flushes first).
         """
         from repro.core import estimators
         from repro.streaming.kvstore import SerDe
@@ -771,7 +806,15 @@ class ShardedFeatureEngine:
         part = self.route(keys_np)[0]
         for p in np.unique(part):
             sel = np.nonzero(part == p)[0]
-            rows = stores[int(p)].multi_get(keys_np[sel])
+            if l2 is not None:
+                rows, hit = l2[int(p)].probe(keys_np[sel])
+                todo = np.nonzero(~hit)[0]
+                if todo.size:
+                    got = stores[int(p)].multi_get(keys_np[sel][todo])
+                    for j, r in zip(todo, got):
+                        rows[int(j)] = r
+            else:
+                rows = stores[int(p)].multi_get(keys_np[sel])
             present = [i for i, r in enumerate(rows) if r is not None]
             if present:
                 lt, _, ag, _, _ = serde.unpack_rows(

@@ -165,6 +165,11 @@ class FrontendStats:
     prefetch_hits: int = 0          # misses served from an in-flight read
     prefetch_rehydrations: int = 0  # prefetches of a previously-seen key
     demand_reads: int = 0           # misses that had to read at dispatch
+    # prefetched keys already resident in the sink's host L2 tier at
+    # submit time — those reads resolve from host RAM, no durable get
+    # (advisory: sampled on the driver thread against a cache the flush
+    # workers mutate; the read itself probes authoritatively at execution)
+    prefetch_l2_hits: int = 0
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -399,6 +404,10 @@ class ServingFrontend:
         n_miss = n_pre = 0
         if self._rmap is not None:
             asn = self._rmap.assign_group(keys, valid)
+            # victims leave the slot plane -> the sink's host L2 tier (if
+            # any): a later prefetch/demand read of them resolves from
+            # host RAM instead of a durable get
+            self.sink.demote(asn.evicted)
             n_miss = int(asn.miss_keys.size)
             rows, n_pre = self._hydration_rows(asn, keys[valid])
             h_slots, h_scal, h_agg = pack_hydration(
@@ -503,3 +512,5 @@ class ServingFrontend:
             self._prefetch[k] = (ticket, idx)
         self.stats.prefetch_issued += len(want)
         self.stats.prefetch_rehydrations += int(np.count_nonzero(seen))
+        self.stats.prefetch_l2_hits += int(np.count_nonzero(
+            self.sink.l2_contains(want)))

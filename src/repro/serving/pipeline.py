@@ -198,9 +198,15 @@ class ScoringPipeline:
         hydrated state.  This is the restart path when device state is
         bounded (``process_stream(residency=...)``): device cost scales
         with the scored key set, not with ``num_entities``.
+
+        A sink carrying a host L2 tier (``l2=``) is probed before the
+        durable stores — safe here because the flush below quiesces the
+        pipeline first, and byte-identical by the L2 coherence contract,
+        so scores are unchanged and only durable gets drop.
         """
         sink.flush()
-        feats = self.engine.materialize_cold(sink.stores, keys, t)
+        feats = self.engine.materialize_cold(sink.stores, keys, t,
+                                             l2=getattr(sink, "l2", None))
         return score(self.scorer, feats) if self.scorer is not None \
             else feats
 

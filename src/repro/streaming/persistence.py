@@ -62,6 +62,7 @@ import numpy as np
 from repro.core.types import EngineConfig, ProfileState
 from repro.streaming.durable import BACKENDS, open_partition_stores
 from repro.streaming.kvstore import KVStore, SerDe, StorageModel
+from repro.streaming.residency import HostL2Cache
 
 __all__ = ["WriteBehindSink", "SinkStats", "ReadTicket", "RetryPolicy",
            "hydrate_state", "FULL_STREAM_POLICIES"]
@@ -120,6 +121,11 @@ class SinkStats:
     retry_wait_s: float = 0.0
     flush_errors: int = 0
     degraded_flushes: int = 0
+    # host-RAM L2 tier (``l2=`` knob): hydration-read rows answered from
+    # packed host bytes instead of durable gets, and slot evictions
+    # demoted into the cache (synced from the caches at ``snapshot``)
+    l2_hits: int = 0
+    l2_demotions: int = 0
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -234,7 +240,8 @@ class WriteBehindSink:
                  backend: str = "memory",
                  store_dir: Optional[str] = None,
                  retry: Optional[RetryPolicy] = None,
-                 overflow: str = "block"):
+                 overflow: str = "block",
+                 l2=None):
         self.cfg = cfg
         self.serde = SerDe(len(cfg.taus))
         self.full_stream = cfg.policy in FULL_STREAM_POLICIES
@@ -257,6 +264,28 @@ class WriteBehindSink:
                            for i in range(n_partitions)]
         self._partition_fn = partition_fn or \
             (lambda keys: keys % len(self.stores))
+        # Host-RAM L2 tier between the device slots and the durable store
+        # (``streaming.residency.HostL2Cache``), one cache per partition so
+        # each stays owned by its partition's single worker thread on the
+        # write side.  ``l2=None`` disables the tier; an int builds one
+        # cache of that capacity per partition; ``True`` builds unbounded
+        # per-partition caches; a ``HostL2Cache`` is shared across
+        # partitions (its own lock makes that safe); a sequence supplies
+        # one cache per partition explicitly.
+        if l2 is None:
+            self.l2: Optional[List[HostL2Cache]] = None
+        elif isinstance(l2, HostL2Cache):
+            self.l2 = [l2] * len(self.stores)
+        elif l2 is True:
+            self.l2 = [HostL2Cache() for _ in self.stores]
+        elif isinstance(l2, (int, np.integer)):
+            self.l2 = [HostL2Cache(capacity=int(l2)) for _ in self.stores]
+        else:
+            self.l2 = list(l2)
+            if len(self.l2) != len(self.stores):
+                raise ValueError(
+                    f"l2 sequence has {len(self.l2)} caches for "
+                    f"{len(self.stores)} partitions")
         self.retry = retry or RetryPolicy()
         self._retry_lock = threading.Lock()
         self._overflow = overflow
@@ -360,8 +389,7 @@ class WriteBehindSink:
         ticket = ReadTicket(int(keys.size), len(splits), self.stats)
         if self._serial:
             for p, idx, ks in splits:
-                ticket._deliver(idx, self._with_retry(
-                    self.stores[p].multi_get, ks))
+                ticket._deliver(idx, self._exec_get(p, ks))
             return ticket
         if ordered:
             self._q.put(("read", ticket, splits))
@@ -369,6 +397,59 @@ class WriteBehindSink:
             for p, idx, ks in splits:
                 self._store_qs[p].put(("read", ticket, idx, ks))
         return ticket
+
+    def demote(self, keys) -> None:
+        """Demote evicted keys into the host L2 tier (no-op without one).
+
+        Driver-thread call at slot eviction: present rows get their LRU
+        recency refreshed; never-flushed keys get a cached-absence entry.
+        Insert-if-absent only (see ``HostL2Cache.demote``), so racing with
+        the key's in-flight flush is harmless in either order.
+        """
+        if self.l2 is None:
+            return
+        keys = np.asarray(keys, np.int64).reshape(-1)
+        if keys.size == 0:
+            return
+        part = np.asarray(self._partition_fn(keys))
+        for p in np.unique(part):
+            self.l2[int(p)].demote(keys[part == p])
+
+    def l2_probe(self, keys):
+        """Driver-side L2 lookup: ``(rows, hit)`` aligned with ``keys``.
+
+        Coherent with the stores only when the pipeline is quiescent —
+        call after ``flush()``, the cold-scoring path's contract
+        (``serving.pipeline.ScoringPipeline.score_cold``).  Without an L2
+        every key is a miss.
+        """
+        keys = np.asarray(keys, np.int64).reshape(-1)
+        rows: List[Optional[bytes]] = [None] * int(keys.size)
+        hit = np.zeros(keys.size, bool)
+        if self.l2 is None or keys.size == 0:
+            return rows, hit
+        part = np.asarray(self._partition_fn(keys))
+        for p in np.unique(part):
+            idx = np.nonzero(part == p)[0]
+            r, h = self.l2[int(p)].probe(keys[idx])
+            for j, rj in zip(idx, r):
+                rows[int(j)] = rj
+            hit[idx] = h
+        return rows, hit
+
+    def l2_contains(self, keys) -> np.ndarray:
+        """Advisory L2 presence mask (racy vs in-flight flushes; stats
+        only — the serving frontend counts prefetches the tier will
+        absorb).  All-False without an L2."""
+        keys = np.asarray(keys, np.int64).reshape(-1)
+        if self.l2 is None or keys.size == 0:
+            return np.zeros(keys.size, bool)
+        out = np.zeros(keys.size, bool)
+        part = np.asarray(self._partition_fn(keys))
+        for p in np.unique(part):
+            idx = np.nonzero(part == p)[0]
+            out[idx] = self.l2[int(p)].contains(keys[idx])
+        return out
 
     def flush(self) -> dict:
         """Block until every submitted block is durably stored."""
@@ -449,6 +530,16 @@ class WriteBehindSink:
                 measured["measured_bytes_written"]
                 / max(agg["bytes_written"], 1))
             agg["measured"] = measured
+        if self.l2 is not None:
+            # dedupe by identity: a single shared cache may back every
+            # partition slot
+            caches = list({id(c): c for c in self.l2}.values())
+            self.stats.l2_hits = sum(c.hits for c in caches)
+            self.stats.l2_demotions = sum(c.demotions for c in caches)
+            agg["l2_rows"] = sum(len(c) for c in caches)
+            agg["l2_inserts"] = sum(c.inserts for c in caches)
+            agg["l2_capacity_evictions"] = sum(
+                c.capacity_evictions for c in caches)
         agg.update(self.stats.snapshot())
         return agg
 
@@ -517,16 +608,13 @@ class WriteBehindSink:
                 if item[0] == "read":
                     _, ticket, idx, ks = item
                     try:
-                        ticket._deliver(idx, self._with_retry(
-                            self.stores[i].multi_get, ks))
+                        ticket._deliver(idx, self._exec_get(i, ks))
                     except BaseException as e:
                         ticket._deliver(idx, (), exc=e)
                         raise
                 elif self._exc is None:
                     _, ks, rows = item
-                    t0 = time.perf_counter()
-                    self._with_retry(self.stores[i].multi_put, ks, rows)
-                    self._put_busy[i] += time.perf_counter() - t0
+                    self._exec_put(i, ks, rows)
             except BaseException as e:
                 self._exc = e
             finally:
@@ -536,11 +624,41 @@ class WriteBehindSink:
         """Route one partition's packed rows to its store (worker thread,
         or directly under the serial strawman / a degraded flush)."""
         if self._serial or inline:
-            t0 = time.perf_counter()
-            self._with_retry(self.stores[p].multi_put, keys, rows)
-            self._put_busy[p] += time.perf_counter() - t0
+            self._exec_put(p, keys, rows)
         else:
             self._store_qs[p].put(("put", keys, rows))
+
+    def _exec_put(self, p: int, keys, rows) -> None:
+        """Execute one partition's batched put, then mirror the packed
+        bytes into its L2 cache — insertion at put *execution* time on the
+        partition's single writer thread is what keeps every later ordered
+        read's L2 view identical to the store's."""
+        t0 = time.perf_counter()
+        self._with_retry(self.stores[p].multi_put, keys, rows)
+        if self.l2 is not None:
+            self.l2[p].put_rows(keys, rows)
+        self._put_busy[p] += time.perf_counter() - t0
+
+    def _exec_get(self, p: int, keys):
+        """Execute one partition's batched hydration read, L2 first.
+
+        Keys resident in the partition's host cache — including cached
+        absences — are answered from packed host bytes (bit-identical to
+        the store row by the put-time insertion above); only the rest
+        issue the durable ``multi_get``.  Runs on the partition's worker
+        thread (ordered lane), the serial strawman's driver thread, or the
+        unordered fast lane — all safe, see ``HostL2Cache``.
+        """
+        if self.l2 is None:
+            return self._with_retry(self.stores[p].multi_get, keys)
+        rows, hit = self.l2[p].probe(keys)
+        miss = np.nonzero(~hit)[0]
+        if miss.size:
+            got = self._with_retry(self.stores[p].multi_get,
+                                   np.asarray(keys)[miss])
+            for j, r in zip(miss, got):
+                rows[int(j)] = r
+        return rows
 
     def _flush_block(self, keys, z, valid, rows, inline: bool = False
                      ) -> None:

@@ -29,29 +29,46 @@ Assignment contract (per flush group):
   whole group (conflict-free: two group keys never share a slot);
 * keys of the *current* group are pinned — the eviction scan cannot recycle
   them (a group with more distinct keys than slots is a capacity error,
-  raised before any state is mutated);
-* victims are chosen by a clock sweep over slots (``eviction=`` knob, names
-  in ``EVICTION``): ``"second_chance"`` grants one extra rotation to slots
-  referenced since the last sweep (classic clock / second-chance),
-  ``"fifo"`` recycles strictly in hand order (the strawman baseline).
+  raised before any state is mutated; the streaming drivers avoid it by
+  splitting oversized groups with ``split_oversized_group`` first);
+* victims are chosen per the ``eviction=`` knob (names in ``EVICTION``):
+  ``"second_chance"`` grants one extra clock rotation to slots referenced
+  since the last sweep (classic clock / second-chance), ``"fifo"`` recycles
+  strictly in hand order (the strawman baseline), and ``"priority"``
+  replaces the blind sweep with a vectorized priority array over slots —
+  predicted re-reference (per-slot touch frequency over recency) weighted
+  by modeled rehydration cost, lowest priority evicted first (the
+  vectorized-priority idiom of prioritized replay buffers).
 
 The map is plain numpy and thread-free: drivers call ``assign_group`` from
 the dispatch thread only.  Per-group and cumulative counters live in
 ``ResidencyStats`` (hit rate, unique misses == hydration reads, evictions).
+
+``HostL2Cache`` is the host-memory tier *between* the device slots and the
+durable store: packed SerDe rows (``kvstore.SerDe.pack_rows`` bytes, no
+unpack/repack round-trip) keyed by global entity id.  Slot eviction
+*demotes* the victim into it and hydration reads probe it before touching
+the durable store — see ``streaming.persistence.WriteBehindSink(l2=...)``
+for the coherence contract (entries are written at flush-execution time on
+the owning partition's worker, so an L2 hit is bit-identical to the
+ordered durable read it replaces).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+import threading
+from collections import OrderedDict
+from typing import List, NamedTuple, Optional
 
 import numpy as np
 
-__all__ = ["ResidencyMap", "ResidencyStats", "GroupAssignment", "EVICTION"]
+__all__ = ["ResidencyMap", "ResidencyStats", "GroupAssignment", "EVICTION",
+           "HostL2Cache", "split_oversized_group"]
 
-# Eviction policies of the clock sweep; README.md documents each and
+# Eviction policies of the slot recycler; README.md documents each and
 # scripts/check_docs.py lints the two lists against each other (like the
 # sharded engine's LAYOUTS).
-EVICTION = ("second_chance", "fifo")
+EVICTION = ("second_chance", "fifo", "priority")
 
 
 @dataclasses.dataclass
@@ -64,6 +81,9 @@ class ResidencyStats:
     misses: int = 0         # distinct keys hydrated (== hydration reads)
     evictions: int = 0      # slots recycled from a live key
     peak_resident: int = 0
+    # oversized flush groups split into fitting sub-groups by the drivers
+    # (counts the *extra* sub-groups: a group split in three adds two)
+    splits: int = 0
 
     def snapshot(self) -> dict:
         d = dataclasses.asdict(self)
@@ -114,6 +134,14 @@ class ResidencyMap:
         self._pin = np.full(self.n_slots, -1, np.int64)  # group that pinned
         self._hand = 0
         self._resident = 0
+        # Per-slot signals for eviction="priority" (maintained under every
+        # policy — three small arrays): last-touched group, event-lane touch
+        # count while resident, and modeled hydration cost of re-admitting
+        # the key (a rehydration costs an ordered durable read; a first
+        # touch only the cheap unordered fast-lane probe).
+        self._touch = np.zeros(self.n_slots, np.int64)
+        self._freq = np.zeros(self.n_slots, np.float64)
+        self._cost = np.ones(self.n_slots, np.float32)
         self.stats = ResidencyStats()
 
     # ------------------------------------------------------------ queries
@@ -160,28 +188,36 @@ class ResidencyMap:
         miss_lane = lane_slot < 0
         hit_lane_slots = lane_slot[~miss_lane]
         if hit_lane_slots.size:
-            n_hit = int(np.count_nonzero(
-                np.bincount(hit_lane_slots, minlength=self.n_slots)))
+            hit_counts = np.bincount(hit_lane_slots, minlength=self.n_slots)
+            n_hit = int(np.count_nonzero(hit_counts))
         else:
+            hit_counts = None
             n_hit = 0
-        miss_keys = np.unique(vk[miss_lane])
+        miss_keys, miss_counts = np.unique(vk[miss_lane], return_counts=True)
         if n_hit + miss_keys.size > self.n_slots:
             raise ValueError(
-                f"flush group holds {n_hit + miss_keys.size} distinct keys "
-                f"but the resident set has only {self.n_slots} slots; raise "
-                f"the residency budget or shrink batch/sink_group")
+                f"flush group {gid} holds {n_hit + miss_keys.size} distinct "
+                f"keys but the resident set has only {self.n_slots} slots; "
+                f"raise the residency budget, shrink batch/sink_group, or "
+                f"pre-split the group with split_oversized_group (the "
+                f"streaming drivers do)")
         st.groups += 1
         st.lookups += int(vk.size)
         st.unique_keys += n_hit + int(miss_keys.size)
         self._ref[hit_lane_slots] = True
         self._pin[hit_lane_slots] = gid
+        if hit_counts is not None:
+            self._freq += hit_counts
+            self._touch[hit_lane_slots] = gid
 
         miss_slots = np.empty(miss_keys.size, np.int32)
         miss_fresh = ~self._seen[miss_keys]
         self._seen[miss_keys] = True
+        takes = (self._take_slots_priority(gid, miss_keys.size)
+                 if self.eviction == "priority" else None)
         evicted = []
         for i, k in enumerate(miss_keys):
-            s = self._take_slot(gid)
+            s = int(takes[i]) if takes is not None else self._take_slot(gid)
             old = self.key_of_slot[s]
             if old >= 0:
                 self.slot_of_key[old] = -1
@@ -190,6 +226,9 @@ class ResidencyMap:
             self.slot_of_key[k] = s
             self._ref[s] = True
             self._pin[s] = gid
+            self._touch[s] = gid
+            self._freq[s] = float(miss_counts[i])
+            self._cost[s] = 1.0 if miss_fresh[i] else 2.0
             miss_slots[i] = s
 
         st.hits += n_hit
@@ -230,3 +269,182 @@ class ResidencyMap:
                 self._ref[s] = False
                 continue
             return s
+
+    def _take_slots_priority(self, gid: int, m: int) -> np.ndarray:
+        """Cost-aware batch victim selection for ``eviction="priority"``.
+
+        One vectorized pass per group instead of a per-miss hand walk:
+        each occupied slot's priority is its predicted re-reference value —
+        touch frequency while resident over groups since last touch —
+        weighted by the modeled cost of bringing the key back (rehydrated
+        keys ride the ordered durable-read FIFO, twice a fresh touch).
+        Free slots sort first (-inf), the current group's pinned slots are
+        unelectable (+inf; the capacity check guarantees ``m`` unpinned
+        slots exist), and the stable argsort keeps victim order
+        deterministic for reproducible eviction streams.
+        """
+        age = (gid - self._touch).astype(np.float64) + 1.0
+        prio = np.where(self.key_of_slot < 0, -np.inf,
+                        self._freq * self._cost / age)
+        prio[self._pin == gid] = np.inf
+        order = np.argsort(prio, kind="stable")
+        return order[:m].astype(np.int32)
+
+
+def split_oversized_group(keys, valid: Optional[np.ndarray],
+                          capacity: int) -> List[np.ndarray]:
+    """Split a flush group into key-complete segments that fit ``capacity``.
+
+    Returns boolean lane masks (each the full group shape, flattened) that
+    partition the valid lanes: distinct keys are assigned to segments in
+    first-appearance order, ``capacity`` keys per segment, and every lane
+    follows its key's segment.  Two properties make dispatching the
+    segments as consecutive sub-groups bit-exact and safe:
+
+    * **key-complete** — all of a key's lanes land in one segment, in
+      their original relative order, so each engine pass sees the key's
+      entire event run exactly like the unsplit dispatch would (per-key
+      state math never observes a chunk boundary, which keeps *fast* mode
+      bit-exact too) and per-key FIFO order is preserved;
+    * **cross-key reordering is free** — profile states are per-key and
+      thinning RNG is keyed on global entity ids, so interleaving between
+      different keys' lanes carries no information.
+
+    Each sub-group flushes as its own atomic sink batch: the flush-group
+    fsync boundary only gets *finer*, never torn.  The common case (group
+    already fits) costs one ``np.unique`` and returns a single mask.
+    """
+    keys = np.asarray(keys, np.int64).reshape(-1)
+    if capacity <= 0:
+        raise ValueError("need a positive slot capacity to split against")
+    if valid is None:
+        valid = np.ones(keys.size, bool)
+    valid = np.asarray(valid, bool).reshape(-1)
+    idx = np.nonzero(valid)[0]
+    vk = keys[idx]
+    uniq, first = np.unique(vk, return_index=True)
+    if uniq.size <= capacity:
+        return [valid.copy()]
+    seg_of_uniq = np.empty(uniq.size, np.int64)
+    seg_of_uniq[np.argsort(first, kind="stable")] = \
+        np.arange(uniq.size) // capacity
+    lane_seg = seg_of_uniq[np.searchsorted(uniq, vk)]
+    masks: List[np.ndarray] = []
+    for j in range(int(lane_seg.max()) + 1):
+        m = np.zeros(keys.size, bool)
+        m[idx[lane_seg == j]] = True
+        masks.append(m)
+    return masks
+
+
+class HostL2Cache:
+    """Host-RAM second level between device slots and the durable store.
+
+    Values are *packed* SerDe rows (``bytes`` of exactly
+    ``SerDe.row_bytes()``, the same bytes ``pack_rows`` emits and
+    ``multi_put`` stores) — promotion and demotion move bytes, never
+    unpack/repack, so an L2 hit is bit-identical to the durable read it
+    replaces.  A ``None`` value is a *cached absence*: the key is known to
+    have no durable row yet (evicted before its first flush), so a probe
+    hit returns "no row" without touching the store and the hydration path
+    builds the same cold-init defaults a store miss would.
+
+    Coherence contract (why a hit is always current):
+
+    * rows are inserted by ``WriteBehindSink`` on the owning partition's
+      store-worker thread at ``multi_put`` *execution* time, and reads are
+      either executed on that same thread (ordered FIFO lane) or are safe
+      to answer stale-free by construction (unordered lane = first-touch
+      keys, which have no earlier flush this run);
+    * ``demote`` (driver thread, at slot eviction) only *refreshes* a
+      present entry or inserts an absence marker when the key is missing —
+      it never overwrites a row, so racing with the key's in-flight flush
+      is harmless whichever order the lock grants.
+
+    ``capacity=None`` is unbounded; otherwise LRU (recency refreshed by
+    probes, inserts and demotions) with eldest-out eviction — an evicted
+    entry simply falls through to the durable store again.  Thread-safe
+    via one lock; counters are read unlocked for stats snapshots.
+    """
+
+    def __init__(self, capacity: Optional[int] = None):
+        if capacity is not None and capacity <= 0:
+            raise ValueError("l2 capacity must be positive (None: unbounded)")
+        self.capacity = capacity
+        self._rows: "OrderedDict[int, Optional[bytes]]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.demotions = 0
+        self.inserts = 0
+        self.capacity_evictions = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._rows)
+
+    def put_rows(self, keys, rows) -> None:
+        """Insert/overwrite packed rows (flush path, store-worker thread).
+
+        ``rows``: ``[N, row_bytes] uint8`` (a ``pack_rows`` output slice)
+        or any sequence of row-sized byte strings, aligned with ``keys``.
+        """
+        with self._lock:
+            for k, r in zip(keys, rows):
+                k = int(k)
+                self._rows.pop(k, None)
+                self._rows[k] = bytes(r)
+                self.inserts += 1
+            self._evict_over_capacity()
+
+    def probe(self, keys):
+        """Look up packed rows: ``(rows, hit)`` aligned with ``keys``.
+
+        ``rows[i]`` is the packed row bytes when present, ``None`` on a
+        cached absence *or* a miss — ``hit[i]`` disambiguates (a hit with
+        ``None`` means "authoritatively no durable row").  Hits refresh
+        LRU recency.
+        """
+        rows: List[Optional[bytes]] = []
+        hit = np.zeros(len(keys), bool)
+        with self._lock:
+            for i, k in enumerate(keys):
+                k = int(k)
+                if k in self._rows:
+                    self._rows.move_to_end(k)
+                    rows.append(self._rows[k])
+                    hit[i] = True
+                    self.hits += 1
+                else:
+                    rows.append(None)
+                    self.misses += 1
+        return rows, hit
+
+    def contains(self, keys) -> np.ndarray:
+        """Advisory presence mask — no stats, no recency (for counters)."""
+        with self._lock:
+            return np.fromiter((int(k) in self._rows for k in keys),
+                               bool, count=len(keys))
+
+    def demote(self, keys) -> None:
+        """Record slot evictions (driver thread): refresh present entries,
+        insert an absence marker for never-flushed keys.  Insert-if-absent
+        only — a queued flush that lands later still overwrites the marker
+        with the real row, and one that landed already is never clobbered.
+        """
+        with self._lock:
+            for k in keys:
+                k = int(k)
+                if k in self._rows:
+                    self._rows.move_to_end(k)
+                else:
+                    self._rows[k] = None
+                self.demotions += 1
+            self._evict_over_capacity()
+
+    def _evict_over_capacity(self) -> None:
+        if self.capacity is None:
+            return
+        while len(self._rows) > self.capacity:
+            self._rows.popitem(last=False)
+            self.capacity_evictions += 1
