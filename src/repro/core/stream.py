@@ -394,8 +394,11 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
                 vm = vmask.reshape(kseg.shape)
                 asn = rmap.assign_group(kseg, vm)
                 # victims leave the slot plane -> host L2 tier (no-op for
-                # sinks without one); their durable row is already queued
-                # or landed, see HostL2Cache's coherence contract
+                # sinks without one).  Safe here at *plan* time, before
+                # any sub-group's flush has been submitted: demote only
+                # refreshes the recency of entries already in the cache —
+                # row bytes enter the tier at flush/read execution time,
+                # never from the demote itself (HostL2Cache.demote)
                 sink.demote(asn.evicted)
                 slots = asn.slot.reshape(kseg.shape)
                 ev = Event(key=slots, q=q_h[lo:hi], t=t_h[lo:hi], valid=vm)

@@ -645,6 +645,8 @@ class ShardedFeatureEngine:
                     cols = slice(s * B, (s + 1) * B)
                     asn = rmaps[s].assign_group(kseg[:, cols],
                                                 vm[:, cols])
+                    # plan-time demote: a recency refresh only, safe
+                    # before any sub-group's flush (see core.stream)
                     sink.demote(asn.evicted)
                     slots[:, cols] = asn.slot.reshape(G, B)
                     miss.append(asn)
@@ -776,7 +778,7 @@ class ShardedFeatureEngine:
         return core_engine.materialize_features(state, flat, t,
                                                 self.cfg.taus)
 
-    def materialize_cold(self, stores, keys, t, l2=None) -> jax.Array:
+    def materialize_cold(self, stores, keys, t, l2_probe=None) -> jax.Array:
         """Score straight from durable bytes — restart as cold-start
         hydration, with no dense state table ever built.
 
@@ -789,9 +791,12 @@ class ShardedFeatureEngine:
         hydrated state; absent keys score as fresh profiles.  Device cost
         is O(len(keys)) rows, independent of ``num_entities``.
 
-        ``l2``: optional per-partition ``HostL2Cache`` list (a sink's
-        ``.l2``) probed before the durable gets — same packed bytes, so
-        scores are unchanged; only the durable-read count drops.  Only
+        ``l2_probe``: optional host-L2 lookup callable ``keys -> (rows,
+        hit)`` — pass the owning sink's ``l2_probe`` so the probe runs
+        under the same partition keying the rows were inserted with (the
+        sink owns ``partition_fn``, which need not match this engine's
+        ``route``).  Hits — rows and cached absences — skip the durable
+        gets; the bytes are identical, so scores are unchanged.  Only
         coherent on a quiescent sink (``ScoringPipeline.score_cold``
         flushes first).
         """
@@ -803,26 +808,27 @@ class ShardedFeatureEngine:
         serde = SerDe(n_taus)
         last_t = np.full(keys_np.size, -np.inf, np.float32)
         agg = np.zeros((keys_np.size, n_taus, 3), np.float32)
+        if l2_probe is not None:
+            rows, hit = l2_probe(keys_np)
+            rows = list(rows)
+        else:
+            rows = [None] * int(keys_np.size)
+            hit = np.zeros(keys_np.size, bool)
         part = self.route(keys_np)[0]
         for p in np.unique(part):
             sel = np.nonzero(part == p)[0]
-            if l2 is not None:
-                rows, hit = l2[int(p)].probe(keys_np[sel])
-                todo = np.nonzero(~hit)[0]
-                if todo.size:
-                    got = stores[int(p)].multi_get(keys_np[sel][todo])
-                    for j, r in zip(todo, got):
-                        rows[int(j)] = r
-            else:
-                rows = stores[int(p)].multi_get(keys_np[sel])
-            present = [i for i, r in enumerate(rows) if r is not None]
-            if present:
+            todo = sel[~hit[sel]]
+            if todo.size:
+                got = stores[int(p)].multi_get(keys_np[todo])
+                for j, r in zip(todo, got):
+                    rows[int(j)] = r
+            present = sel[[rows[int(i)] is not None for i in sel]]
+            if present.size:
                 lt, _, ag, _, _ = serde.unpack_rows(
-                    [rows[i] for i in present],
-                    keys=keys_np[sel][np.asarray(present)], partition=int(p))
-                idx = sel[np.asarray(present)]
-                last_t[idx] = lt.astype(np.float32)
-                agg[idx] = ag
+                    [rows[int(i)] for i in present],
+                    keys=keys_np[present], partition=int(p))
+                last_t[present] = lt.astype(np.float32)
+                agg[present] = ag
         taus = jnp.asarray(self.cfg.taus, jnp.float32)
         agg_now = estimators.decay_to(jnp.asarray(agg),
                                       jnp.asarray(last_t), t, taus)

@@ -200,13 +200,15 @@ class ScoringPipeline:
         with the scored key set, not with ``num_entities``.
 
         A sink carrying a host L2 tier (``l2=``) is probed before the
-        durable stores — safe here because the flush below quiesces the
-        pipeline first, and byte-identical by the L2 coherence contract,
-        so scores are unchanged and only durable gets drop.
+        durable stores through ``sink.l2_probe`` — the sink owns the
+        partition keying its rows were inserted under, the flush below
+        quiesces the pipeline first, and the bytes are identical by the
+        L2 coherence contract, so scores are unchanged and only durable
+        gets drop.
         """
         sink.flush()
         feats = self.engine.materialize_cold(sink.stores, keys, t,
-                                             l2=getattr(sink, "l2", None))
+                                             l2_probe=sink.l2_probe)
         return score(self.scorer, feats) if self.scorer is not None \
             else feats
 

@@ -401,10 +401,12 @@ class WriteBehindSink:
     def demote(self, keys) -> None:
         """Demote evicted keys into the host L2 tier (no-op without one).
 
-        Driver-thread call at slot eviction: present rows get their LRU
-        recency refreshed; never-flushed keys get a cached-absence entry.
-        Insert-if-absent only (see ``HostL2Cache.demote``), so racing with
-        the key's in-flight flush is harmless in either order.
+        Driver-thread call at slot eviction: present entries (the
+        victim's row or cached absence, written at flush/read execution
+        time) get their LRU recency refreshed.  Refresh-only (see
+        ``HostL2Cache.demote`` for why demote must never insert), so
+        racing with the key's in-flight flush is harmless in either
+        order.
         """
         if self.l2 is None:
             return
@@ -418,10 +420,13 @@ class WriteBehindSink:
     def l2_probe(self, keys):
         """Driver-side L2 lookup: ``(rows, hit)`` aligned with ``keys``.
 
-        Coherent with the stores only when the pipeline is quiescent —
-        call after ``flush()``, the cold-scoring path's contract
-        (``serving.pipeline.ScoringPipeline.score_cold``).  Without an L2
-        every key is a miss.
+        The partition-aware probe path for cold scoring — pass it as
+        ``materialize_cold(..., l2_probe=sink.l2_probe)`` (what
+        ``serving.pipeline.ScoringPipeline.score_cold`` does) so lookups
+        use the same ``partition_fn`` keying the rows were inserted
+        under.  Coherent with the stores only when the pipeline is
+        quiescent — call after ``flush()``.  Without an L2 every key is
+        a miss.
         """
         keys = np.asarray(keys, np.int64).reshape(-1)
         rows: List[Optional[bytes]] = [None] * int(keys.size)
@@ -538,6 +543,7 @@ class WriteBehindSink:
             self.stats.l2_demotions = sum(c.demotions for c in caches)
             agg["l2_rows"] = sum(len(c) for c in caches)
             agg["l2_inserts"] = sum(c.inserts for c in caches)
+            agg["l2_read_fills"] = sum(c.read_fills for c in caches)
             agg["l2_capacity_evictions"] = sum(
                 c.capacity_evictions for c in caches)
         agg.update(self.stats.snapshot())
@@ -645,17 +651,21 @@ class WriteBehindSink:
         Keys resident in the partition's host cache — including cached
         absences — are answered from packed host bytes (bit-identical to
         the store row by the put-time insertion above); only the rest
-        issue the durable ``multi_get``.  Runs on the partition's worker
-        thread (ordered lane), the serial strawman's driver thread, or the
-        unordered fast lane — all safe, see ``HostL2Cache``.
+        issue the durable ``multi_get``, and its results (rows *and*
+        authoritative absences) are filled back into the cache so repeat
+        hydrations of the same key skip the store.  Runs on the
+        partition's worker thread (ordered lane), the serial strawman's
+        driver thread, or the unordered fast lane — all safe, see
+        ``HostL2Cache``.
         """
         if self.l2 is None:
             return self._with_retry(self.stores[p].multi_get, keys)
         rows, hit = self.l2[p].probe(keys)
         miss = np.nonzero(~hit)[0]
         if miss.size:
-            got = self._with_retry(self.stores[p].multi_get,
-                                   np.asarray(keys)[miss])
+            miss_keys = np.asarray(keys)[miss]
+            got = self._with_retry(self.stores[p].multi_get, miss_keys)
+            self.l2[p].fill_from_read(miss_keys, got)
             for j, r in zip(miss, got):
                 rows[int(j)] = r
         return rows

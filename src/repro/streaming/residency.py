@@ -47,11 +47,12 @@ the dispatch thread only.  Per-group and cumulative counters live in
 ``HostL2Cache`` is the host-memory tier *between* the device slots and the
 durable store: packed SerDe rows (``kvstore.SerDe.pack_rows`` bytes, no
 unpack/repack round-trip) keyed by global entity id.  Slot eviction
-*demotes* the victim into it and hydration reads probe it before touching
-the durable store — see ``streaming.persistence.WriteBehindSink(l2=...)``
-for the coherence contract (entries are written at flush-execution time on
-the owning partition's worker, so an L2 hit is bit-identical to the
-ordered durable read it replaces).
+*demotes* the victim into it (a recency refresh of its entry) and
+hydration reads probe it before touching the durable store — see
+``streaming.persistence.WriteBehindSink(l2=...)`` for the coherence
+contract (entries are written at flush/read *execution* time on the
+owning partition's worker, so an L2 hit is bit-identical to the ordered
+durable read it replaces).
 """
 from __future__ import annotations
 
@@ -344,22 +345,29 @@ class HostL2Cache:
     ``SerDe.row_bytes()``, the same bytes ``pack_rows`` emits and
     ``multi_put`` stores) — promotion and demotion move bytes, never
     unpack/repack, so an L2 hit is bit-identical to the durable read it
-    replaces.  A ``None`` value is a *cached absence*: the key is known to
-    have no durable row yet (evicted before its first flush), so a probe
-    hit returns "no row" without touching the store and the hydration path
-    builds the same cold-init defaults a store miss would.
+    replaces.  A ``None`` value is a *cached absence*: an authoritative
+    durable read returned no row for the key, so a probe hit returns
+    "no row" without touching the store and the hydration path builds the
+    same cold-init defaults a store miss would.  Absence markers are only
+    ever written by ``fill_from_read`` with the result of an actual store
+    read — never invented at demote time — so a marker can never shadow a
+    durable row that exists (in particular a row LRU-evicted under a
+    capacity bound, or one written by a previous run of the process).
 
     Coherence contract (why a hit is always current):
 
-    * rows are inserted by ``WriteBehindSink`` on the owning partition's
-      store-worker thread at ``multi_put`` *execution* time, and reads are
-      either executed on that same thread (ordered FIFO lane) or are safe
-      to answer stale-free by construction (unordered lane = first-touch
-      keys, which have no earlier flush this run);
-    * ``demote`` (driver thread, at slot eviction) only *refreshes* a
-      present entry or inserts an absence marker when the key is missing —
-      it never overwrites a row, so racing with the key's in-flight flush
-      is harmless whichever order the lock grants.
+    * entries are written by ``WriteBehindSink`` on the owning partition's
+      store-worker thread, at ``multi_put`` *execution* time (flush rows,
+      ``put_rows``) or ``multi_get`` *execution* time (read results, rows
+      and absences, ``fill_from_read``); each key belongs to exactly one
+      partition, so all cache writes for a key are serialized on one
+      thread and a filled read result is the store's FIFO-ordered value
+      at that point (a flush queued behind the read overwrites it at its
+      own execution time);
+    * ``demote`` (driver thread, at slot eviction) only *refreshes* the
+      recency of a present entry — it never inserts or overwrites, so
+      racing with the key's in-flight flush is harmless whichever order
+      the lock grants.
 
     ``capacity=None`` is unbounded; otherwise LRU (recency refreshed by
     probes, inserts and demotions) with eldest-out eviction — an evicted
@@ -377,6 +385,7 @@ class HostL2Cache:
         self.misses = 0
         self.demotions = 0
         self.inserts = 0
+        self.read_fills = 0
         self.capacity_evictions = 0
 
     def __len__(self) -> int:
@@ -427,19 +436,37 @@ class HostL2Cache:
                                bool, count=len(keys))
 
     def demote(self, keys) -> None:
-        """Record slot evictions (driver thread): refresh present entries,
-        insert an absence marker for never-flushed keys.  Insert-if-absent
-        only — a queued flush that lands later still overwrites the marker
-        with the real row, and one that landed already is never clobbered.
+        """Record slot evictions (driver thread): refresh the LRU recency
+        of entries already present (the victim's row or cached absence —
+        both landed at flush/read *execution* time) so they outlive
+        colder entries under a capacity bound.  Never inserts: a key
+        whose entry was capacity-evicted (or never read) simply falls
+        through to the durable store on its next hydration read — a
+        demote-invented absence marker could shadow a real durable row.
         """
         with self._lock:
             for k in keys:
                 k = int(k)
                 if k in self._rows:
                     self._rows.move_to_end(k)
-                else:
-                    self._rows[k] = None
                 self.demotions += 1
+
+    def fill_from_read(self, keys, rows) -> None:
+        """Cache an authoritative durable read result (store-worker
+        thread, at ``multi_get`` execution time): promote returned rows
+        and record absences (``rows[i] is None``) so repeat hydrations of
+        the same key skip the store.  Insert-if-absent only — an entry
+        already present (e.g. a flush that landed meanwhile) is newer
+        than the read result and is never clobbered.
+        """
+        with self._lock:
+            for k, r in zip(keys, rows):
+                k = int(k)
+                if k in self._rows:
+                    self._rows.move_to_end(k)
+                else:
+                    self._rows[k] = None if r is None else bytes(r)
+                    self.read_fills += 1
             self._evict_over_capacity()
 
     def _evict_over_capacity(self) -> None:

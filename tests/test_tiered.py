@@ -175,6 +175,32 @@ def test_rehydrate_from_l2_issues_zero_durable_reads():
     sink.close()
 
 
+def test_bounded_l2_stays_bit_exact_under_capacity_pressure():
+    """End-to-end REVIEW regression: a tiny per-partition L2 capacity
+    keeps the tier under constant LRU pressure — flushed keys' rows are
+    capacity-evicted and their slots demoted again — and the tiered
+    engine must still reproduce the dense engine bit-for-bit (a stale
+    absence marker shadowing a durable row would rehydrate cold-init
+    defaults and diverge)."""
+    keys, qs, ts = _stream()
+    cfg = _cfg("pp")
+    _, info_d, sink_d = _dense_run(cfg, keys, qs, ts, batch=8)
+    rmap = ResidencyMap(N_KEYS, 8)       # deep slot churn
+    sink = WriteBehindSink(cfg, n_partitions=3, l2=2)   # 2 rows/partition
+    _, info_r, _ = _resident_run(cfg, keys, qs, ts, batch=8, S=8,
+                                 rmap=rmap, sink=sink)
+    snap = sink.snapshot()
+    assert snap["l2_capacity_evictions"] > 0    # the regime under test
+    assert snap["l2_demotions"] > 0 and rmap.stats.evictions > 0
+    np.testing.assert_array_equal(np.asarray(info_d.z), np.asarray(info_r.z))
+    np.testing.assert_array_equal(np.asarray(info_d.features),
+                                  np.asarray(info_r.features))
+    d, r = _store_contents(sink_d.stores), _store_contents(sink.stores)
+    assert set(d) == set(r) and all(d[k] == r[k] for k in d)
+    sink_d.close()
+    sink.close()
+
+
 def test_frontend_evict_mid_wait_rehydrates_from_l2():
     """The open-loop frontend case: keys evicted while queued are
     prefetched back through the L2 tier — bit-exact vs the closed-loop
@@ -370,9 +396,10 @@ def test_l2_cache_rows_absence_and_lru():
     rows, hit = l2.probe([1, 2, 3])
     assert rows == [b"row-1", b"row-2", None]
     assert hit.tolist() == [True, True, False]
-    # demote of an unseen key caches the *absence* (hit with None);
-    # demote of a present key refreshes it, never clobbers the row
-    l2.demote([3, 2])
+    # a durable read's miss fills an authoritative absence (hit + None);
+    # a demote of a present key refreshes it, never clobbers the row
+    l2.fill_from_read([3], [None])
+    l2.demote([2])
     rows, hit = l2.probe([2, 3])
     assert hit.tolist() == [True, True] and rows == [b"row-2", None]
     assert len(l2) == 2                   # capacity held: key 1 LRU'd out
@@ -389,15 +416,33 @@ def test_l2_cache_rows_absence_and_lru():
 
 def test_l2_cache_put_overwrites_absence_marker():
     l2 = HostL2Cache()
-    l2.demote([5])
+    l2.fill_from_read([5], [None])       # store read: no durable row yet
     rows, hit = l2.probe([5])
     assert hit[0] and rows[0] is None
-    l2.put_rows([5], [b"flushed"])       # queued flush lands after demote
+    l2.put_rows([5], [b"flushed"])       # the key's first flush lands
     rows, hit = l2.probe([5])
     assert hit[0] and rows[0] == b"flushed"
     l2.demote([5])                        # later demote must not clobber
     rows, _ = l2.probe([5])
     assert rows[0] == b"flushed"
+    l2.fill_from_read([5], [None])        # nor may a stale read result
+    rows, _ = l2.probe([5])
+    assert rows[0] == b"flushed"
+
+
+def test_l2_demote_never_fakes_absence_after_capacity_eviction():
+    """REVIEW regression: demoting a key whose row was LRU-evicted under
+    the capacity bound must NOT insert an absence marker — the next
+    hydration read has to fall through to the durable store instead of
+    silently rehydrating cold-init defaults over the key's durable row."""
+    l2 = HostL2Cache(capacity=1)
+    l2.put_rows([1], [b"row-1"])          # key 1's flush lands
+    l2.put_rows([2], [b"row-2"])          # capacity 1: row-1 LRU'd out
+    assert l2.capacity_evictions == 1
+    l2.demote([1])                        # key 1's slot is recycled again
+    rows, hit = l2.probe([1])
+    assert not hit[0] and rows[0] is None  # a miss (durable read next),
+    assert l2.contains([1]).tolist() == [False]   # not a cached absence
 
 
 # ------------------------------------- ResidencyMap invariants (property)
@@ -494,14 +539,15 @@ def test_cold_scores_match_warm_for_layouts_and_backends(layout, backend,
     cold = np.asarray(eng.materialize_cold(sink.stores, ents, t_s))
     np.testing.assert_array_equal(warm, cold)
     cold_l2 = np.asarray(eng.materialize_cold(sink.stores, ents, t_s,
-                                              l2=sink.l2))
+                                              l2_probe=sink.l2_probe))
     np.testing.assert_array_equal(warm, cold_l2)
     # every durably-written row is in the tier: re-materializing just
     # those entities from L2 touches the durable store zero times
     hot = np.asarray(ents)[sink.l2_contains(np.asarray(ents))]
     if hot.size:
         g0 = sink.snapshot()["gets"]
-        np.asarray(eng.materialize_cold(sink.stores, hot, t_s, l2=sink.l2))
+        np.asarray(eng.materialize_cold(sink.stores, hot, t_s,
+                                        l2_probe=sink.l2_probe))
         assert sink.snapshot()["gets"] == g0
     sink.close()
 
