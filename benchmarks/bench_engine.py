@@ -330,6 +330,9 @@ def _run_persist_suite(n_events, n_keys, batch, seed):
                "modeled_io_s": round(stats["modeled_io_s"], 4),
                "flush_s": round(stats["flush_s"], 4),
                "submit_wait_s": round(stats["submit_wait_s"], 4),
+               "host_pack_s": round(stats["host_pack_s"], 4),
+               "device_wait_s": round(stats["device_wait_s"], 4),
+               "overlap_frac": round(stats["overlap_frac"], 4),
                # measured columns (real durable backend, same stream)
                "events_per_s_durable": round(n_events / t_dur, 1),
                "measured_bytes_written": meas["measured_bytes_written"],
@@ -619,6 +622,77 @@ def _run_residency_suite(n_events, n_keys, batch, seed):
     row.update(memory_watermark())
     rows.append(row)
     emit("engine_residency", row)
+
+    # ---- pipelined execution plane: depth-2 double buffering vs serial --
+    # The A/B the pipelined driver exists for: the frac-1.0 regime over a
+    # storage model whose modeled latencies actually elapse
+    # (``sleep_io=True`` — reads cost real wall time, as a remote store's
+    # would), so the serial driver stalls on every group's hydration
+    # round-trip while the depth-2 driver packs/stages group g+1 and parks
+    # its reads behind the epoch lane during group g's wait.  Interleaved
+    # runs, ratio of medians; ``overlap_frac`` (measured wall-clock
+    # intersection of host pack work and device/IO waits, not wall
+    # arithmetic) is the mechanism column — the speedup should come from
+    # overlap, not noise.
+    from repro.streaming.kvstore import StorageModel
+
+    n_pipe = min(n, 32_768)
+    pk, pq, pt = keys[:n_pipe], qs[:n_pipe], ts[:n_pipe]
+
+    def pipe_once(depth):
+        storage = StorageModel(read_us=2000.0, write_us=150.0,
+                               batch_row_us=1.0, sleep_io=True)
+        sink = WriteBehindSink(cfg, n_partitions=4, storage=storage)
+        state = init_state(n_keys, len(cfg.taus))
+        rmap = ResidencyMap(n_keys, n_keys)
+        t0 = time.perf_counter()
+        state, _ = run_stream(cfg, state, pk, pq, pt, batch=batch,
+                              mode="fast", rng=jax.random.PRNGKey(0),
+                              collect_info=False, sink=sink,
+                              sink_group=group, residency=rmap,
+                              pipeline_depth=depth)
+        sink.flush()
+        jax.block_until_ready(state.agg)
+        dt = time.perf_counter() - t0
+        snap = sink.snapshot()
+        sink.close()
+        return dt, snap
+
+    pipe_once(1)                        # warm both programs' jit caches
+    pipe_once(2)
+    walls = {1: [], 2: []}
+    snaps = {1: None, 2: None}
+    for _ in range(3):
+        for depth in (1, 2):            # interleaved: same container noise
+            dt, snap = pipe_once(depth)
+            walls[depth].append(dt)
+            if snaps[depth] is None or dt < snaps[depth][0]:
+                snaps[depth] = (dt, snap)
+    med = {d: float(np.median(walls[d])) for d in (1, 2)}
+    for depth in (1, 2):
+        _, snap = snaps[depth]
+        row = {"suite": "residency", "variant": "pipelined",
+               "mode": "fast", "policy": "pp", "batch": batch,
+               "n_events": n_pipe, "sink_group": group,
+               "resident_fraction": 1.0, "n_slots": n_keys,
+               "storage": "slept-io r2000us/w150us",
+               "pipeline_depth": depth,
+               "events_per_s": round(n_pipe / med[depth], 1),
+               "events_per_s_best": round(n_pipe / min(walls[depth]), 1),
+               "host_pack_s": round(snap["host_pack_s"], 4),
+               "device_wait_s": round(snap["device_wait_s"], 4),
+               "overlap_s": round(snap["overlap_s"], 4),
+               "overlap_frac": round(snap["overlap_frac"], 4),
+               "epochs_staged": snap["epochs_staged"],
+               "staged_reads": snap["staged_reads"],
+               "parked_reads": snap["parked_reads"],
+               "read_wait_s": round(snap["read_wait_s"], 4),
+               "submit_wait_s": round(snap["submit_wait_s"], 4)}
+        if depth == 2:
+            row["speedup_vs_serial"] = round(med[1] / med[2], 3)
+        row.update(memory_watermark())
+        rows.append(row)
+        emit("engine_residency", row)
     return rows
 
 

@@ -54,7 +54,8 @@ _SPEC = ProfileSpec(windows=(60.0, 3600.0, 86400.0), kde_bandwidth=3600.0,
                     variance_alpha=1.0, policy="pp")
 
 
-def _one_run(pipe, stream, arrival_s, batch, max_wait_s):
+def _one_run(pipe, stream, arrival_s, batch, max_wait_s,
+             admission="serial"):
     """One open-loop replay; caller owns warmup.  Returns the ServeResult
     and the sink snapshot (puts ride along so the row shows the thinned
     write path stayed on)."""
@@ -63,7 +64,8 @@ def _one_run(pipe, stream, arrival_s, batch, max_wait_s):
         res = pipe.serve(stream.key, stream.q, stream.t,
                          arrival_s=arrival_s, batch=batch,
                          max_wait_s=max_wait_s,
-                         rng=jax.random.PRNGKey(0), sink=sink)
+                         rng=jax.random.PRNGKey(0), sink=sink,
+                         admission=admission)
         stats = sink.flush()
     finally:
         sink.close()
@@ -99,31 +101,48 @@ def run(n_events: int = 30_000, batch: int = 256, max_wait_s: float = 0.002,
         for frac in load_fracs:
             offered = frac * capacity
             arrivals = poisson_arrivals(n, offered, seed=seed)
-            res, sstats = _one_run(pipe, stream, arrivals, batch,
-                                   max_wait_s)
-            q = res.latency_quantiles()
-            st = res.stats
-            row = {"suite": "serving", "regime": regime, "mode": "fast",
-                   "policy": _SPEC.policy, "n_events": n, "batch": batch,
-                   "max_wait_ms": round(max_wait_s * 1e3, 3),
-                   "capacity_events_per_s": round(capacity, 1),
-                   "knee_events_per_s": round(capacity, 1),
-                   "offered_frac": frac,
-                   "offered_events_per_s": round(offered, 1),
-                   "past_knee": frac > 1.0,
-                   "achieved_events_per_s": round(n / _wall_of(res), 1),
-                   "p50_ms": round(q["p50"] * 1e3, 3),
-                   "p99_ms": round(q["p99"] * 1e3, 3),
-                   "p999_ms": round(q["p999"] * 1e3, 3),
-                   "mean_batch": round(st.events / max(st.dispatches, 1),
-                                       2),
-                   "partial_frac": round(
-                       st.deadline_batches / max(st.dispatches, 1), 4),
-                   "max_queue": st.max_queue,
-                   "puts_per_event": round(sstats["puts"] / n, 4)}
-            row.update(memory_watermark())
-            rows.append(row)
-            emit("serving", row)
+            serial_q = None
+            # threaded admission rides the same Poisson schedule right
+            # after its serial twin, and its row carries the p50/p99
+            # delta — the latency cost/benefit of moving batching off the
+            # dispatch thread, measured under identical offered load
+            for admission in ("serial", "threaded"):
+                res, sstats = _one_run(pipe, stream, arrivals, batch,
+                                       max_wait_s, admission=admission)
+                q = res.latency_quantiles()
+                st = res.stats
+                row = {"suite": "serving", "regime": regime,
+                       "mode": "fast", "policy": _SPEC.policy,
+                       "admission": admission,
+                       "n_events": n, "batch": batch,
+                       "max_wait_ms": round(max_wait_s * 1e3, 3),
+                       "capacity_events_per_s": round(capacity, 1),
+                       "knee_events_per_s": round(capacity, 1),
+                       "offered_frac": frac,
+                       "offered_events_per_s": round(offered, 1),
+                       "past_knee": frac > 1.0,
+                       "achieved_events_per_s":
+                           round(n / _wall_of(res), 1),
+                       "p50_ms": round(q["p50"] * 1e3, 3),
+                       "p99_ms": round(q["p99"] * 1e3, 3),
+                       "p999_ms": round(q["p999"] * 1e3, 3),
+                       "mean_batch": round(
+                           st.events / max(st.dispatches, 1), 2),
+                       "partial_frac": round(
+                           st.deadline_batches / max(st.dispatches, 1),
+                           4),
+                       "max_queue": st.max_queue,
+                       "puts_per_event": round(sstats["puts"] / n, 4)}
+                if admission == "serial":
+                    serial_q = q
+                else:
+                    row["p50_delta_ms"] = round(
+                        (q["p50"] - serial_q["p50"]) * 1e3, 3)
+                    row["p99_delta_ms"] = round(
+                        (q["p99"] - serial_q["p99"]) * 1e3, 3)
+                row.update(memory_watermark())
+                rows.append(row)
+                emit("serving", row)
     if write_json:
         from benchmarks.bench_engine import write_rows
         write_rows(rows, ("serving",))

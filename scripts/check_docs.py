@@ -76,7 +76,55 @@ OPTION_LINTS = (
     OptionLint(re.compile(r"--frontend[= ]([A-Za-z0-9_]+)"),
                "--frontend {name}", "src/repro/launch/serve.py",
                r"^FRONTENDS\s*=\s*\(([^)]*)\)", "FRONTENDS"),
+    # admission-plane names (`admission="threaded"`)
+    OptionLint(re.compile(r'admission="([A-Za-z0-9_]+)"'),
+               'admission="{name}"', "src/repro/serving/frontend.py",
+               r"^ADMISSION\s*=\s*\(([^)]*)\)", "ADMISSION"),
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class KnobLint:
+    """One docs<->code *knob* lint (both directions) for keyword knobs
+    that have no option tuple: the docs must mention the knob (spelled
+    ``token``), and the owning module must still define it (``src_re``
+    over source text) — so a renamed/removed knob fails the docs run,
+    and an undocumented knob fails it too."""
+    token: str
+    src: str
+    src_re: str
+
+
+KNOB_LINTS = (
+    # the pipelined driver's depth knob: docs spell it `pipeline_depth=`;
+    # the closed-loop drivers must keep the keyword (default-1 serial)
+    KnobLint("pipeline_depth=", "src/repro/core/stream.py",
+             r"pipeline_depth:\s*int\s*=\s*1"),
+    KnobLint("adaptive_wait=", "src/repro/serving/frontend.py",
+             r"adaptive_wait:\s*bool\s*=\s*False"),
+)
+
+
+def check_knobs(files) -> list:
+    bad = []
+    for lint in KNOB_LINTS:
+        in_code = re.search(
+            lint.src_re, open(os.path.join(ROOT, lint.src)).read())
+        for f in files:
+            path = os.path.join(ROOT, f)
+            if os.path.exists(path) and lint.token in open(path).read() \
+                    and not in_code:
+                bad.append((f, f"`{lint.token}` not found in {lint.src} "
+                               f"(pattern {lint.src_re!r})"))
+        documented = any(
+            lint.token in open(os.path.join(ROOT, f)).read()
+            for f in DEFAULT_FILES
+            if os.path.exists(os.path.join(ROOT, f)))
+        if in_code and not documented:
+            bad.append((DEFAULT_FILES[0],
+                        f"`{lint.token}` knob in {lint.src} but "
+                        f"undocumented"))
+    return bad
 
 
 def code_names(lint: OptionLint) -> set:
@@ -145,6 +193,7 @@ def main(argv) -> int:
         bad += check(f)
     for lint in OPTION_LINTS:
         bad += check_options(files, lint)
+    bad += check_knobs(files)
     for md, target in bad:
         print(f"UNRESOLVED {md}: {target}")
     print(f"checked {len(files)} file(s): "

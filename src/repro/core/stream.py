@@ -40,10 +40,43 @@ translates event keys to slots on the host, prefetches the next group's
 misses through the write-behind sink's ordered read pipeline while the
 current group computes, and recycles victim slots without any device
 read-back — see ``streaming/residency.py`` for the contract.
+
+Pipelined execution (``run_stream(pipeline_depth=2)``) moves the host
+side of that schedule onto a *prep thread*: while group g runs on
+device, the prep thread plans group g+1 (lane routing, valid masks,
+oversized-group splitting, slot assignment via the ResidencyMap's
+vectorized batch take), issues its hydration reads through the sink's
+epoch-gated lane (``WriteBehindSink.stage_epoch`` — the pipelined
+replacement for dispatcher-FIFO read ordering), and packs its hydration
+arrays into a fresh staging generation.  The dispatch thread only pops
+staged groups, dispatches them (JAX async dispatch returns immediately)
+and submits their outputs; it never blocks on device results — the only
+device sync points are the sink's gather-side ``np.asarray`` conversions
+on the flush dispatcher, which is exactly where host pack work hides
+(``SinkStats.overlap_frac`` measures it directly).
+
+Staging-generation (ping-pong) contract: the prep thread packs each
+group's input arrays into a *fresh* generation of host buffers, holding
+a token from a ``pipeline_depth``-deep pool from pack time until the
+dispatch thread pops that generation off the ready queue.  Soundness
+does not rest on the token: generations are never reused or mutated —
+the popped generation stays alive through the jit call via the dispatch
+thread's own references, JAX copies committed host operands into device
+buffers at dispatch, and donation only ever applies to the state carry,
+never to the staged inputs.  The token is purely the memory bound (at
+most ``pipeline_depth`` packed generations queued, plus the one being
+dispatched).  Releasing at pop time — not after the jit call returns —
+is what makes ``pipeline_depth=2`` a true ping-pong: one generation is
+consumed by the device while the prep thread fills the next; releasing
+after dispatch would hold both tokens for the whole device window and
+idle the prep thread exactly when there is compute to hide under.
+``pipeline_depth=1`` is the serial driver, byte-for-byte.
 """
 from __future__ import annotations
 
 import functools
+import queue
+import threading
 from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
@@ -296,7 +329,8 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
                *, batch: int = 4096, mode: str = "fast",
                rng: Optional[jax.Array] = None, collect_info: bool = True,
                donate: bool = True, exact_impl: str = "compact",
-               sink=None, sink_group: int = 4, residency=None
+               sink=None, sink_group: int = 4, residency=None,
+               pipeline_depth: int = 1
                ) -> Tuple[ProfileState, Union[StepInfo, jax.Array]]:
     """Drive the engine over a flat stream in ``[n_batches, batch]`` blocks.
 
@@ -346,9 +380,29 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
     ``sink`` (the durable store is the backing level of the hierarchy);
     thinning decisions stay keyed on global entity ids, so ``z``/``p``/
     features and stored bytes are independent of the residency budget.
+
+    ``pipeline_depth``: host/device overlap for the sink and residency
+    drivers.  ``1`` (default) is the serial flush-group loop, unchanged.
+    ``>= 2`` runs the pipelined plane (see the module docstring): a prep
+    thread plans, reads and packs up to ``pipeline_depth`` groups ahead
+    of the dispatch thread, with hydration ordering carried by the
+    sink's epoch-gated read lane instead of dispatcher FIFO position.
+    Outputs (z/p/lam/features and stored bytes) are bit-identical to the
+    serial driver for every policy and mode — CI enforces it
+    (``tests/test_pipelined.py``).  Requires a sink; the residency form
+    additionally requires a threaded sink with the pure-backpressure
+    overflow policy (``queue_depth >= 1``, ``overflow="block"``).
     """
     if rng is None:
         rng = jax.random.PRNGKey(0)
+    depth = int(pipeline_depth)
+    if depth < 1:
+        raise ValueError("pipeline_depth must be >= 1")
+    if depth > 1 and sink is None:
+        raise ValueError(
+            "pipeline_depth > 1 requires a sink: the pipelined plane "
+            "overlaps host group prep with device compute across flush "
+            "groups, which the single-scan path does not have")
     n = int(np.shape(keys)[0])
     pad = (-n) % batch
     host_blocks = lambda x, fill: np.reshape(
@@ -392,7 +446,10 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
             plans = []
             for j, vmask in enumerate(segs):
                 vm = vmask.reshape(kseg.shape)
-                asn = rmap.assign_group(kseg, vm)
+                # the pipelined plane plans on its prep thread with the
+                # vectorized batch take (bit-identical slots, less host
+                # work to hide under the device window)
+                asn = rmap.assign_group(kseg, vm, batch_take=depth > 1)
                 # victims leave the slot plane -> host L2 tier (no-op for
                 # sinks without one).  Safe here at *plan* time, before
                 # any sub-group's flush has been submitted: demote only
@@ -421,7 +478,8 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
 
         state, info = _drive_with_residency(
             bstep, state, key_h.shape[0], max(1, int(sink_group)),
-            plan_group, rng, sink, collect_info=collect_info)
+            plan_group, rng, sink, collect_info=collect_info,
+            pipeline_depth=depth)
     elif sink is not None:
         bstep = _sink_step(cfg, mode, collect_info, donate, exact_impl)
 
@@ -435,7 +493,7 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
         state, info = _drive_with_sink(
             bstep, state, key_h.shape[0], max(1, int(sink_group)), group_of,
             rng, sink, sink_keys=key_h, valid_host=valid_h,
-            collect_info=collect_info)
+            collect_info=collect_info, pipeline_depth=depth)
     else:
         events = Event(key=jnp.asarray(key_h), q=jnp.asarray(q_h),
                        t=jnp.asarray(t_h), valid=jnp.asarray(valid_h))
@@ -458,7 +516,8 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
 
 
 def _drive_with_sink(bstep, state, n_blocks, group, group_of, rng, sink, *,
-                     sink_keys, valid_host, collect_info, consts=()):
+                     sink_keys, valid_host, collect_info, consts=(),
+                     pipeline_depth=1):
     """Host flush-group loop for the write-behind path (shared with the
     sharded engine).  The driver thread only dispatches and enqueues;
     device arrays are handed to the sink as-is and the device->host
@@ -473,11 +532,22 @@ def _drive_with_sink(bstep, state, n_blocks, group, group_of, rng, sink, *,
     its layout).  At most two jit shapes exist per run: the full group
     and one trailing remainder group.
     Returns (state, StepInfo-of-stacked-blocks) shaped like the scan path.
+
+    ``pipeline_depth >= 2`` delegates to ``_drive_pipelined_sink``: a
+    prep thread stages up to that many groups' input arrays ahead of the
+    dispatch loop (for the sharded engine that includes the h2d
+    ``device_put``), bit-identical outputs.
     """
+    if pipeline_depth > 1:
+        return _drive_pipelined_sink(
+            bstep, state, n_blocks, group, group_of, rng, sink,
+            sink_keys=sink_keys, valid_host=valid_host,
+            collect_info=collect_info, consts=consts, depth=pipeline_depth)
     outs_all = []
     for lo in range(0, n_blocks, group):
         hi = min(lo + group, n_blocks)
-        ev, gidx = group_of(lo, hi)
+        with sink.overlap.host():
+            ev, gidx = group_of(lo, hi)
         state, outs, rows = bstep(state, ev, rng, gidx, *consts)
         # enqueue device arrays; the flush thread converts + packs + stores
         # (the bounded queue backpressures this loop when storage lags)
@@ -486,6 +556,76 @@ def _drive_with_sink(bstep, state, n_blocks, group, group_of, rng, sink, *,
                     valid_host[lo:hi].reshape(-1), rows)
         outs_all.append(outs)
 
+    return state, _stack_group_outs(outs_all, collect_info)
+
+
+def _drive_pipelined_sink(bstep, state, n_blocks, group, group_of, rng,
+                          sink, *, sink_keys, valid_host, collect_info,
+                          depth, consts=()):
+    """Pipelined write-behind driver: group staging overlaps dispatch.
+
+    The prep thread builds each group's Event pytree (+ gather rows) and
+    parks it on the ready queue; the dispatch thread (the caller) pops,
+    dispatches and submits.  A ``depth``-token pool bounds how many
+    staged input generations exist at once — the ping-pong contract in
+    the module docstring: a token returns only after the jit call has
+    dispatched (operands copied to device buffers), so a staged
+    generation is never reclaimed while something can still read it.
+    There are no hydration reads on this path, so no epoch gating is
+    needed; flushes still ride the sink queue in dispatch order.
+    """
+    ready: queue.Queue = queue.Queue()
+    tokens = threading.BoundedSemaphore(depth)
+    stop = threading.Event()
+
+    def prep():
+        try:
+            for lo in range(0, n_blocks, group):
+                hi = min(lo + group, n_blocks)
+                while not tokens.acquire(timeout=0.1):
+                    if stop.is_set():
+                        return
+                if stop.is_set():
+                    tokens.release()
+                    return
+                with sink.overlap.host():
+                    ev, gidx = group_of(lo, hi)
+                ready.put(("group", lo, hi, ev, gidx))
+            ready.put(("done",))
+        except BaseException as e:   # surfaced on the dispatch thread
+            ready.put(("error", e))
+
+    th = threading.Thread(target=prep, name="pipeline-prep", daemon=True)
+    th.start()
+    outs_all = []
+    try:
+        while True:
+            item = ready.get()
+            if item[0] == "done":
+                break
+            if item[0] == "error":
+                raise item[1]
+            _, lo, hi, ev, gidx = item
+            # popping hands this generation's liveness to the local refs
+            # below; releasing the token *before* the jit call is what lets
+            # the prep thread stage the next group under this dispatch —
+            # holding it through the call would idle prep exactly during
+            # the device window (see the ping-pong contract, module
+            # docstring)
+            tokens.release()
+            # the jit call occupies the execution engine until the step is
+            # enqueued (on CPU backends that can be the whole computation):
+            # meter it as device-channel time so overlap_frac reflects how
+            # much prep work genuinely hid behind compute
+            with sink.overlap.device():
+                state, outs, rows = bstep(state, ev, rng, gidx, *consts)
+            z = outs.z if collect_info else outs[0]
+            sink.submit(sink_keys[lo:hi].reshape(-1), z,
+                        valid_host[lo:hi].reshape(-1), rows)
+            outs_all.append(outs)
+    finally:
+        stop.set()
+        th.join()
     return state, _stack_group_outs(outs_all, collect_info)
 
 
@@ -510,7 +650,8 @@ def _stack_group_outs(outs_all, collect_info):
 
 
 def _drive_with_residency(bstep, state, n_blocks, group, plan_group, rng,
-                          sink, *, collect_info, consts=()):
+                          sink, *, collect_info, consts=(),
+                          pipeline_depth=1):
     """Hydrate→dispatch→evict flush-group schedule for bounded residency
     (shared with the sharded engine via the ``plan_group`` callback).
 
@@ -531,7 +672,17 @@ def _drive_with_residency(bstep, state, n_blocks, group, plan_group, rng,
     (the ResidencyMap mutates).  Sub-group k+1's hydration reads are
     submitted only after sub-group k's flush, so a key flushed by one
     sub-group and rehydrated by the next still reads its latest row.
+
+    ``pipeline_depth >= 2`` delegates to ``_drive_pipelined_residency``,
+    which moves planning, reads and packing onto a prep thread and
+    replaces read-behind-flush FIFO position with the sink's epoch lane
+    — same ordering guarantee, proven differently (see there).
     """
+    if pipeline_depth > 1:
+        return _drive_pipelined_residency(
+            bstep, state, n_blocks, group, plan_group, rng, sink,
+            collect_info=collect_info, consts=consts, depth=pipeline_depth)
+
     def reads_of(plan):
         # first-touch misses skip the FIFO (nothing in flight can hold
         # them); rehydrations wait their turn behind earlier flushes
@@ -549,14 +700,16 @@ def _drive_with_residency(bstep, state, n_blocks, group, plan_group, rng,
     sink.flush()
     outs_all = []
     part_outs = []          # finished sub-groups of the current group
-    pending = plan_group(0, min(group, n_blocks))
+    with sink.overlap.host():
+        pending = plan_group(0, min(group, n_blocks))
     next_lo = min(group, n_blocks)
     i = 0
     t_fresh, t_re = reads_of(pending[0])
     while True:
         plan = pending[i]
-        h_slots, h_scal, h_agg = plan.build_hydration(t_fresh.result(),
-                                                      t_re.result())
+        rows_f, rows_r = t_fresh.result(), t_re.result()
+        with sink.overlap.host():
+            h_slots, h_scal, h_agg = plan.build_hydration(rows_f, rows_r)
         state, outs, rows = bstep(state, plan.events, rng, plan.gather_idx,
                                   h_slots, h_scal, h_agg, *consts)
         z = outs.z if collect_info else outs[0]
@@ -569,10 +722,182 @@ def _drive_with_residency(bstep, state, n_blocks, group, plan_group, rng,
         if i == len(pending):
             if next_lo >= n_blocks:
                 break
-            pending = plan_group(next_lo, min(next_lo + group, n_blocks))
+            with sink.overlap.host():
+                pending = plan_group(next_lo, min(next_lo + group,
+                                                  n_blocks))
             next_lo = min(next_lo + group, n_blocks)
             i = 0
         t_fresh, t_re = reads_of(pending[i])
+    return state, _stack_group_outs(outs_all, collect_info)
+
+
+def _drive_pipelined_residency(bstep, state, n_blocks, group, plan_group,
+                               rng, sink, *, collect_info, depth,
+                               consts=()):
+    """Pipelined hydrate→dispatch→evict driver (``pipeline_depth >= 2``).
+
+    Thread split:
+
+    * **prep thread** — in stream order: plan the group (slot assignment
+      with the vectorized batch take, splitting, demotes), submit its
+      hydration reads (first-touch misses on the unordered fast lane,
+      rehydrations on the epoch-gated ``staged=True`` lane), *then*
+      ``stage_epoch`` the group (reads first — a group must never gate
+      on its own flush).  Reads are issued for up to ``depth`` groups
+      before the oldest group's tickets are waited on — the lookahead
+      that keeps several batched reads in flight at the partition
+      workers at once, so storage latency pipelines group-to-group
+      instead of serializing.  Completion is oldest-first: wait the
+      tickets, pack the hydration arrays into a fresh staging
+      generation, park the staged group on the ready queue.
+    * **dispatch thread** (the caller) — pop, dispatch the jit call
+      (async: it returns as soon as operands are copied), release the
+      staging token, and ``submit(..., seq=epoch)`` so the epoch marker
+      trails the group's puts on every partition.
+
+    Ordering under overlap, re-proven:
+
+    * *per-key FIFO* — groups are planned, staged, dispatched and
+      submitted in stream order by construction (one prep thread, one
+      FIFO ready queue, one dispatch thread), and within a group the
+      engine scan preserves lane order; splits are key-complete.
+    * *evict→rehydrate reads the latest durable row* — a rehydration
+      read of key k carries ``need = max staged epoch over its keys``;
+      the store worker parks it until its partition has applied that
+      epoch, i.e. until every flush staged before the read has executed
+      its puts there.  That is exactly the guarantee dispatcher-FIFO
+      position gave the serial driver, without the read ever queueing
+      behind unrelated flush conversion work.
+    * *deadlock-freedom* — a parked read's need names an epoch that was
+      staged before the read was submitted, hence a group at or before
+      the one the dispatch thread is currently draining the ready queue
+      toward; the dispatch thread never waits on read tickets, so every
+      staged epoch's flush is eventually submitted and every parked
+      read drains.  The prep thread's token wait polls ``stop`` so an
+      erroring dispatch thread can always shut the pipeline down.
+    * *fsync group boundary* — unchanged: each sub-group still flushes
+      as one atomic sink batch; the epoch marker is bookkeeping behind
+      it, not part of the WAL record.
+
+    Requires a threaded sink with pure backpressure: the serial sink
+    executes reads inline on the submitting thread and the degrade
+    overflow policy flushes inline on the dispatch thread — both would
+    break the one-thread-per-store invariant once a prep thread exists.
+    """
+    if getattr(sink, "_serial", False):
+        raise ValueError(
+            "pipeline_depth > 1 requires a threaded sink "
+            "(WriteBehindSink queue_depth >= 1): the serial sink "
+            "executes reads inline on the submitting thread")
+    if getattr(sink, "_overflow", "block") != "block":
+        raise ValueError(
+            "pipeline_depth > 1 requires overflow='block': a degraded "
+            "inline flush on the dispatch thread would race the prep "
+            "thread's reads on the partition stores")
+    if n_blocks == 0:
+        return state, _stack_group_outs([], collect_info)
+    sink.flush()   # same fast-lane safety barrier as the serial driver
+    ready: queue.Queue = queue.Queue()
+    tokens = threading.BoundedSemaphore(depth)
+    stop = threading.Event()
+
+    def prep():
+        # Issued-but-unpacked groups, oldest first.  Issuing reads for up
+        # to ``depth`` groups before waiting the oldest ticket is what
+        # pipelines storage latency: the partition workers hold several
+        # batched reads back-to-back instead of idling between groups.
+        inflight: list = []
+
+        def complete_oldest():
+            plan, t_fresh, t_re, seq = inflight.pop(0)
+            rows_f, rows_r = t_fresh.result(), t_re.result()
+            with sink.overlap.host():
+                h = plan.build_hydration(rows_f, rows_r)
+            ready.put(("group", plan, h, seq))
+
+        try:
+            for lo in range(0, n_blocks, group):
+                hi = min(lo + group, n_blocks)
+                with sink.overlap.host():
+                    plans = plan_group(lo, hi)
+                for plan in plans:
+                    while not tokens.acquire(timeout=0.1):
+                        if stop.is_set():
+                            return
+                    if stop.is_set():
+                        tokens.release()
+                        return
+                    # reads before stage_epoch: the group's own misses
+                    # must not wait on the group's own (future) flush
+                    t_fresh = sink.submit_read(plan.fresh_keys,
+                                               ordered=False)
+                    t_re = sink.submit_read(plan.rehydrate_keys,
+                                            staged=True)
+                    seq = sink.stage_epoch(plan.sink_keys, plan.valid)
+                    inflight.append((plan, t_fresh, t_re, seq))
+                    # Drain before the token pool can block: when the
+                    # acquire above parks, everything issued is either in
+                    # the ready queue or in flight here with
+                    # len(inflight) < depth — so the ready queue is
+                    # non-empty and the dispatch thread's next pop frees
+                    # a token (no prep<->dispatch deadlock).
+                    if len(inflight) >= depth:
+                        complete_oldest()
+            while inflight:
+                complete_oldest()
+            ready.put(("done",))
+        except BaseException as e:   # surfaced on the dispatch thread
+            ready.put(("error", e))
+
+    th = threading.Thread(target=prep, name="pipeline-prep", daemon=True)
+    th.start()
+    outs_all = []
+    part_outs = []
+    try:
+        while True:
+            item = ready.get()
+            if item[0] == "done":
+                break
+            if item[0] == "error":
+                raise item[1]
+            _, plan, (h_slots, h_scal, h_agg), seq = item
+            # release before dispatch (not after): this generation's
+            # liveness is carried by the local refs the jit call reads,
+            # and freeing the slot now is what lets prep plan/read/pack
+            # the next group *under* this group's device window instead
+            # of after it (ping-pong contract, module docstring)
+            tokens.release()
+            # metered as device time: the jit call holds the execution
+            # engine until the step is enqueued (the whole computation on
+            # CPU backends) — the window prep work can hide inside
+            with sink.overlap.device():
+                state, outs, rows = bstep(state, plan.events, rng,
+                                          plan.gather_idx, h_slots, h_scal,
+                                          h_agg, *consts)
+            z = outs.z if collect_info else outs[0]
+            sink.submit(plan.sink_keys, z, plan.valid, rows, seq=seq)
+            part_outs.append((outs, plan.valid))
+            if plan.last:
+                outs_all.append(_merge_subgroup_outs(part_outs,
+                                                     collect_info))
+                part_outs = []
+    finally:
+        stop.set()
+        if th.is_alive():
+            # abnormal exit with the prep thread possibly parked on a
+            # staged read whose epoch's flush will now never be
+            # submitted: advance every partition past all staged epochs
+            # so the ticket resolves (the run is erroring out — the rows
+            # it returns are never used) and the thread can observe
+            # ``stop`` and exit
+            try:
+                for sq in sink._store_qs:
+                    sq.put(("epoch", sink._staged_seq))
+            except BaseException:   # pragma: no cover - best effort
+                pass
+            th.join()
+        else:
+            th.join()
     return state, _stack_group_outs(outs_all, collect_info)
 
 

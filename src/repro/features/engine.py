@@ -440,7 +440,8 @@ class ShardedFeatureEngine:
                    rng: Optional[jax.Array] = None,
                    collect_info: bool = True, donate: bool = True,
                    sink: Optional["persistence.WriteBehindSink"] = None,
-                   sink_group: int = 4, residency=None
+                   sink_group: int = 4, residency=None,
+                   pipeline_depth: int = 1
                    ) -> Tuple[ProfileState, Union[StepInfo, jax.Array]]:
         """Drive the sharded engine over a flat stream in one dispatch.
 
@@ -468,19 +469,34 @@ class ShardedFeatureEngine:
         misses hydrate from the sink's layout-aligned partition stores
         and victims recycle clock/second-chance.  Requires ``sink``.
 
+        ``pipeline_depth``: same knob as ``core.stream.run_stream`` — 1
+        is the serial flush-group loop; >= 2 runs the pipelined plane on
+        both layouts (the prep thread then also owns the per-group h2d
+        ``device_put`` staging and the sharded slot assignment's
+        vectorized batch take), bit-identical outputs.
+
         Returns the final state plus either a StepInfo in *stream order*
         (``collect_info=True``) or per-block write counts.
         """
         if rng is None:
             rng = jax.random.PRNGKey(0)
+        depth = int(pipeline_depth)
+        if depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        if depth > 1 and sink is None:
+            raise ValueError(
+                "pipeline_depth > 1 requires a sink: the pipelined plane "
+                "overlaps host group prep with device compute across "
+                "flush groups, which the single-dispatch path does not "
+                "have")
         if residency is not None:
             return self._run_stream_residency(
                 state, keys, qs, ts, batch_per_shard, rng, collect_info,
-                donate, sink, sink_group, residency)
+                donate, sink, sink_group, residency, depth)
         if sink is not None:
             return self._run_stream_sink(state, keys, qs, ts,
                                          batch_per_shard, rng, collect_info,
-                                         donate, sink, sink_group)
+                                         donate, sink, sink_group, depth)
         events, slot = self.partition_stream(keys, qs, ts, batch_per_shard)
         key = (collect_info, donate)
         if key not in self._runners:
@@ -497,7 +513,8 @@ class ShardedFeatureEngine:
             writes=jnp.sum(info.writes).astype(jnp.int32))
 
     def _run_stream_sink(self, state, keys, qs, ts, batch_per_shard, rng,
-                         collect_info, donate, sink, sink_group):
+                         collect_info, donate, sink, sink_group,
+                         pipeline_depth=1):
         """Write-behind block loop for the sharded path.
 
         Reuses ``core.stream._drive_with_sink``; the per-lane gather index
@@ -546,7 +563,8 @@ class ShardedFeatureEngine:
         state, info = core_stream._drive_with_sink(
             self._runners[rkey], state, n_blocks, max(1, int(sink_group)),
             group_of, rng, sink, sink_keys=gid_host, valid_host=vb,
-            collect_info=collect_info, consts=self._step_consts)
+            collect_info=collect_info, consts=self._step_consts,
+            pipeline_depth=pipeline_depth)
         if not collect_info:
             return state, info
         flat = lambda x: jnp.reshape(x, (-1,) + x.shape[2:])[slot]
@@ -557,7 +575,7 @@ class ShardedFeatureEngine:
 
     def _run_stream_residency(self, state, keys, qs, ts, batch_per_shard,
                               rng, collect_info, donate, sink, sink_group,
-                              residency):
+                              residency, pipeline_depth=1):
         """Slot-based resident-set loop for the sharded path.
 
         Reuses ``core.stream._drive_with_residency``; events are packed
@@ -643,8 +661,12 @@ class ShardedFeatureEngine:
                 miss = []
                 for s in range(n):
                     cols = slice(s * B, (s + 1) * B)
+                    # pipelined plane: vectorized batch take on the prep
+                    # thread (bit-identical slots — see residency.py)
                     asn = rmaps[s].assign_group(kseg[:, cols],
-                                                vm[:, cols])
+                                                vm[:, cols],
+                                                batch_take=pipeline_depth
+                                                > 1)
                     # plan-time demote: a recency refresh only, safe
                     # before any sub-group's flush (see core.stream)
                     sink.demote(asn.evicted)
@@ -691,7 +713,8 @@ class ShardedFeatureEngine:
                 scatter=self._residency_scatter())
         state, info = core_stream._drive_with_residency(
             self._runners[rkey], state, n_blocks, max(1, int(sink_group)),
-            plan_group, rng, sink, collect_info=collect_info)
+            plan_group, rng, sink, collect_info=collect_info,
+            pipeline_depth=pipeline_depth)
         if not collect_info:
             return state, info
         flat = lambda x: jnp.reshape(x, (-1,) + x.shape[2:])[slot_map]

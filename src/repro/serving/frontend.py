@@ -58,11 +58,40 @@ Determinism seam: all waiting goes through a ``Clock`` (``now``/
 inside ``sleep``, so every batching/ordering/hydration invariant is
 assertable in tests with zero wall-clock sleeps — compute takes no
 virtual time, a partial batch dispatches at *exactly* its deadline.
+
+Threaded admission plane (``admission="threaded"``): the serving-side
+mirror of ``core.stream``'s pipelined drivers.  The admission thread
+(the ``run`` caller) keeps the whole batching brain — clock loop,
+batch composition, slot assignment, hydration reads on the sink's
+epoch-gated staged lane, hydration packing — and parks each fully
+staged batch on a ready queue; a dispatch thread pops, runs the jit
+step, submits the flush (trailed by its epoch marker) and materializes
+outputs, so host packing of batch b+1 overlaps device compute of batch
+b.  Batch *composition* is decided entirely on the admission thread
+from arrivals and the clock, so it is bit-identical to serial admission
+under a ``VirtualClock``, and outputs are bit-identical because batches
+dispatch in composition order (one FIFO queue, one dispatch thread).
+Read ordering no longer comes from dispatcher-FIFO position (the
+admission thread now races the flush workers) but from the sink's
+``stage_epoch`` lane: a read of key k waits exactly for the flushes of
+k staged before it — the same guarantee, proven the pipelined way.
+
+Adaptive partial-batch deadline (``adaptive_wait=True``, off by
+default): an EWMA of request inter-arrival gaps estimates the time for
+the current partial batch to fill; when that estimate beats
+``max_wait_s`` the deadline tightens to the estimate — past the
+batching knee, waiting longer buys no co-riders, only latency.  The
+EWMA is a pure function of the arrival schedule (gaps between
+consecutive ``arrival_s`` values), so the tightened deadlines are
+deterministic under ``VirtualClock`` and identical across admission
+modes.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import queue as queue_mod
+import threading
 import time
 from collections import deque
 from typing import List, NamedTuple, Optional, Protocol, Sequence
@@ -76,9 +105,14 @@ from repro.core.stream import (_block_runner, _residency_step, _sink_step,
 from repro.core.types import EngineConfig, Event
 from repro.streaming.residency import ResidencyMap
 
-__all__ = ["Clock", "RealClock", "VirtualClock", "Request", "BatchRecord",
-           "FrontendStats", "ServeResult", "ServingFrontend",
+__all__ = ["ADMISSION", "Clock", "RealClock", "VirtualClock", "Request",
+           "BatchRecord", "FrontendStats", "ServeResult", "ServingFrontend",
            "make_requests", "poisson_arrivals", "score_at_width"]
+
+# admission planes: "serial" = single-thread admit+dispatch loop;
+# "threaded" = admission/batching thread decoupled from the dispatch
+# thread (host packing of the next batch overlaps device compute)
+ADMISSION = ("serial", "threaded")
 
 
 class Clock(Protocol):
@@ -157,6 +191,9 @@ class FrontendStats:
     dispatches: int = 0
     full_batches: int = 0
     deadline_batches: int = 0
+    # deadline batches whose deadline the adaptive wait tightened below
+    # ``max_wait_s`` (0 unless ``adaptive_wait=True``)
+    adaptive_tightened: int = 0
     events: int = 0
     padded_lanes: int = 0
     max_queue: int = 0
@@ -265,21 +302,40 @@ class ServingFrontend:
     from.  Thinning stays keyed on global entity ids, so frontend
     decisions are residency-invariant like the closed-loop driver's.
 
-    Thread model: single driver thread (the caller of ``run``); the only
-    concurrency is the sink's own flush/read workers, reached through the
-    same ordered ``submit``/``submit_read`` calls as the closed-loop
-    residency driver.
+    Thread model: with ``admission="serial"`` (default), a single driver
+    thread (the caller of ``run``); the only concurrency is the sink's
+    own flush/read workers, reached through the same ordered
+    ``submit``/``submit_read`` calls as the closed-loop residency
+    driver.  With ``admission="threaded"``, the caller's thread becomes
+    the admission plane (clock, batching, slot assignment, epoch-staged
+    hydration reads, packing) and a dispatch thread owns the jit step,
+    the flush submit and output materialization — a two-deep ping-pong
+    bounded by a staging-token pair, exactly the pipelined residency
+    driver's shape.  Residency under threaded admission requires a
+    threaded sink with ``overflow="block"`` (a serial sink cannot run
+    the epoch lane; a degraded sink flushes inline on the dispatch
+    thread, racing the admission thread's reads).
+
+    ``adaptive_wait=True`` enables the adaptive partial-batch deadline
+    (see module docstring); ``stats.adaptive_tightened`` counts the
+    deadline batches that dispatched earlier because of it.
     """
 
     def __init__(self, cfg: EngineConfig, state, *, batch: int,
                  max_wait_s: float, mode: str = "fast",
                  exact_impl: str = "compact", rng=None,
                  clock: Optional[Clock] = None, sink=None,
-                 residency: Optional[ResidencyMap] = None, scorer=None):
+                 residency: Optional[ResidencyMap] = None, scorer=None,
+                 admission: str = "serial", adaptive_wait: bool = False,
+                 adaptive_alpha: float = 0.2):
         if batch <= 0:
             raise ValueError("batch must be positive")
         if max_wait_s < 0:
             raise ValueError("max_wait_s must be >= 0")
+        if admission not in ADMISSION:
+            raise ValueError(f"admission must be one of {ADMISSION}")
+        if not (0.0 < adaptive_alpha <= 1.0):
+            raise ValueError("adaptive_alpha must be in (0, 1]")
         self.cfg = cfg
         self.batch = int(batch)
         self.max_wait_s = float(max_wait_s)
@@ -292,8 +348,27 @@ class ServingFrontend:
         self.stats = FrontendStats()
         self._rmap = residency
         self._n_taus = int(state.num_taus)
+        self.admission = admission
+        self._threaded = admission == "threaded"
+        self.adaptive_wait = bool(adaptive_wait)
+        self._alpha = float(adaptive_alpha)
+        self._ewma_ia: Optional[float] = None   # EWMA inter-arrival gap
+        self._last_arrival: Optional[float] = None
+        self._disp_exc: Optional[BaseException] = None
         # key -> (ReadTicket, index into the ticket's key list)
         self._prefetch: dict = {}
+        if self._threaded and residency is not None:
+            if getattr(sink, "_serial", False):
+                raise ValueError(
+                    "admission='threaded' with residency requires a "
+                    "threaded sink (queue_depth >= 1): the admission "
+                    "thread's staged reads need the epoch lane's store "
+                    "workers")
+            if getattr(sink, "_overflow", "block") != "block":
+                raise ValueError(
+                    "admission='threaded' requires overflow='block': a "
+                    "degraded sink flushes inline on the dispatch "
+                    "thread, racing the admission thread's reads")
         if residency is not None:
             if sink is None:
                 raise ValueError("residency requires a write-behind sink: "
@@ -345,41 +420,86 @@ class ServingFrontend:
             order=np.zeros(n, np.int64), batches=[], stats=self.stats)
         if n == 0:
             return out
+        self._ewma_ia = None
+        self._last_arrival = None
+        self._disp_exc = None
         if self._rmap is not None:
             # drain in-flight work a previous run left behind: the
             # unordered fresh-read lane is only safe against writes
             # submitted after this point (same rule as the closed-loop
             # residency driver)
             self.sink.flush()
+        if self._threaded:
+            return self._run_threaded(reqs, out)
+        self._admission_loop(reqs, out, self._dispatch)
+        return out
+
+    # --------------------------------------------------------- internals
+    def _admission_loop(self, reqs, out: ServeResult, dispatch) -> None:
+        """The batching brain, shared by both admission planes.
+
+        ``dispatch`` is ``_dispatch`` (serial: compose + step + fill
+        inline) or ``_stage`` (threaded: compose + stage, the dispatch
+        thread finishes).  Every decision here — admits, batch cuts,
+        deadlines — reads only the arrival schedule and the clock, which
+        is what makes threaded composition bit-identical to serial under
+        a ``VirtualClock``.
+        """
+        n = len(reqs)
         pending: deque = deque()
         i = 0
         done = 0
-        while i < n or pending:
+        while (i < n or pending) and self._disp_exc is None:
             now = self.clock.now()
             while i < n and reqs[i].arrival_s <= now:
-                pending.append(reqs[i])
-                self._prefetch_keys([reqs[i].key])
+                r = reqs[i]
+                if self._last_arrival is not None:
+                    gap = r.arrival_s - self._last_arrival
+                    self._ewma_ia = (gap if self._ewma_ia is None else
+                                     self._alpha * gap +
+                                     (1.0 - self._alpha) * self._ewma_ia)
+                self._last_arrival = r.arrival_s
+                pending.append(r)
+                self._prefetch_keys([r.key])
                 i += 1
             self.stats.max_queue = max(self.stats.max_queue, len(pending))
             if len(pending) >= self.batch:
-                done = self._dispatch(pending, out, done, full=True,
-                                      deadline=math.inf)
+                done = dispatch(pending, out, done, full=True,
+                                deadline=math.inf)
                 continue
-            deadline = (pending[0].arrival_s + self.max_wait_s
+            wait = (self._effective_wait(len(pending)) if pending
+                    else self.max_wait_s)
+            deadline = (pending[0].arrival_s + wait
                         if pending else math.inf)
             if now >= deadline:
-                done = self._dispatch(pending, out, done, full=False,
-                                      deadline=deadline)
+                done = dispatch(pending, out, done, full=False,
+                                deadline=deadline,
+                                tightened=wait < self.max_wait_s)
                 continue
             next_arrival = reqs[i].arrival_s if i < n else math.inf
             # ties admit first: a request landing exactly on the deadline
             # still rides the dispatching batch
             self.clock.sleep(min(deadline, next_arrival) - now)
-        return out
 
-    # --------------------------------------------------------- internals
-    def _dispatch(self, pending: deque, out: ServeResult, done: int, *,
-                  full: bool, deadline: float) -> int:
+    def _effective_wait(self, k: int) -> float:
+        """Partial-batch wait cap for a queue of ``k`` requests.
+
+        Adaptive deadline (off unless ``adaptive_wait=True``): the EWMA
+        of inter-arrival gaps estimates the fill time for the remaining
+        ``batch - k`` lanes; if the batch was going to fill, it fills by
+        about then, so waiting past the estimate buys no co-riders —
+        only tail latency.  The EWMA is built purely from admitted
+        requests' ``arrival_s`` gaps, never from the clock, so the
+        tightened deadlines are deterministic under ``VirtualClock`` and
+        identical across admission planes.
+        """
+        if not self.adaptive_wait or self._ewma_ia is None:
+            return self.max_wait_s
+        est_fill = (self.batch - k) * self._ewma_ia
+        return min(self.max_wait_s, est_fill)
+
+    def _compose(self, pending: deque, *, full: bool, tightened: bool):
+        """Pop one batch off the queue and pad it to ``batch`` lanes."""
         k = min(self.batch, len(pending))
         batch_reqs = [pending.popleft() for _ in range(k)]
         B = self.batch
@@ -399,8 +519,17 @@ class ServingFrontend:
             st.full_batches += 1
         else:
             st.deadline_batches += 1
+            if tightened:
+                st.adaptive_tightened += 1
         ev = Event(key=keys[None], q=qs[None], t=ts[None], valid=valid[None])
+        return batch_reqs, k, ev, keys, valid, t_disp
 
+    def _dispatch(self, pending: deque, out: ServeResult, done: int, *,
+                  full: bool, deadline: float, tightened: bool = False
+                  ) -> int:
+        batch_reqs, k, ev, keys, valid, t_disp = self._compose(
+            pending, full=full, tightened=tightened)
+        B = self.batch
         n_miss = n_pre = 0
         if self._rmap is not None:
             asn = self._rmap.assign_group(keys, valid)
@@ -432,12 +561,129 @@ class ServingFrontend:
         # this batch evicted (or updated) reads its latest durable row
         if self._rmap is not None and pending:
             self._prefetch_keys([r.key for r in pending])
+        self._materialize(out, batch_reqs, k, full, deadline, t_disp, outs,
+                          done, n_miss, n_pre)
+        return done + k
 
+    # ------------------------------------------- threaded admission plane
+    def _run_threaded(self, reqs, out: ServeResult) -> ServeResult:
+        """Admission/batching on the caller's thread, device dispatch on
+        a worker: the serving twin of ``_drive_pipelined_residency``."""
+        ready: queue_mod.Queue = queue_mod.Queue()
+        # ping-pong staging pair: at most two batches packed-but-not-yet-
+        # popped, released when the dispatch thread pops (not when the
+        # jit call returns), so batch b+1 packs during batch b's compute
+        tokens = threading.BoundedSemaphore(2)
+
+        def dispatch_loop() -> None:
+            try:
+                while True:
+                    item = ready.get()
+                    if item is None:
+                        return
+                    tokens.release()
+                    self._finish(out, *item)
+            except BaseException as e:  # noqa: BLE001 - re-raised in run
+                self._disp_exc = e
+                sink = self.sink
+                if sink is not None and getattr(sink, "_store_qs", None):
+                    # epochs staged for batches that will now never flush
+                    # would park the admission thread's reads forever —
+                    # push the high-water marker to every store to unpark
+                    # them (same abnormal-exit rule as the core driver)
+                    for sq in sink._store_qs:
+                        sq.put(("epoch", sink._staged_seq))
+
+        th = threading.Thread(target=dispatch_loop,
+                              name="frontend-dispatch", daemon=True)
+        th.start()
+
+        def stage(pending, out_, done, *, full, deadline, tightened=False):
+            return self._stage(pending, out_, done, ready, tokens,
+                               full=full, deadline=deadline,
+                               tightened=tightened)
+
+        try:
+            self._admission_loop(reqs, out, stage)
+        finally:
+            ready.put(None)
+            th.join()
+        if self._disp_exc is not None:
+            raise RuntimeError("frontend dispatch thread failed") \
+                from self._disp_exc
+        return out
+
+    def _stage(self, pending: deque, out: ServeResult, done: int,
+               ready: "queue_mod.Queue", tokens, *, full: bool,
+               deadline: float, tightened: bool = False) -> int:
+        while not tokens.acquire(timeout=0.1):
+            if self._disp_exc is not None:
+                raise RuntimeError("frontend dispatch thread failed") \
+                    from self._disp_exc
+        batch_reqs, k, ev, keys, valid, t_disp = self._compose(
+            pending, full=full, tightened=tightened)
+        B = self.batch
+        if self._rmap is not None:
+            asn = self._rmap.assign_group(keys, valid)
+            self.sink.demote(asn.evicted)
+            n_miss = int(asn.miss_keys.size)
+            # demand reads ride the staged/unordered lanes and are waited
+            # here, on the admission thread — then the batch's epoch is
+            # staged (reads first: a batch must not wait on its own
+            # epoch), and only then are later queued keys prefetched, so
+            # their staged reads gate on this batch's flush exactly as
+            # the serial plane's ride-the-FIFO prefetch does
+            rows, n_pre = self._hydration_rows(asn, keys[valid])
+            seq = self.sink.stage_epoch(keys, valid)
+            if pending:
+                self._prefetch_keys([r.key for r in pending])
+            h_slots, h_scal, h_agg = pack_hydration(
+                rows, asn.miss_slots, self.sink.serde, self._rmap.n_slots,
+                self._n_taus, width=self._hwidth)
+            slots = asn.slot.astype(np.int32)
+            sev = Event(key=slots.reshape(1, B), q=ev.q, t=ev.t,
+                        valid=ev.valid)
+            payload = (sev, keys, valid, slots, h_slots, h_scal, h_agg,
+                       seq, n_miss, n_pre)
+        elif self.sink is not None:
+            payload = (ev, keys, valid)
+        else:
+            payload = (ev,)
+        ready.put((done, batch_reqs, k, full, deadline, t_disp, payload))
+        return done + k
+
+    def _finish(self, out: ServeResult, done: int, batch_reqs, k: int,
+                full: bool, deadline: float, t_disp: float,
+                payload) -> None:
+        """Dispatch-thread half of a staged batch: jit step, flush
+        submit (trailed by the staged epoch), output materialization."""
+        n_miss = n_pre = 0
+        if self._rmap is not None:
+            (sev, keys, valid, slots, h_slots, h_scal, h_agg, seq,
+             n_miss, n_pre) = payload
+            self.state, outs, dev_rows = self._bstep(
+                self.state, (sev, keys[None]), self.rng, slots, h_slots,
+                h_scal, h_agg)
+            self.sink.submit(keys, outs.z, valid, dev_rows, seq=seq)
+        elif self.sink is not None:
+            ev, keys, valid = payload
+            self.state, outs, dev_rows = self._bstep(self.state, ev,
+                                                     self.rng, keys)
+            self.sink.submit(keys, outs.z, valid, dev_rows)
+        else:
+            (ev,) = payload
+            self.state, outs = self._bstep(self.state, ev, self.rng)
+        self._materialize(out, batch_reqs, k, full, deadline, t_disp, outs,
+                          done, n_miss, n_pre)
+
+    def _materialize(self, out: ServeResult, batch_reqs, k: int,
+                     full: bool, deadline: float, t_disp: float, outs,
+                     done: int, n_miss: int, n_pre: int) -> None:
         feats = np.asarray(outs.features)[0]          # blocks on device
         z = np.asarray(outs.z)[0]
         p = np.asarray(outs.p)[0]
         lam = np.asarray(outs.lam_hat)[0]
-        scores = (score_at_width(self.scorer, feats, B)
+        scores = (score_at_width(self.scorer, feats, self.batch)
                   if self.scorer is not None else None)
         t_done = self.clock.now()
         for lane, r in enumerate(batch_reqs):
@@ -451,7 +697,6 @@ class ServingFrontend:
             out.order[done + lane] = r.rid
         out.batches.append(BatchRecord(t_disp, t_done, k, full, deadline,
                                        n_miss, n_pre))
-        return done + k
 
     def _hydration_rows(self, asn, batch_keys):
         """Resolve this batch's miss rows: in-flight prefetch tickets
@@ -472,8 +717,13 @@ class ServingFrontend:
                 np.asarray([miss[j] for j in need_fresh], np.int64),
                 ordered=False)
         if need_re:
+            # serial admission: the FIFO lane sequences the read behind
+            # every already-submitted flush; threaded admission: the
+            # admission thread races the dispatch thread's submits, so
+            # the read gates on the key's staged epochs instead
             t_re = self.sink.submit_read(
-                np.asarray([miss[j] for j in need_re], np.int64))
+                np.asarray([miss[j] for j in need_re], np.int64),
+                staged=self._threaded)
         st.demand_reads += len(need)
         st.prefetch_hits += len(miss) - len(need)
         rows: List[Optional[bytes]] = [None] * len(miss)
@@ -507,7 +757,8 @@ class ServingFrontend:
         if not want:
             return
         seen = self._rmap.seen(want)
-        ticket = self.sink.submit_read(np.asarray(want, np.int64))
+        ticket = self.sink.submit_read(np.asarray(want, np.int64),
+                                       staged=self._threaded)
         for idx, k in enumerate(want):
             self._prefetch[k] = (ticket, idx)
         self.stats.prefetch_issued += len(want)

@@ -124,7 +124,8 @@ class ScoringPipeline:
     # --------------------------------------------------- online serving
     def serve(self, keys, qs, ts, *, arrival_s=None, batch: int = 256,
               max_wait_s: float = 0.005, clock=None, rng=None, sink=None,
-              residency=None, exact_impl: str = "compact"):
+              residency=None, exact_impl: str = "compact",
+              admission: str = "serial", adaptive_wait: bool = False):
         """Open-loop serving: the same events as ``process_stream``, but
         arriving as *requests* through the admission queue + dynamic
         batcher of ``serving.frontend`` (full batches dispatch
@@ -143,6 +144,12 @@ class ScoringPipeline:
         matching dispatch boundaries in fast mode, whose within-batch
         decoupling makes boundaries semantic — see ``serving.frontend``;
         ``tests/test_frontend.py`` pins both for all five policies.
+
+        ``admission``/``adaptive_wait`` pass through to
+        ``ServingFrontend``: ``admission="threaded"`` decouples the
+        batching brain from dispatch (same composition, same outputs —
+        the serving-side pipelined plane), ``adaptive_wait=True`` turns
+        on the EWMA partial-batch deadline.
 
         Returns a ``serving.frontend.ServeResult`` with per-request
         outputs, latencies, the dispatch log and frontend stats.  The
@@ -164,7 +171,8 @@ class ScoringPipeline:
         fe = ServingFrontend(cfg, state, batch=batch, max_wait_s=max_wait_s,
                              mode=self.engine.mode, exact_impl=exact_impl,
                              rng=rng, clock=clock, sink=sink, residency=rmap,
-                             scorer=self.scorer)
+                             scorer=self.scorer, admission=admission,
+                             adaptive_wait=adaptive_wait)
         return fe.run(make_requests(keys, qs, ts, arrival_s))
 
     def restart_from(self, sink):

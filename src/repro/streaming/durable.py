@@ -27,11 +27,23 @@ applies backend-agnostically), whose bytes actually land on disk:
   running unchanged, so modeled and measured columns can be reported side
   by side.
 * **Compaction.**  When the WAL exceeds ``compact_threshold_bytes`` the
-  memtable is written as one sorted segment file (same batch framing, one
-  file per snapshot), the WAL is truncated and older segments are removed.
-  Crash ordering: segment → fsync → atomic rename → dir fsync → WAL
-  truncate → stale-segment unlink; a crash between any two steps recovers
-  correctly because replay is seq-guarded (below).
+  memtable is written as one sorted segment file — *blocked*: up to
+  ``seg_block_rows`` rows per batch record, so each block covers a
+  contiguous key range — the WAL is truncated and older segments are
+  removed.  Crash ordering: segment → fsync → atomic rename → dir fsync →
+  WAL truncate → stale-segment unlink; a crash between any two steps
+  recovers correctly because replay is seq-guarded (below).
+* **Sparse segment index.**  Each segment gets a CRC'd sidecar
+  (``seg-*.idx``): per block, min key, max key, byte offset and length.
+  ``lazy_recovery=True`` reopens without reading the segment at all — the
+  WAL replays into the memtable as usual, and a cold ``get``/``multi_get``
+  miss binary-searches the index and faults in only the one block whose
+  key range covers the key (``seg_probes``/``seg_blocks_read``/
+  ``seg_blocks_skipped`` count the work; a block, once read, folds into
+  the memtable without clobbering newer WAL rows).  The index is derived
+  data: written after its segment, and a missing, stale or corrupt
+  sidecar (``index_fallbacks``) degrades to the eager full-file replay —
+  never to wrong answers.
 
 Recovery (``DurableStore(path)`` on an existing directory) replays segments
 in ascending seq order, then WAL batches, skipping any batch whose seq is
@@ -57,6 +69,7 @@ bit, for every policy in both engine modes.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import os
 import struct
@@ -79,6 +92,7 @@ BACKENDS = ("memory", "durable")
 
 WAL_NAME = "wal.log"
 SEG_SUFFIX = ".seg"
+IDX_SUFFIX = ".idx"
 
 _BATCH_MAGIC = 0x57414C31       # 'WAL1'
 _COMMIT_MAGIC = 0x434D5431      # 'CMT1'
@@ -88,6 +102,10 @@ _ROW = struct.Struct("<qI")     # key, row_len
 _FOOT = struct.Struct("<II")    # commit magic, body crc (chained on header)
 HEADER_BYTES = _HDR.size + _HDR_CRC.size
 FOOTER_BYTES = _FOOT.size
+
+_IDX_MAGIC = 0x53494431         # 'SID1' (segment index v1)
+_IDX_HDR = struct.Struct("<IIQQ")   # magic, n_blocks, first_seq, last_seq
+_IDX_ENT = struct.Struct("<qqQI")   # min_key, max_key, offset, block_len
 
 
 class CorruptionError(RuntimeError):
@@ -136,8 +154,17 @@ class DurableCounters:
     fsyncs: int = 0
     wal_bytes: int = 0
     seg_bytes: int = 0
+    seg_index_bytes: int = 0
     compactions: int = 0
     batches: int = 0
+    # sparse-index read path (lazy recovery / cold reads)
+    seg_probes: int = 0             # cold lookups that consulted the index
+    seg_probe_hits: int = 0         # ... whose key the segment held
+    seg_blocks_read: int = 0        # blocks faulted into the memtable
+    seg_blocks_skipped: int = 0     # probes answered by min/max alone
+    seg_bytes_read: int = 0         # physical bytes of faulted blocks
+    index_fallbacks: int = 0        # missing/stale/corrupt sidecar ->
+    #                                 eager full-file replay
     # recovery-side
     recovered_batches: int = 0
     stale_batches_skipped: int = 0
@@ -208,6 +235,39 @@ def _decode_batches(buf: bytes, path: str):
     return out, off
 
 
+def _encode_index(entries, first_seq: int, last_seq: int) -> bytes:
+    """Sidecar segment index: CRC'd header, then one ``(min_key, max_key,
+    offset, block_len)`` entry per non-empty block, then a body CRC
+    chained on the header."""
+    hdr = _IDX_HDR.pack(_IDX_MAGIC, len(entries), first_seq, last_seq)
+    hdr += _HDR_CRC.pack(zlib.crc32(hdr))
+    body = b"".join(_IDX_ENT.pack(*e) for e in entries)
+    return hdr + body + _HDR_CRC.pack(zlib.crc32(body, zlib.crc32(hdr)))
+
+
+def _decode_index(buf: bytes, path: str):
+    """Parse a sidecar index; raises ``ValueError`` on any framing or
+    checksum failure (the caller falls back to the eager scan — the index
+    is derived data, so a bad one costs time, never correctness)."""
+    hsz = _IDX_HDR.size + _HDR_CRC.size
+    if len(buf) < hsz:
+        raise ValueError(f"{path}: short index header")
+    magic, nb, first_seq, last_seq = _IDX_HDR.unpack_from(buf, 0)
+    (hcrc,) = _HDR_CRC.unpack_from(buf, _IDX_HDR.size)
+    if magic != _IDX_MAGIC or hcrc != zlib.crc32(buf[:_IDX_HDR.size]):
+        raise ValueError(f"{path}: bad index header")
+    end = hsz + nb * _IDX_ENT.size
+    if len(buf) != end + _HDR_CRC.size:
+        raise ValueError(f"{path}: index length mismatch")
+    body = buf[hsz:end]
+    (crc,) = _HDR_CRC.unpack_from(buf, end)
+    if crc != zlib.crc32(body, zlib.crc32(buf[:hsz])):
+        raise ValueError(f"{path}: index body checksum failure")
+    entries = [_IDX_ENT.unpack_from(body, i * _IDX_ENT.size)
+               for i in range(nb)]
+    return entries, first_seq, last_seq
+
+
 class DurableStore(KVStore):
     """Embedded WAL+memtable+compaction store, drop-in behind ``KVStore``.
 
@@ -228,17 +288,28 @@ class DurableStore(KVStore):
     def __init__(self, path: str, *, model: Optional[StorageModel] = None,
                  seed: int = 0, fileops: Optional[FileOps] = None,
                  compact_threshold_bytes: int = 1 << 20,
-                 sync: bool = True, recover: bool = True):
+                 sync: bool = True, recover: bool = True,
+                 seg_block_rows: int = 256, lazy_recovery: bool = False):
         super().__init__(model=model, seed=seed)
         self.path = str(path)
         self.fops = fileops or FileOps()
         self.compact_threshold_bytes = int(compact_threshold_bytes)
         self.sync = bool(sync)
+        self.seg_block_rows = int(seg_block_rows)
+        if self.seg_block_rows < 1:
+            raise ValueError("seg_block_rows must be >= 1")
+        self.lazy_recovery = bool(lazy_recovery)
         self.durable = DurableCounters()
         self._next_seq = 1
         self._applied_seq = 0
         self._wal_size = 0
         self._closed = False
+        # lazy-recovery read path: the newest segment's sidecar index
+        # (None = fully materialized; every row is in the memtable)
+        self._seg_file: Optional[str] = None
+        self._seg_index: Optional[List[Tuple[int, int, int, int]]] = None
+        self._seg_mins: List[int] = []
+        self._seg_loaded: set = set()
         os.makedirs(self.path, exist_ok=True)
         if recover:
             t0 = time.perf_counter()
@@ -254,6 +325,10 @@ class DurableStore(KVStore):
     def _seg_path(self, seq: int) -> str:
         return os.path.join(self.path, f"seg-{seq:012d}{SEG_SUFFIX}")
 
+    @staticmethod
+    def _idx_path(seg_path: str) -> str:
+        return seg_path[:-len(SEG_SUFFIX)] + IDX_SUFFIX
+
     def _seg_files(self) -> List[Tuple[int, str]]:
         out = []
         for name in os.listdir(self.path):
@@ -268,21 +343,36 @@ class DurableStore(KVStore):
 
         A ``.tmp`` segment is an unfinished compaction (crash before the
         atomic rename) and is discarded.  A torn WAL tail is dropped and
-        the file repaired by truncation; corruption raises."""
+        the file repaired by truncation; corruption raises.
+
+        ``lazy_recovery=True``: if the newest segment has a valid sidecar
+        index, the segment is *not* read — its key ranges are registered
+        for on-demand block faulting and only the WAL replays.  Any
+        problem with the sidecar (missing, stale, corrupt) falls back to
+        this eager path (``index_fallbacks``)."""
         d = self.durable
         for name in os.listdir(self.path):
             if name.endswith(".tmp"):
                 os.remove(os.path.join(self.path, name))
-        for seq, seg in self._seg_files():
-            with self.fops.open(seg, "rb") as f:
-                buf = f.read()
-            batches, valid = _decode_batches(buf, seg)
-            if valid != len(buf):
-                # a published (renamed) segment was written and fsynced in
-                # full before the rename — a short one is corruption
-                raise CorruptionError(f"{seg}: truncated segment file")
-            for bseq, rows in batches:
-                self._apply(bseq, rows, recovered=True)
+        segs = self._seg_files()
+        lazy_ok = False
+        if self.lazy_recovery and segs:
+            # the newest segment is a full memtable snapshot, so older
+            # segments (a crash-window leftover) are subsumed by it
+            lazy_ok = self._open_seg_index(*segs[-1])
+            if not lazy_ok:
+                d.index_fallbacks += 1
+        if not lazy_ok:
+            for seq, seg in segs:
+                with self.fops.open(seg, "rb") as f:
+                    buf = f.read()
+                batches, valid = _decode_batches(buf, seg)
+                if valid != len(buf):
+                    # a published (renamed) segment was written and fsynced
+                    # in full before the rename — a short one is corruption
+                    raise CorruptionError(f"{seg}: truncated segment file")
+                for bseq, rows in batches:
+                    self._apply(bseq, rows, recovered=True)
         wal = self._wal_path()
         if os.path.exists(wal):
             with self.fops.open(wal, "rb") as f:
@@ -308,6 +398,98 @@ class DurableStore(KVStore):
         self._next_seq = max(self._next_seq, seq + 1)
         if recovered:
             d.recovered_batches += 1
+
+    # ------------------------------------------- sparse-index read path
+    def _open_seg_index(self, seq0: int, seg: str) -> bool:
+        """Register ``seg`` for lazy block faulting via its sidecar.
+        Returns False (caller falls back to the eager scan) unless the
+        sidecar exists, parses, matches the segment's base seq, and its
+        entries fit the file with non-decreasing key ranges."""
+        ipath = self._idx_path(seg)
+        try:
+            with self.fops.open(ipath, "rb") as f:
+                buf = f.read()
+            entries, first_seq, last_seq = _decode_index(buf, ipath)
+        except (OSError, ValueError):
+            return False
+        if first_seq != seq0 or last_seq < first_seq:
+            return False
+        size = os.path.getsize(seg)
+        mins = [e[0] for e in entries]
+        if (any(off + ln > size for _, _, off, ln in entries)
+                or any(a > b for a, b in zip(mins, mins[1:]))
+                or any(mn > mx for mn, mx, _, _ in entries)):
+            return False
+        self._seg_file, self._seg_index, self._seg_mins = seg, entries, mins
+        self._seg_loaded = set()
+        self._applied_seq = last_seq
+        self._next_seq = max(self._next_seq, last_seq + 1)
+        return True
+
+    def _seg_probe(self, key: int) -> None:
+        """Cold lookup: binary-search the block whose key range could hold
+        ``key`` and fault it into the memtable (no-op when the min/max
+        fences exclude the key — the sparse index's whole point)."""
+        d = self.durable
+        d.seg_probes += 1
+        pos = bisect.bisect_right(self._seg_mins, key) - 1
+        if pos < 0 or key > self._seg_index[pos][1]:
+            d.seg_blocks_skipped += 1
+            return
+        if pos not in self._seg_loaded:
+            self._load_block(pos)
+        if key in self.data:
+            d.seg_probe_hits += 1
+
+    def _load_block(self, pos: int) -> None:
+        """Read one indexed block and fold its rows into the memtable.
+        ``setdefault``: a WAL-replayed (or newly written) row carries a
+        higher seq than any segment row, so the memtable always wins."""
+        _, _, off, ln = self._seg_index[pos]
+        d = self.durable
+        with self.fops.open(self._seg_file, "rb") as f:
+            f.seek(off)
+            buf = f.read(ln)
+        batches, valid = _decode_batches(buf, self._seg_file)
+        if valid != ln or len(batches) != 1:
+            raise CorruptionError(
+                f"{self._seg_file}: indexed block at offset {off} does "
+                f"not frame one batch record")
+        d.seg_blocks_read += 1
+        d.seg_bytes_read += ln
+        for k, raw in batches[0][1]:
+            self.data.setdefault(int(k), raw)
+        self._seg_loaded.add(pos)
+
+    def _materialize_segment(self) -> None:
+        """Fault in every remaining block (full-scan operations and
+        compaction need the complete memtable), then drop the index."""
+        if self._seg_index is None:
+            return
+        for pos in range(len(self._seg_index)):
+            if pos not in self._seg_loaded:
+                self._load_block(pos)
+        self._seg_file = None
+        self._seg_index = None
+        self._seg_mins = []
+        self._seg_loaded = set()
+
+    # -------------------------------------------------------------- reads
+    def get(self, key: int) -> Optional[bytes]:
+        if self._seg_index is not None and int(key) not in self.data:
+            self._seg_probe(int(key))
+        return super().get(key)
+
+    def multi_get(self, keys) -> List[Optional[bytes]]:
+        if self._seg_index is not None:
+            for k in np.asarray(keys).reshape(-1).tolist():
+                if int(k) not in self.data:
+                    self._seg_probe(int(k))
+        return super().multi_get(keys)
+
+    def keys(self) -> Tuple[int, ...]:
+        self._materialize_segment()
+        return super().keys()
 
     # ------------------------------------------------------------ writes
     def _append_batch(self, keys, rows) -> None:
@@ -370,22 +552,48 @@ class DurableStore(KVStore):
 
     # -------------------------------------------------------- compaction
     def compact(self) -> None:
-        """Write the memtable as one sorted segment, truncate the WAL,
-        drop superseded segments.  Every step is individually crash-safe
-        (see the module docstring for the ordering argument)."""
+        """Write the memtable as one sorted *blocked* segment plus its
+        sidecar index, truncate the WAL, drop superseded segments.  Every
+        step is individually crash-safe (see the module docstring for the
+        ordering argument); the sidecar is written after the segment it
+        describes, so a crash between the two renames leaves a segment
+        without an index — an ``index_fallbacks`` full scan, never a
+        wrong answer."""
         d = self.durable
-        seq = self._next_seq
-        self._next_seq = seq + 1
+        # a lazily-opened memtable is partial; the snapshot must be full
+        self._materialize_segment()
         ks = sorted(self.data)
-        buf = _encode_batch(seq, ks, [self.data[k] for k in ks])
+        br = self.seg_block_rows
+        chunks = [ks[i:i + br] for i in range(0, len(ks), br)] or [[]]
+        seq0 = self._next_seq
+        parts: List[bytes] = []
+        entries: List[Tuple[int, int, int, int]] = []
+        off = 0
+        for j, ck in enumerate(chunks):
+            blk = _encode_batch(seq0 + j, ck, [self.data[k] for k in ck])
+            if ck:
+                entries.append((ck[0], ck[-1], off, len(blk)))
+            parts.append(blk)
+            off += len(blk)
+        buf = b"".join(parts)
+        last_seq = seq0 + len(chunks) - 1
+        self._next_seq = last_seq + 1
+        seg = self._seg_path(seq0)
         old_segs = [p for _, p in self._seg_files()]
-        tmp = self._seg_path(seq) + ".tmp"
+        tmp = seg + ".tmp"
         t0 = time.perf_counter()
         with self.fops.open(tmp, "wb") as f:
             f.write(buf)
             self.fops.fsync(f)
         d.fsyncs += 1
-        self.fops.replace(tmp, self._seg_path(seq))
+        self.fops.replace(tmp, seg)
+        ibuf = _encode_index(entries, seq0, last_seq)
+        itmp = self._idx_path(seg) + ".tmp"
+        with self.fops.open(itmp, "wb") as f:
+            f.write(ibuf)
+            self.fops.fsync(f)
+        d.fsyncs += 1
+        self.fops.replace(itmp, self._idx_path(seg))
         self.fops.fsync_dir(self.path)
         d.fsyncs += 1
         # segment durable: everything on the WAL is now stale (seq guard)
@@ -395,10 +603,14 @@ class DurableStore(KVStore):
         d.fsyncs += 1
         d.io_write_s += time.perf_counter() - t0
         self._wal_size = 0
-        self._applied_seq = seq
+        self._applied_seq = last_seq
         for p in old_segs:
             self.fops.remove(p)
+            old_idx = self._idx_path(p)
+            if os.path.exists(old_idx):
+                self.fops.remove(old_idx)
         d.seg_bytes += len(buf)
+        d.seg_index_bytes += len(ibuf)
         d.compactions += 1
 
     # --------------------------------------------------------- lifecycle

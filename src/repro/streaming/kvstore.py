@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import struct
+import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -39,7 +40,18 @@ PROFILE_MAGIC = 0x5250      # 'RP'
 
 @dataclasses.dataclass
 class StorageModel:
-    """Service-time + LSM model (modeled, not measured — documented)."""
+    """Service-time + LSM model (modeled, not measured — documented).
+
+    ``sleep_io=False`` (default) only *accounts* the drawn service times
+    (``StoreCounters.modeled_io_s``) — total modeled cost is observable
+    but no wall-clock elapses, which is right for throughput benchmarks
+    of the compute plane.  ``sleep_io=True`` makes each store op actually
+    sleep its drawn service time on the calling thread: the store then
+    *behaves* like the device it models (ops have latency, a partition's
+    single worker serializes them), which is what latency-hiding
+    experiments need — an accounted-but-instant store would erase the
+    very stalls a pipelined driver exists to hide.
+    """
     read_us: float = 100.0
     write_us: float = 300.0
     gamma_shape: float = 4.0
@@ -47,6 +59,7 @@ class StorageModel:
     memtable_bytes: int = 1 << 16   # 64 KiB flush unit (CPU-scale streams)
     size_ratio: int = 10            # leveled-compaction fanout T
     bytes_per_entry: int = 128
+    sleep_io: bool = False          # modeled latencies actually elapse
 
     def service_time_s(self, rng: np.random.Generator, write: bool) -> float:
         mean = self.write_us if write else self.read_us
@@ -229,6 +242,8 @@ class KVStore:
             self.counters.modeled_write_s += seconds
         else:
             self.counters.modeled_read_s += seconds
+        if self.model.sleep_io and seconds > 0.0:
+            time.sleep(seconds)
 
     def get(self, key: int) -> Optional[bytes]:
         self.counters.gets += 1
@@ -249,13 +264,10 @@ class KVStore:
     # ------------------------------------------------------- batched ops
     def multi_get(self, keys: Iterable[int]) -> List[Optional[bytes]]:
         """Batched get: one seek draw + per-row sequential cost (MultiGet)."""
-        keys = list(keys)
-        out = []
-        for k in keys:
-            raw = self.data.get(int(k))
-            if raw is not None:
-                self.counters.bytes_read += len(raw)
-            out.append(raw)
+        keys = (keys.tolist() if isinstance(keys, np.ndarray)
+                else [int(k) for k in keys])
+        out = list(map(self.data.get, keys))
+        self.counters.bytes_read += sum(len(r) for r in out if r is not None)
         self.counters.gets += len(keys)
         self.counters.batch_gets += 1
         self._account_io(self.model.batch_service_time_s(
@@ -267,11 +279,22 @@ class KVStore:
         matrix (``SerDe.pack_rows`` output) or a sequence of byte strings."""
         keys = np.asarray(keys)
         n = len(keys)
-        for i in range(n):
-            raw = rows[i].tobytes() if isinstance(rows[i], np.ndarray) \
-                else bytes(rows[i])
-            self.counters.bytes_written += len(raw)
-            self.data[int(keys[i])] = raw
+        if isinstance(rows, np.ndarray) and rows.ndim == 2:
+            # matrix fast path: one contiguous serialization, then slice —
+            # a per-row ``tobytes()`` loop costs ~3x more on the store
+            # worker thread, which the flush path serializes behind
+            rb = rows.shape[1]
+            buf = rows.tobytes()
+            self.data.update(zip(
+                keys.tolist(),
+                (buf[i * rb:(i + 1) * rb] for i in range(n))))
+            self.counters.bytes_written += n * rb
+        else:
+            for i in range(n):
+                raw = rows[i].tobytes() if isinstance(rows[i], np.ndarray) \
+                    else bytes(rows[i])
+                self.counters.bytes_written += len(raw)
+                self.data[int(keys[i])] = raw
         self.counters.puts += n
         self.counters.batch_puts += 1
         self._account_io(self.model.batch_service_time_s(

@@ -50,6 +50,7 @@ the exact-mode engine state bit-for-bit.  Two fine points make that exact:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import queue
 import threading
@@ -126,9 +127,82 @@ class SinkStats:
     # demoted into the cache (synced from the caches at ``snapshot``)
     l2_hits: int = 0
     l2_demotions: int = 0
+    # host/device time split (synced from the sink's ``_OverlapMeter`` at
+    # ``snapshot``): ``host_pack_s`` is driver-side group planning+packing
+    # (the drivers wrap it in ``overlap.host()``), ``device_wait_s`` is
+    # time the flush dispatcher spent blocked materializing device arrays
+    # — the sink-gather sync points — and ``overlap_s`` is the wall-clock
+    # intersection of the two.  ``overlap_frac = overlap_s/host_pack_s``:
+    # the fraction of host pack work that was hidden under device waits.
+    host_pack_s: float = 0.0
+    device_wait_s: float = 0.0
+    overlap_s: float = 0.0
+    overlap_frac: float = 0.0
+    # epoch-gated read lane (pipelined drivers): staged flush epochs and
+    # reads that had to park waiting for their epoch to land
+    epochs_staged: int = 0
+    staged_reads: int = 0
+    parked_reads: int = 0
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
+
+
+class _OverlapMeter:
+    """Wall-clock intersection of two activity channels (host, device).
+
+    ``host()`` wraps driver-side group planning/packing; ``device()``
+    wraps the flush dispatcher's device-array materialization waits.  The
+    meter accumulates each channel's total busy time plus the time both
+    were active *simultaneously* — a direct measurement of how much host
+    pack work the pipeline hid under device time, not an inference from
+    wall-clock arithmetic.  Each channel is non-reentrant and owned by
+    one thread at a time (driver/prep thread vs dispatcher thread), which
+    the sink's thread model already guarantees.
+    """
+
+    HOST, DEVICE = 0, 1
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._since: List[Optional[float]] = [None, None]
+        self._both: float = 0.0
+        self.total = [0.0, 0.0]
+        self.overlap_s = 0.0
+
+    def begin(self, ch: int) -> None:
+        now = time.perf_counter()
+        with self._lock:
+            self._since[ch] = now
+            if self._since[1 - ch] is not None:
+                self._both = now
+
+    def end(self, ch: int) -> None:
+        now = time.perf_counter()
+        with self._lock:
+            since = self._since[ch]
+            if since is None:  # pragma: no cover - defensive
+                return
+            self.total[ch] += now - since
+            self._since[ch] = None
+            if self._since[1 - ch] is not None:
+                self.overlap_s += now - self._both
+
+    @contextlib.contextmanager
+    def host(self):
+        self.begin(self.HOST)
+        try:
+            yield
+        finally:
+            self.end(self.HOST)
+
+    @contextlib.contextmanager
+    def device(self):
+        self.begin(self.DEVICE)
+        try:
+            yield
+        finally:
+            self.end(self.DEVICE)
 
 
 class ReadTicket:
@@ -290,6 +364,15 @@ class WriteBehindSink:
         self._retry_lock = threading.Lock()
         self._overflow = overflow
         self.stats = SinkStats()
+        self.overlap = _OverlapMeter()
+        # epoch-gated read lane (see ``stage_epoch``): key -> epoch of the
+        # latest *staged* flush containing that key.  Written only by the
+        # single staging thread; sized on demand.
+        self._epoch_of_key = np.zeros(0, np.int64)
+        self._staged_seq = 0
+        self._applied = [0] * len(self.stores)
+        self._park_lock = [threading.Lock() for _ in self.stores]
+        self._parked: List[List[tuple]] = [[] for _ in self.stores]
         self._put_busy = [0.0] * len(self.stores)
         self._exc: Optional[BaseException] = None
         self._closed = False
@@ -314,7 +397,8 @@ class WriteBehindSink:
             self._thread.start()
 
     # ------------------------------------------------------------ driver
-    def submit(self, keys, z, valid, rows) -> None:
+    def submit(self, keys, z, valid, rows, seq: Optional[int] = None
+               ) -> None:
         """Queue one block for durable flush.
 
         ``keys``: [B] global entity ids; ``z``: [B] persistence decisions;
@@ -327,6 +411,13 @@ class WriteBehindSink:
         conversion happens on the flush thread, overlapping the next
         block's compute.  Blocks (bounded queue) when ``queue_depth``
         flushes are already in flight — backpressure, not buffering.
+
+        ``seq`` (pipelined drivers) names the flush epoch this block was
+        staged as (``stage_epoch``): once the block's puts have executed,
+        every partition's applied counter advances to ``seq``, releasing
+        any staged reads parked on it.  Blocks carrying a ``seq`` must be
+        submitted in staging order — the pipelined drivers dispatch
+        groups in stream order, so this holds by construction.
         """
         if self._closed:
             # the drain thread is gone: enqueueing would silently drop
@@ -334,7 +425,7 @@ class WriteBehindSink:
             raise RuntimeError("submit() on a closed WriteBehindSink")
         self._check()
         if self._serial:
-            self._flush_block(keys, z, valid, rows)
+            self._flush_block(keys, z, valid, rows, seq)
             return
         if self._overflow == "degrade-to-serial" and self._q.full():
             # graceful degradation: drain the pipeline (preserving FIFO
@@ -347,14 +438,56 @@ class WriteBehindSink:
                 sq.join()
             self._check()
             self.stats.degraded_flushes += 1
-            self._flush_block(keys, z, valid, rows, inline=True)
+            self._flush_block(keys, z, valid, rows, seq, inline=True)
             self.stats.submit_wait_s += time.perf_counter() - t0
             return
         t0 = time.perf_counter()
-        self._q.put(("block", keys, z, valid, rows))
+        self._q.put(("block", keys, z, valid, rows, seq))
         self.stats.submit_wait_s += time.perf_counter() - t0
 
-    def submit_read(self, keys, ordered: bool = True) -> ReadTicket:
+    def stage_epoch(self, keys, valid=None) -> int:
+        """Record one flush group as *staged* and return its epoch.
+
+        The pipelined drivers plan group *g+1* while group *g* is still on
+        device, so a rehydration read for *g+1* can be submitted before
+        *g*'s flush block even exists — the dispatcher-FIFO ordering the
+        serial drivers rely on cannot sequence it.  The epoch lane
+        replaces queue position with explicit happens-before: the staging
+        thread calls ``stage_epoch(keys, valid)`` the moment a group's
+        lanes are known (marking each valid key's latest staged epoch),
+        later submits the flush with ``submit(..., seq=epoch)``, and
+        gates reads of possibly-staged keys with ``submit_read(...,
+        staged=True)`` — each such read carries, per partition, the
+        maximum staged epoch over its keys and executes only once that
+        partition has applied it.
+
+        Contract (single-stager): ``stage_epoch`` and every
+        ``staged=True`` read are called from one thread, in stream order,
+        and a group's *own* hydration reads are submitted **before** its
+        ``stage_epoch`` — a group must not wait on its own epoch.  Every
+        staged epoch must eventually be submitted, or reads parked on it
+        wait forever.  Keys staged but ultimately thinned (``z=False``)
+        still advance the applied counter with their group — semantically
+        right, since their durable row legitimately stays older.
+        """
+        keys = np.asarray(keys, np.int64).reshape(-1)
+        if valid is not None:
+            keys = keys[np.asarray(valid, bool).reshape(-1)]
+        self._staged_seq += 1
+        seq = self._staged_seq
+        self.stats.epochs_staged += 1
+        if keys.size:
+            hi = int(keys.max()) + 1
+            if hi > self._epoch_of_key.size:
+                grown = np.zeros(max(hi, 2 * self._epoch_of_key.size, 1024),
+                                 np.int64)
+                grown[:self._epoch_of_key.size] = self._epoch_of_key
+                self._epoch_of_key = grown
+            self._epoch_of_key[keys] = seq
+        return seq
+
+    def submit_read(self, keys, ordered: bool = True, *,
+                    staged: bool = False) -> ReadTicket:
         """Queue a batched read of ``keys`` (hydration path).
 
         ``ordered=True`` (default): the read rides the same FIFO pipeline
@@ -367,6 +500,16 @@ class WriteBehindSink:
         keys that cannot be in any in-flight flush — e.g. a residency
         driver's *first-touch* misses, which this run has never written
         (``streaming.residency.GroupAssignment.miss_fresh``).
+
+        ``staged=True`` (pipelined drivers; implies the fast direct lane):
+        the read carries, per partition, the maximum *staged* epoch over
+        its keys (``stage_epoch``).  A store worker executes it
+        immediately if that partition has already applied the epoch,
+        otherwise parks it — never blocking the worker, whose queue still
+        holds the very flushes the read is waiting for — and the epoch
+        marker trailing the awaited flush drains the parking lot.  This
+        gives exactly the serial FIFO guarantee (a read observes every
+        flush *staged* before it) without riding behind the dispatcher.
 
         Returns a ``ReadTicket``; ``ticket.result()`` blocks until the
         rows (aligned with ``keys``, ``None`` for absent entries) are
@@ -387,6 +530,26 @@ class WriteBehindSink:
             idx = np.nonzero(part == p)[0]
             splits.append((int(p), idx, keys[idx]))
         ticket = ReadTicket(int(keys.size), len(splits), self.stats)
+        if staged:
+            self.stats.staged_reads += 1
+            eok = self._epoch_of_key
+            for p, idx, ks in splits:
+                inb = ks[ks < eok.size]
+                need = int(np.max(eok[inb], initial=0)) if inb.size else 0
+                if self._serial:
+                    # no workers to park on; the single-driver contract
+                    # (reads staged before their epoch's submit, submits
+                    # in stage order) makes every need already applied
+                    if need > self._applied[p]:
+                        raise RuntimeError(
+                            "staged read needs epoch "
+                            f"{need} > applied {self._applied[p]} on a "
+                            "serial sink (pipelined drivers require "
+                            "queue_depth >= 1)")
+                    ticket._deliver(idx, self._exec_get(p, ks))
+                else:
+                    self._store_qs[p].put(("read", ticket, idx, ks, need))
+            return ticket
         if self._serial:
             for p, idx, ks in splits:
                 ticket._deliver(idx, self._exec_get(p, ks))
@@ -535,6 +698,13 @@ class WriteBehindSink:
                 measured["measured_bytes_written"]
                 / max(agg["bytes_written"], 1))
             agg["measured"] = measured
+        # host/device split: totals + measured wall-clock intersection
+        self.stats.host_pack_s = self.overlap.total[_OverlapMeter.HOST]
+        self.stats.device_wait_s = self.overlap.total[_OverlapMeter.DEVICE]
+        self.stats.overlap_s = self.overlap.overlap_s
+        self.stats.overlap_frac = (
+            self.stats.overlap_s / self.stats.host_pack_s
+            if self.stats.host_pack_s > 0 else 0.0)
         if self.l2 is not None:
             # dedupe by identity: a single shared cache may back every
             # partition slot
@@ -603,21 +773,44 @@ class WriteBehindSink:
                 self._q.task_done()
 
     def _store_drain(self, i: int) -> None:
-        """One partition store's worker: batched puts + ordered reads."""
+        """One partition store's worker: batched puts, ordered reads,
+        epoch markers (which advance ``_applied[i]`` and drain any staged
+        reads parked on them)."""
         sq = self._store_qs[i]
         while True:
             item = sq.get()
             if item is _STOP:
+                # fail, never strand: parked reads wait on epochs that
+                # can no longer arrive
+                with self._park_lock[i]:
+                    parked, self._parked[i] = self._parked[i], []
+                for ticket, idx, ks, need in parked:
+                    ticket._deliver(idx, (), exc=RuntimeError(
+                        f"sink closed with a staged read parked on "
+                        f"epoch {need}"))
                 sq.task_done()
                 return
             try:
                 if item[0] == "read":
-                    _, ticket, idx, ks = item
+                    ticket, idx, ks = item[1], item[2], item[3]
+                    need = item[4] if len(item) > 4 else 0
+                    if need > self._applied[i]:
+                        parked = False
+                        with self._park_lock[i]:
+                            if need > self._applied[i]:
+                                self._parked[i].append(
+                                    (ticket, idx, ks, need))
+                                self.stats.parked_reads += 1
+                                parked = True
+                        if parked:
+                            continue
                     try:
                         ticket._deliver(idx, self._exec_get(i, ks))
                     except BaseException as e:
                         ticket._deliver(idx, (), exc=e)
                         raise
+                elif item[0] == "epoch":
+                    self._mark_applied(i, item[1])
                 elif self._exc is None:
                     _, ks, rows = item
                     self._exec_put(i, ks, rows)
@@ -625,6 +818,26 @@ class WriteBehindSink:
                 self._exc = e
             finally:
                 sq.task_done()
+
+    def _mark_applied(self, p: int, seq: int) -> None:
+        """Advance partition ``p``'s applied epoch and run any staged
+        reads whose need it satisfies.  Runs on the partition's worker
+        thread (epoch marker) or the driver thread (serial sink), so the
+        one-thread-at-a-time-per-store invariant holds either way."""
+        with self._park_lock[p]:
+            if seq > self._applied[p]:
+                self._applied[p] = seq
+            applied = self._applied[p]
+            runnable = [e for e in self._parked[p] if e[3] <= applied]
+            if runnable:
+                self._parked[p] = [e for e in self._parked[p]
+                                   if e[3] > applied]
+        for ticket, idx, ks, _need in runnable:
+            try:
+                ticket._deliver(idx, self._exec_get(p, ks))
+            except BaseException as e:
+                ticket._deliver(idx, (), exc=e)
+                raise
 
     def _put(self, p: int, keys, rows, inline: bool = False) -> None:
         """Route one partition's packed rows to its store (worker thread,
@@ -670,12 +883,18 @@ class WriteBehindSink:
                 rows[int(j)] = r
         return rows
 
-    def _flush_block(self, keys, z, valid, rows, inline: bool = False
-                     ) -> None:
+    def _flush_block(self, keys, z, valid, rows, seq: Optional[int] = None,
+                     inline: bool = False) -> None:
         t0 = time.perf_counter()
-        # flush groups arrive with z shaped [G, B]; lanes are flat below
-        keys = np.asarray(keys).reshape(-1)
-        z = np.asarray(z).reshape(-1)
+        # flush groups arrive with z shaped [G, B]; lanes are flat below.
+        # The np.asarray conversions below are the sink-gather sync
+        # points: materializing ``z`` (and the gathered rows) waits for
+        # the group's device compute, so they run under the overlap
+        # meter's device channel — that wait is exactly the device time
+        # a pipelined driver can hide host pack work beneath.
+        with self.overlap.device():
+            keys = np.asarray(keys).reshape(-1)
+            z = np.asarray(z).reshape(-1)
         valid = np.asarray(valid).reshape(-1)
         st = self.stats
         st.blocks += 1
@@ -695,12 +914,14 @@ class WriteBehindSink:
                 # whole-block (two fixed-shape host reads) — selecting on
                 # device first would re-trace a gather per distinct
                 # selection size, which costs far more than the copy.
-                scal = np.asarray(rows[0])[:, pick]
-                agg = np.asarray(rows[1])[pick]
+                with self.overlap.device():
+                    scal = np.asarray(rows[0])[:, pick]
+                    agg = np.asarray(rows[1])[pick]
                 last_t, v_f, v_full, last_t_full = scal
             else:
-                last_t, v_f, agg, v_full, last_t_full = \
-                    (np.asarray(r)[pick] for r in rows)
+                with self.overlap.device():
+                    last_t, v_f, agg, v_full, last_t_full = \
+                        tuple(np.asarray(r)[pick] for r in rows)
             if not self.full_stream:
                 # control column is not durable under thinning policies
                 v_full = np.zeros_like(v_full)
@@ -713,6 +934,16 @@ class WriteBehindSink:
             for p in np.unique(part):
                 m = part == p
                 self._put(int(p), uk[m], packed[m], inline=inline)
+        if seq is not None:
+            # epoch marker trails the block's puts on *every* partition
+            # (even ones this block wrote nothing to): once a partition
+            # processes it, every put of epochs <= seq has executed there
+            if self._serial or inline:
+                for p in range(len(self.stores)):
+                    self._mark_applied(p, seq)
+            else:
+                for sq in self._store_qs:
+                    sq.put(("epoch", seq))
         st.flush_s += time.perf_counter() - t0
 
 

@@ -162,8 +162,8 @@ class ResidencyMap:
         return self._seen[np.asarray(keys, np.int64).reshape(-1)].copy()
 
     # --------------------------------------------------------- assignment
-    def assign_group(self, keys, valid: Optional[np.ndarray] = None
-                     ) -> GroupAssignment:
+    def assign_group(self, keys, valid: Optional[np.ndarray] = None,
+                     batch_take: bool = False) -> GroupAssignment:
         """Assign one slot per distinct valid key for the coming group.
 
         ``keys``: global entity ids, any shape (flattened); ``valid``: the
@@ -172,6 +172,15 @@ class ResidencyMap:
         victims; the whole group is pinned against its own evictions.
         Raises ``ValueError`` (before touching the table) when the group
         holds more distinct keys than slots.
+
+        ``batch_take=True`` selects all of the group's victim slots in one
+        vectorized pass (``_take_slots_clock``) instead of a per-miss hand
+        walk, and scatters the slot-table bookkeeping with array ops.  The
+        chosen slots, their order, the reference-bit mutations and the
+        final hand position are bit-identical to the serial walk (pinned
+        by ``tests/test_pipelined.py``); only the host cost changes.  The
+        pipelined drivers plan groups with it so the prep thread's work
+        fits under the device window.
         """
         keys = np.asarray(keys, np.int64).reshape(-1)
         if valid is None:
@@ -214,23 +223,44 @@ class ResidencyMap:
         miss_slots = np.empty(miss_keys.size, np.int32)
         miss_fresh = ~self._seen[miss_keys]
         self._seen[miss_keys] = True
-        takes = (self._take_slots_priority(gid, miss_keys.size)
-                 if self.eviction == "priority" else None)
-        evicted = []
-        for i, k in enumerate(miss_keys):
-            s = int(takes[i]) if takes is not None else self._take_slot(gid)
-            old = self.key_of_slot[s]
-            if old >= 0:
-                self.slot_of_key[old] = -1
-                evicted.append(old)
-            self.key_of_slot[s] = k
-            self.slot_of_key[k] = s
-            self._ref[s] = True
-            self._pin[s] = gid
-            self._touch[s] = gid
-            self._freq[s] = float(miss_counts[i])
-            self._cost[s] = 1.0 if miss_fresh[i] else 2.0
-            miss_slots[i] = s
+        if batch_take and miss_keys.size:
+            takes = (self._take_slots_priority(gid, miss_keys.size)
+                     if self.eviction == "priority"
+                     else self._take_slots_clock(gid, miss_keys.size))
+            # vectorized bookkeeping: takes are distinct slots, so every
+            # scatter below lands each slot exactly once
+            old = self.key_of_slot[takes]
+            ev = old >= 0
+            evicted_keys = old[ev]
+            self.slot_of_key[evicted_keys] = -1
+            self.key_of_slot[takes] = miss_keys
+            self.slot_of_key[miss_keys] = takes
+            self._ref[takes] = True
+            self._pin[takes] = gid
+            self._touch[takes] = gid
+            self._freq[takes] = miss_counts.astype(np.float64)
+            self._cost[takes] = np.where(miss_fresh, 1.0, 2.0)
+            miss_slots[:] = takes
+            evicted = list(evicted_keys)
+        else:
+            takes = (self._take_slots_priority(gid, miss_keys.size)
+                     if self.eviction == "priority" else None)
+            evicted = []
+            for i, k in enumerate(miss_keys):
+                s = (int(takes[i]) if takes is not None
+                     else self._take_slot(gid))
+                old = self.key_of_slot[s]
+                if old >= 0:
+                    self.slot_of_key[old] = -1
+                    evicted.append(old)
+                self.key_of_slot[s] = k
+                self.slot_of_key[k] = s
+                self._ref[s] = True
+                self._pin[s] = gid
+                self._touch[s] = gid
+                self._freq[s] = float(miss_counts[i])
+                self._cost[s] = 1.0 if miss_fresh[i] else 2.0
+                miss_slots[i] = s
 
         st.hits += n_hit
         st.misses += int(miss_keys.size)
@@ -270,6 +300,50 @@ class ResidencyMap:
                 self._ref[s] = False
                 continue
             return s
+
+    def _take_slots_clock(self, gid: int, m: int) -> np.ndarray:
+        """Vectorized clock sweep: ``m`` sequential ``_take_slot`` calls
+        simulated in one pass, bit-identical in every observable — chosen
+        slots and their order, which reference bits drop, and the final
+        hand position.
+
+        The serial walk's structure makes this possible: within one
+        rotation each position is visited at most once, so rotation 1
+        takes exactly the unpinned slots that are free or unreferenced
+        (in hand order), clears the reference bit of every *visited*
+        unpinned+occupied+referenced slot, and rotation 2 takes those
+        cleared slots (again in hand order) — the walk never needs a
+        third rotation because the two sequences together cover every
+        unpinned slot.  The only care point is the stop: reference bits
+        drop only at positions the serial walk actually reached before
+        its ``m``-th take.
+        """
+        S = self.n_slots
+        rot = (np.arange(S) + self._hand) % S       # slots in walk order
+        unpinned = self._pin[rot] != gid
+        free = self.key_of_slot[rot] < 0
+        if self.eviction == "second_chance":
+            ref = self._ref[rot]
+            idx1 = np.nonzero(unpinned & (free | ~ref))[0]
+            clear = unpinned & ~free & ref
+            if m <= idx1.size:
+                last = int(idx1[m - 1])
+                # visited rot positions are 0..last; the slot at ``last``
+                # is a take, so only clears strictly before it happen
+                self._ref[rot[np.nonzero(clear[:last])[0]]] = False
+                takes = rot[idx1[:m]]
+            else:
+                self._ref[rot[clear]] = False       # full first rotation
+                idx2 = np.nonzero(clear)[0]
+                k2 = m - idx1.size
+                last = int(idx2[k2 - 1])
+                takes = np.concatenate([rot[idx1], rot[idx2[:k2]]])
+        else:                                       # fifo: one rotation
+            idx1 = np.nonzero(unpinned)[0]
+            last = int(idx1[m - 1])
+            takes = rot[idx1[:m]]
+        self._hand = int((self._hand + last + 1) % S)
+        return takes.astype(np.int32)
 
     def _take_slots_priority(self, gid: int, m: int) -> np.ndarray:
         """Cost-aware batch victim selection for ``eviction="priority"``.
@@ -322,6 +396,10 @@ def split_oversized_group(keys, valid: Optional[np.ndarray],
         valid = np.ones(keys.size, bool)
     valid = np.asarray(valid, bool).reshape(-1)
     idx = np.nonzero(valid)[0]
+    if idx.size <= capacity:
+        # <= capacity valid lanes bounds distinct keys too: the common
+        # steady-state case skips the np.unique entirely
+        return [valid.copy()]
     vk = keys[idx]
     uniq, first = np.unique(vk, return_index=True)
     if uniq.size <= capacity:

@@ -28,8 +28,8 @@ from repro.core.stream import run_stream
 from repro.features.engine import ShardedFeatureEngine
 from repro.streaming import faults
 from repro.streaming.durable import (BACKENDS, CorruptionError, DurableStore,
-                                     HEADER_BYTES, WAL_NAME, _encode_batch,
-                                     open_partition_stores)
+                                     HEADER_BYTES, IDX_SUFFIX, WAL_NAME,
+                                     _encode_batch, open_partition_stores)
 from repro.streaming.kvstore import KVStore
 from repro.streaming.persistence import (RetryPolicy, WriteBehindSink,
                                          hydrate_state)
@@ -456,3 +456,124 @@ def test_kill_mid_flush_bit_exact(tmp_path, policy, mode):
         for a, b, name in zip(h_rec, h_ref, h_rec._fields):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                           err_msg=name)
+
+
+# ----------------------------------------------- sparse segment index
+def test_segment_index_sidecar_written_and_eager_parity(tmp_path):
+    """Compaction under ``seg_block_rows`` writes blocked segments plus a
+    CRC'd ``.idx`` sidecar; the default (eager) reopen replays blocked
+    segments through the ordinary path, index unused."""
+    d = str(tmp_path / "s")
+    want = {k: bytes([65 + k % 26]) * 3 for k in range(20)}
+    with DurableStore(d, seg_block_rows=4) as s:
+        s.multi_put(list(want), list(want.values()))
+        s.compact()
+        assert s.durable.seg_index_bytes > 0
+    segs = [f for f in os.listdir(d) if f.endswith(".seg")]
+    idxs = [f for f in os.listdir(d) if f.endswith(IDX_SUFFIX)]
+    assert len(segs) == 1 and len(idxs) == 1
+    assert idxs[0][:-len(IDX_SUFFIX)] == segs[0][:-len(".seg")]
+    with DurableStore(d, seg_block_rows=4) as r:   # eager: full replay
+        assert r.data == want
+        assert r.durable.seg_probes == 0
+
+
+def test_lazy_reopen_faults_single_blocks(tmp_path):
+    """``lazy_recovery=True`` skips the segment read at reopen; a cold get
+    bisects the sidecar and faults exactly one block, min/max fences
+    answer out-of-range keys with zero I/O, and a loaded block's keys
+    never probe again."""
+    d = str(tmp_path / "s")
+    keys = list(range(0, 64, 2))                  # evens: gaps inside blocks
+    with DurableStore(d, seg_block_rows=4) as s:
+        s.multi_put(keys, [b"%04d" % k for k in keys])
+        s.compact()
+    with DurableStore(d, seg_block_rows=4, lazy_recovery=True) as r:
+        c = r.durable
+        assert r.durable.index_fallbacks == 0
+        assert len(r.data) == 0                   # nothing faulted yet
+        assert r.get(10) == b"0010"               # block 1 (keys 8..14)
+        assert (c.seg_probes, c.seg_blocks_read, c.seg_probe_hits) == (1, 1, 1)
+        assert c.seg_bytes_read > 0
+        assert r.get(8) == b"0008"                # same block: no new probe
+        assert c.seg_probes == 1
+        assert r.get(9) is None                   # gap *inside* block 1
+        assert (c.seg_probes, c.seg_blocks_read, c.seg_probe_hits) == (2, 1, 1)
+        assert r.get(999) is None and r.get(-3) is None   # fence skips
+        assert c.seg_blocks_skipped == 2 and c.seg_blocks_read == 1
+        assert r.multi_get([40, 41, 62]) == [b"0040", None, b"0062"]
+        assert c.seg_blocks_read == 3             # two more blocks faulted
+        # full-scan op materializes the rest; gets stop probing entirely
+        assert r.keys() == tuple(keys)
+        probes = c.seg_probes
+        assert r.get(0) == b"0000"
+        assert c.seg_probes == probes
+
+
+def test_lazy_reopen_wal_wins_over_segment_block(tmp_path):
+    """A WAL row written after compaction carries a newer seq than any
+    segment row: at lazy reopen the replayed memtable must shadow the
+    block row its key lives in (``setdefault`` fold)."""
+    d = str(tmp_path / "s")
+    with DurableStore(d, seg_block_rows=2) as s:
+        s.multi_put([1, 2, 3, 4], [b"v1", b"v2", b"v3", b"v4"])
+        s.compact()
+        s.put(3, b"WAL")                          # post-compaction update
+    with DurableStore(d, seg_block_rows=2, lazy_recovery=True) as r:
+        assert r.get(3) == b"WAL"                 # memtable hit, no probe
+        assert r.durable.seg_probes == 0
+        assert r.get(4) == b"v4"                  # 3's blockmate: probed,
+        assert r.durable.seg_blocks_read == 1     # folded under the WAL row
+        assert r.get(3) == b"WAL"
+
+
+@pytest.mark.parametrize("damage", ["missing", "corrupt", "truncated"])
+def test_index_fallback_never_wrong_answers(tmp_path, damage):
+    """The sidecar is derived data: a missing, bit-flipped, or truncated
+    index makes a lazy reopen fall back to the eager full-file replay
+    (counted) with the exact same contents — never an error, never a
+    wrong answer."""
+    d = str(tmp_path / "s")
+    want = {k: b"x" * (k + 1) for k in range(12)}
+    with DurableStore(d, seg_block_rows=3) as s:
+        s.multi_put(list(want), list(want.values()))
+        s.compact()
+    idx = os.path.join(d, [f for f in os.listdir(d)
+                           if f.endswith(IDX_SUFFIX)][0])
+    if damage == "missing":
+        os.remove(idx)
+    elif damage == "truncated":
+        with open(idx, "r+b") as f:
+            f.truncate(os.path.getsize(idx) - 5)
+    else:
+        buf = bytearray(open(idx, "rb").read())
+        buf[len(buf) // 2] ^= 0x40
+        with open(idx, "wb") as f:
+            f.write(bytes(buf))
+    with DurableStore(d, seg_block_rows=3, lazy_recovery=True) as r:
+        assert r.durable.index_fallbacks == 1
+        assert r.data == want
+        assert r.durable.seg_probes == 0          # no index to probe
+
+
+def test_compact_from_lazy_store_materializes_first(tmp_path):
+    """Compacting a lazily-opened store must fold in every unloaded block
+    before rewriting the segment — nothing is dropped, and the rewritten
+    segment + sidecar round-trip through another lazy reopen."""
+    d = str(tmp_path / "s")
+    with DurableStore(d, seg_block_rows=4) as s:
+        s.multi_put(list(range(16)), [b"%02d" % k for k in range(16)])
+        s.compact()
+    with DurableStore(d, seg_block_rows=4, lazy_recovery=True) as r:
+        r.multi_put([16, 3], [b"16", b"03*"])     # new key + overwrite
+        r.compact()
+        assert r.durable.seg_blocks_read == 4     # all blocks faulted
+    with DurableStore(d, seg_block_rows=4, lazy_recovery=True) as r:
+        assert r.multi_get(list(range(17))) == \
+            [b"%02d" % k for k in range(3)] + [b"03*"] + \
+            [b"%02d" % k for k in range(4, 16)] + [b"16"]
+
+
+def test_seg_block_rows_validation(tmp_path):
+    with pytest.raises(ValueError, match="seg_block_rows"):
+        DurableStore(str(tmp_path / "s"), seg_block_rows=0)

@@ -70,14 +70,16 @@ def _store_contents(stores):
 
 def _frontend_run(cfg, keys, qs, ts, *, batch, mode, arrival_s,
                   max_wait_s, sink=None, rmap=None, scorer=None,
-                  clock=None, rng=None):
+                  clock=None, rng=None, admission="serial",
+                  adaptive_wait=False):
     n_rows = rmap.n_slots if rmap is not None else N_KEYS
     fe = ServingFrontend(
         cfg, init_state(n_rows, len(cfg.taus)), batch=batch,
         max_wait_s=max_wait_s, mode=mode,
         rng=jax.random.PRNGKey(7) if rng is None else rng,
         clock=clock if clock is not None else VirtualClock(),
-        sink=sink, residency=rmap, scorer=scorer)
+        sink=sink, residency=rmap, scorer=scorer,
+        admission=admission, adaptive_wait=adaptive_wait)
     return fe.run(make_requests(keys, qs, ts, arrival_s))
 
 
@@ -374,3 +376,169 @@ def test_stalled_durable_read_delays_but_never_corrupts_a_dispatch():
     assert _store_contents(sink.stores) == _store_contents(sink_d.stores)
     sink.close()
     sink_d.close()
+
+
+# ------------------------------------------- threaded admission plane
+def _assert_same_serve(a, b):
+    """Bit-equality of the deterministic half of two ServeResults:
+    outputs, scores, order, and per-dispatch batch composition.  Latency
+    is deliberately *not* compared — it is a measurement, and under the
+    threaded plane the admission thread legitimately advances the virtual
+    clock (sleeping toward later deadlines) while earlier batches are
+    still on the dispatch thread, so ``t_done`` reads a later instant."""
+    _assert_bit_equal(a, b)
+    if a.scores is not None or b.scores is not None:
+        assert np.array_equal(a.scores, b.scores)
+    assert np.array_equal(a.order, b.order)
+    assert [(r.size, r.full, r.t_dispatch, r.deadline, r.n_miss)
+            for r in a.batches] == \
+           [(r.size, r.full, r.t_dispatch, r.deadline, r.n_miss)
+            for r in b.batches]
+
+
+def test_threaded_admission_validation_errors():
+    cfg = _cfg("pp")
+    with pytest.raises(ValueError, match="admission"):
+        ServingFrontend(cfg, init_state(N_KEYS, 2), batch=4,
+                        max_wait_s=0.0, admission="fibered")
+    with pytest.raises(ValueError, match="adaptive_alpha"):
+        ServingFrontend(cfg, init_state(N_KEYS, 2), batch=4,
+                        max_wait_s=0.0, adaptive_alpha=0.0)
+    # residency under threaded admission needs the sink's epoch lane:
+    # a serial (queue_depth=0) sink has no store workers to park reads on
+    sink = WriteBehindSink(cfg, n_partitions=3, queue_depth=0)
+    with pytest.raises(ValueError, match="threaded sink"):
+        ServingFrontend(cfg, init_state(12, 2), batch=4, max_wait_s=0.0,
+                        admission="threaded", sink=sink,
+                        residency=ResidencyMap(N_KEYS, 12))
+    sink.close()
+    # ...and a degrade-to-serial sink can flush inline on the dispatch
+    # thread, racing the admission thread's reads
+    sink = WriteBehindSink(cfg, n_partitions=3,
+                           overflow="degrade-to-serial")
+    with pytest.raises(ValueError, match="degraded sink"):
+        ServingFrontend(cfg, init_state(12, 2), batch=4, max_wait_s=0.0,
+                        admission="threaded", sink=sink,
+                        residency=ResidencyMap(N_KEYS, 12))
+    sink.close()
+
+
+@pytest.mark.parametrize("mode", ["fast", "exact"])
+def test_threaded_admission_plain_parity(mode):
+    """Sinkless planes: the threaded admission plane reproduces the serial
+    loop bit-for-bit — outputs, order, latencies, batch composition —
+    under partial-batch (deadline) arrivals on the virtual clock."""
+    keys, qs, ts = _stream(150)
+    cfg = _cfg("pp")
+    kw = dict(batch=8, mode=mode, arrival_s=np.arange(150) * 1e-3,
+              max_wait_s=2.5e-3)
+    ser = _frontend_run(cfg, keys, qs, ts, **kw)
+    thr = _frontend_run(cfg, keys, qs, ts, admission="threaded", **kw)
+    assert ser.stats.deadline_batches > 0
+    _assert_same_serve(ser, thr)
+    # completion can never precede dispatch: threaded latency dominates
+    # the serial plane's (whose compute is free on the virtual clock)
+    assert np.all(thr.latency_s >= ser.latency_s - 1e-12)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_threaded_admission_sink_parity(policy):
+    """Write-behind sink + scorer: stored bytes and scores also match the
+    serial plane, for every policy."""
+    keys, qs, ts = _stream(120)
+    cfg = _cfg(policy)
+    scorer = init_scorer(jax.random.PRNGKey(1), 4 * len(cfg.taus))
+    kw = dict(batch=8, mode="exact", arrival_s=np.arange(120) * 1e-3,
+              max_wait_s=2.5e-3, scorer=scorer)
+    sink_s = WriteBehindSink(cfg, n_partitions=3)
+    ser = _frontend_run(cfg, keys, qs, ts, sink=sink_s, **kw)
+    sink_s.flush()
+    sink_t = WriteBehindSink(cfg, n_partitions=3)
+    thr = _frontend_run(cfg, keys, qs, ts, sink=sink_t,
+                        admission="threaded", **kw)
+    sink_t.flush()
+    _assert_same_serve(ser, thr)
+    assert _store_contents(sink_s.stores) == _store_contents(sink_t.stores)
+    sink_s.close()
+    sink_t.close()
+
+
+@pytest.mark.parametrize("mode", ["fast", "exact"])
+def test_threaded_admission_residency_parity(mode):
+    """Bounded resident set under the threaded plane: mid-wait evictions
+    rehydrate through the sink's epoch-gated read lane and everything —
+    outputs, stored bytes, hydration counters — matches serial admission."""
+    keys, qs, ts = _stream(600, seed=3)
+    cfg = _cfg("pp")
+    kw = dict(batch=8, mode=mode, arrival_s=np.arange(600) * 1e-3,
+              max_wait_s=2.5e-3)
+    sink_s = WriteBehindSink(cfg, n_partitions=3)
+    ser = _frontend_run(cfg, keys, qs, ts, sink=sink_s,
+                        rmap=ResidencyMap(N_KEYS, 12), **kw)
+    sink_s.flush()
+    sink_t = WriteBehindSink(cfg, n_partitions=3)
+    thr = _frontend_run(cfg, keys, qs, ts, sink=sink_t,
+                        rmap=ResidencyMap(N_KEYS, 12),
+                        admission="threaded", **kw)
+    sink_t.flush()
+    _assert_same_serve(ser, thr)
+    assert _store_contents(sink_s.stores) == _store_contents(sink_t.stores)
+    assert thr.stats.prefetch_rehydrations > 0
+    assert thr.stats.demand_reads == ser.stats.demand_reads
+    assert thr.stats.prefetch_hits == ser.stats.prefetch_hits
+    # the threaded plane routed its reads through the sink's epoch lane
+    st = sink_t.stats
+    assert st.epochs_staged > 0 and st.staged_reads > 0
+    assert sink_s.stats.epochs_staged == 0
+    sink_s.close()
+    sink_t.close()
+
+
+# --------------------------------------- adaptive partial-batch deadline
+def test_adaptive_wait_off_by_default():
+    keys, qs, ts = _stream(60)
+    cfg = _cfg("pp")
+    kw = dict(batch=8, mode="fast", arrival_s=np.arange(60) * 1e-3,
+              max_wait_s=2.5e-3)
+    base = _frontend_run(cfg, keys, qs, ts, **kw)
+    assert base.stats.adaptive_tightened == 0
+
+
+def test_adaptive_wait_tightens_slow_arrival_deadlines():
+    """Sparse arrivals: the EWMA fill estimate undercuts ``max_wait_s``,
+    partials dispatch early (``adaptive_tightened`` counts them), latency
+    drops, and the no-drop/no-dup FIFO contract is untouched."""
+    n = 40
+    keys, qs, ts = _stream(n)
+    cfg = _cfg("pp")
+    # inter-arrival 1 ms << max_wait 20 ms with batch 16: a queue that
+    # would sit out the full 20 ms deadline gets cut early once the EWMA
+    # says the remaining wait cannot buy a full batch.  Exact mode is
+    # batching-invariant, so the recomposed batches change *when* work
+    # dispatches but never *what* it computes.
+    kw = dict(batch=16, mode="exact", arrival_s=np.arange(n) * 1e-3,
+              max_wait_s=0.020)
+    base = _frontend_run(cfg, keys, qs, ts, **kw)
+    adap = _frontend_run(cfg, keys, qs, ts, adaptive_wait=True, **kw)
+    assert adap.stats.adaptive_tightened > 0
+    assert np.array_equal(np.sort(adap.order), np.arange(n))
+    assert np.array_equal(adap.order, base.order)
+    _assert_bit_equal(adap, base)
+    # the tightened deadlines strictly help the tail and hurt no one
+    assert float(adap.latency_s.max()) < float(base.latency_s.max())
+    assert np.all(adap.latency_s <= kw["max_wait_s"] + 1e-9)
+
+
+def test_adaptive_wait_identical_across_admission_planes():
+    """The EWMA is a pure function of the arrival schedule (never a clock
+    read), so adaptive batching is bit-identical between the serial and
+    threaded planes — composition, tighten counts, outputs."""
+    keys, qs, ts = _stream(90)
+    cfg = _cfg("pp")
+    kw = dict(batch=16, mode="exact", arrival_s=np.arange(90) * 1e-3,
+              max_wait_s=0.020, adaptive_wait=True)
+    ser = _frontend_run(cfg, keys, qs, ts, **kw)
+    thr = _frontend_run(cfg, keys, qs, ts, admission="threaded", **kw)
+    assert ser.stats.adaptive_tightened > 0
+    assert thr.stats.adaptive_tightened == ser.stats.adaptive_tightened
+    _assert_same_serve(ser, thr)

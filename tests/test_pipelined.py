@@ -1,0 +1,315 @@
+"""Pipelined execution plane: the overlap drivers must change no bits.
+
+The acceptance bar for ``run_stream(pipeline_depth=)`` (core/stream.py)
+is *bit-exactness against the serial driver* — z/p/lam/features and the
+final durable bytes — because every ordering invariant (per-key FIFO,
+evict→rehydrate reading the latest durable row, the fsync group
+boundary) was proven for a serial schedule and the pipelined plane
+re-derives them under overlap via the sink's epoch-gated read lane.
+Equality against the serial driver therefore *is* the property test for
+those invariants: a FIFO violation reorders a key's updates (different
+stored bytes), a stale rehydration changes features, a broken epoch gate
+returns pre-flush rows.
+
+Covered here:
+* serial vs pipelined parity, all 5 policies × exact+fast, sink-only;
+* the same with residency + host-RAM L2 + forced oversized-group splits
+  (the full hierarchy under overlap);
+* epoch-lane observability (epochs staged, parked reads drained);
+* ``ResidencyMap.assign_group(batch_take=True)`` equivalence (the
+  vectorized victim take the pipelined planner uses);
+* hypothesis property tests with always-run fixed twins (repo
+  convention) over randomized group shapes and forced splits;
+* the knob's validation guards;
+* 8-device sharded-engine parity in a subprocess (both layouts).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import EngineConfig, init_state
+from repro.core.stream import run_stream
+from repro.streaming.persistence import WriteBehindSink
+from repro.streaming.residency import ResidencyMap
+
+N_KEYS = 96
+POLICIES = ["pp", "pp_vr", "full", "fixed", "unfiltered"]
+
+
+def _stream(n_events=384, n_keys=N_KEYS, seed=0, skew=1.2):
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, n_keys + 1) ** skew
+    w /= w.sum()
+    keys = rng.choice(n_keys, n_events, p=w).astype(np.int32)
+    ts = np.cumsum(rng.exponential(20.0, n_events)).astype(np.float32)
+    qs = rng.lognormal(3.0, 1.0, n_events).astype(np.float32)
+    return keys, qs, ts
+
+
+def _cfg(policy, n_taus=2, exact_rounds=16):
+    return EngineConfig(taus=(60.0, 3600.0, 86400.0)[:n_taus], h=600.0,
+                        budget=0.002, alpha=1.0, policy=policy,
+                        fixed_rate=0.3, mu_tau_index=1,
+                        exact_rounds=exact_rounds)
+
+
+def _stored(sink):
+    sink.flush()
+    merged = {}
+    for s in sink.stores:
+        merged.update(s.data)
+    return merged
+
+
+def _run(cfg, keys, qs, ts, *, mode, depth, batch=16, sink_group=3,
+         n_slots=None, l2=None):
+    """One run_stream drive; returns (info, stored bytes, sink, rmap)."""
+    sink = WriteBehindSink(cfg, n_partitions=3, l2=l2)
+    rmap = None
+    if n_slots is not None:
+        rmap = ResidencyMap(N_KEYS, n_slots)
+        state = init_state(n_slots, len(cfg.taus))
+    else:
+        state = init_state(N_KEYS, len(cfg.taus))
+    _, info = run_stream(cfg, state, keys, qs, ts, batch=batch, mode=mode,
+                         rng=jax.random.PRNGKey(7), sink=sink,
+                         sink_group=sink_group, residency=rmap,
+                         pipeline_depth=depth)
+    stored = _stored(sink)
+    return info, stored, sink, rmap
+
+
+def _assert_bit_equal(a, b):
+    assert np.array_equal(np.asarray(a.z), np.asarray(b.z))
+    assert np.array_equal(np.asarray(a.p), np.asarray(b.p))
+    assert np.array_equal(np.asarray(a.lam_hat), np.asarray(b.lam_hat))
+    assert np.array_equal(np.asarray(a.features), np.asarray(b.features))
+
+
+# ------------------------------------------------------------ validation
+def test_pipeline_depth_validation():
+    keys, qs, ts = _stream(32)
+    cfg = _cfg("pp")
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        run_stream(cfg, init_state(N_KEYS, 2), keys, qs, ts, batch=8,
+                   pipeline_depth=0)
+    with pytest.raises(ValueError, match="requires a sink"):
+        run_stream(cfg, init_state(N_KEYS, 2), keys, qs, ts, batch=8,
+                   pipeline_depth=2)
+    # residency pipelining needs the epoch lane's store workers ...
+    with WriteBehindSink(cfg, queue_depth=0) as sink:
+        with pytest.raises(ValueError, match="threaded sink"):
+            run_stream(cfg, init_state(16, 2), keys, qs, ts, batch=8,
+                       sink=sink, residency=ResidencyMap(N_KEYS, 16),
+                       pipeline_depth=2)
+    # ... and pure backpressure (no inline flush on the dispatch thread)
+    with WriteBehindSink(cfg, overflow="degrade-to-serial") as sink:
+        with pytest.raises(ValueError, match="block"):
+            run_stream(cfg, init_state(16, 2), keys, qs, ts, batch=8,
+                       sink=sink, residency=ResidencyMap(N_KEYS, 16),
+                       pipeline_depth=2)
+
+
+# ------------------------------------------------- sink-only parity (dense)
+@pytest.mark.parametrize("mode", ["fast", "exact"])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_pipelined_sink_parity(policy, mode):
+    """Dense pipelined driver == serial driver, outputs and stored bytes."""
+    keys, qs, ts = _stream()
+    cfg = _cfg(policy)
+    a, sa, ska, _ = _run(cfg, keys, qs, ts, mode=mode, depth=1)
+    b, sb, skb, _ = _run(cfg, keys, qs, ts, mode=mode, depth=2)
+    _assert_bit_equal(a, b)
+    assert sa == sb
+    ska.close(), skb.close()
+
+
+# --------------------------------------- residency + L2 + splits parity
+@pytest.mark.parametrize("mode", ["fast", "exact"])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_pipelined_residency_parity(policy, mode):
+    """Residency pipelined driver == serial, with the host-RAM L2 tier on
+    and oversized flush groups forced to split (16 slots vs up to 48
+    distinct keys per group) — the full state hierarchy under overlap."""
+    keys, qs, ts = _stream()
+    cfg = _cfg(policy)
+    a, sa, ska, rma = _run(cfg, keys, qs, ts, mode=mode, depth=1,
+                           n_slots=16, l2=24)
+    b, sb, skb, rmb = _run(cfg, keys, qs, ts, mode=mode, depth=2,
+                           n_slots=16, l2=24)
+    _assert_bit_equal(a, b)
+    assert sa == sb
+    # the regime actually exercised splits and rehydrations on both sides
+    assert rma.stats.splits > 0 and rmb.stats.splits > 0
+    assert rma.stats.misses > 0
+    # pipelined ordering ran through the epoch lane, not dispatcher FIFO
+    st = skb.stats
+    assert st.epochs_staged > 0 and st.staged_reads > 0
+    ska.close(), skb.close()
+
+
+def test_pipelined_epoch_lane_parks_and_drains():
+    """Under overlap some staged reads must arrive before their epoch's
+    flush has landed; they park and drain (read-after-flush made
+    observable, not just inferred from bit-equality)."""
+    keys, qs, ts = _stream(n_events=512, skew=0.6)   # flat -> heavy churn
+    cfg = _cfg("pp")
+    _, _, sink, _ = _run(cfg, keys, qs, ts, mode="fast", depth=2,
+                         n_slots=16, sink_group=1)
+    st = sink.stats
+    assert st.epochs_staged > 0
+    assert st.parked_reads > 0
+    assert st.host_pack_s > 0.0 and st.device_wait_s >= 0.0
+    snap = sink.snapshot()
+    for col in ("host_pack_s", "device_wait_s", "overlap_s",
+                "overlap_frac", "epochs_staged", "parked_reads"):
+        assert col in snap
+    sink.close()
+
+
+# ------------------------------------------------ batch-take equivalence
+def _check_batch_take(groups, n_slots=12, num_keys=32):
+    """Vectorized victim take == per-miss serial take, decision for
+    decision (slot tables, evictions, miss sets, order)."""
+    a = ResidencyMap(num_keys, n_slots)
+    b = ResidencyMap(num_keys, n_slots)
+    for g in groups:
+        g = np.asarray(g, np.int64)
+        ra = a.assign_group(g, batch_take=False)
+        rb = b.assign_group(g, batch_take=True)
+        assert np.array_equal(ra.slot, rb.slot)
+        assert np.array_equal(ra.miss_keys, rb.miss_keys)
+        assert np.array_equal(ra.miss_slots, rb.miss_slots)
+        assert np.array_equal(ra.miss_fresh, rb.miss_fresh)
+        assert np.array_equal(ra.evicted, rb.evicted)
+    assert np.array_equal(a.slot_of_key, b.slot_of_key)
+    assert np.array_equal(a.key_of_slot, b.key_of_slot)
+
+
+def test_batch_take_equivalence_fixed_examples():
+    """Always-run twins of the property test (hypothesis optional)."""
+    _check_batch_take([[0, 1, 2, 3], [4, 5], [0, 6], [7] * 3])
+    _check_batch_take([list(range(10)), [10, 11], [0, 1, 12],
+                       [3, 13, 14, 15], list(range(16, 26))])
+    _check_batch_take([[31], [30], [29], [28]], n_slots=2)
+
+
+def test_batch_take_equivalence_property():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=80, deadline=None)
+    @hyp.given(st.lists(st.lists(st.integers(0, 31), min_size=1,
+                                 max_size=10),
+                        min_size=1, max_size=20))
+    def run(groups):
+        _check_batch_take(groups)
+
+    run()
+
+
+# ------------------------------------- randomized stream shapes (property)
+def _check_pipelined_stream(key_seq, sink_group, n_slots):
+    """Property body: pipelined == serial over an arbitrary key sequence
+    with forced splits and rehydration churn.  Bit-equality of outputs
+    and durable bytes is the per-key-FIFO + read-after-flush oracle (see
+    module docstring)."""
+    n = len(key_seq)
+    rng = np.random.default_rng(7)
+    keys = np.asarray(key_seq, np.int32)
+    qs = rng.lognormal(2.0, 1.0, n).astype(np.float32)
+    ts = np.cumsum(rng.exponential(15.0, n)).astype(np.float32)
+    cfg = _cfg("pp")
+    a, sa, ska, _ = _run(cfg, keys, qs, ts, mode="fast", depth=1, batch=8,
+                         sink_group=sink_group, n_slots=n_slots)
+    b, sb, skb, _ = _run(cfg, keys, qs, ts, mode="fast", depth=2, batch=8,
+                         sink_group=sink_group, n_slots=n_slots)
+    _assert_bit_equal(a, b)
+    assert sa == sb
+    ska.close(), skb.close()
+
+
+def test_pipelined_random_shapes_fixed_examples():
+    """Always-run twins: a rehydration-heavy round-robin (every group
+    evicts what the next one needs) and a forced-split stream (more
+    distinct keys per flush group than slots)."""
+    _check_pipelined_stream([k % 24 for k in range(72)], sink_group=2,
+                            n_slots=8)
+    _check_pipelined_stream(
+        np.random.default_rng(3).integers(0, 48, 96).tolist(),
+        sink_group=4, n_slots=8)
+
+
+def test_pipelined_random_shapes_property():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=10, deadline=None)
+    @hyp.given(st.lists(st.integers(0, 31), min_size=8, max_size=72),
+               st.integers(1, 4))
+    def run(key_seq, sink_group):
+        _check_pipelined_stream(key_seq, sink_group, n_slots=8)
+
+    run()
+
+
+# ------------------------------------------------ 8-device sharded parity
+ENV = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+       "JAX_PLATFORMS": "cpu"}
+
+
+@pytest.mark.parametrize("layout", ["block", "virtual"])
+def test_sharded_pipelined_parity_8dev(layout):
+    """Sharded engine ``run_stream(pipeline_depth=2)`` == serial on an
+    8-device mesh, residency hierarchy active (subprocess so the fake
+    devices never leak into this process's jax)."""
+    code = f"""
+        import jax, numpy as np
+        from repro.features.engine import ShardedFeatureEngine
+        from repro.features.spec import ProfileSpec
+
+        mesh = jax.make_mesh((8,), ("data",))
+        spec = ProfileSpec(windows=(60., 3600.))
+        rng = np.random.default_rng(0)
+        keys = rng.integers(0, 128, 768).astype(np.int32)
+        qs = rng.lognormal(3, 1, 768).astype(np.float32)
+        ts = np.sort(rng.uniform(0, 2e5, 768)).astype(np.float32)
+        kw = dict(key_weights=np.bincount(keys, minlength=128)) \\
+            if "{layout}" == "virtual" else {{}}
+
+        def drive(depth):
+            eng = ShardedFeatureEngine(spec.engine_config(), 128,
+                                       mesh=mesh, layout="{layout}", **kw)
+            sink = eng.make_sink(l2=True)
+            st, info = eng.run_stream(eng.init_resident_state(8), keys,
+                                      qs, ts, batch_per_shard=16,
+                                      rng=jax.random.PRNGKey(3),
+                                      sink=sink, sink_group=2, residency=8,
+                                      pipeline_depth=depth)
+            sink.flush()
+            stored = {{}}
+            for s in sink.stores:
+                stored.update(s.data)
+            sink.close()
+            return info, stored
+
+        a, sa = drive(1)
+        b, sb = drive(2)
+        assert np.array_equal(np.asarray(a.z), np.asarray(b.z))
+        assert np.array_equal(np.asarray(a.features),
+                              np.asarray(b.features))
+        assert sa == sb
+        print("PARITY-OK")
+    """
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=ENV,
+                       cwd=os.path.dirname(os.path.dirname(__file__)) or ".")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "PARITY-OK" in r.stdout
