@@ -350,7 +350,165 @@ def _run_persist_suite(n_events, n_keys, batch, seed):
         emit("engine_persist", row)
     rows.append(_run_persist_fault_row(n_events, n_keys, batch,
                                        keys, qs, ts, h, budget))
+    rows += _run_persist_compaction_rows(n_events, n_keys, batch,
+                                         keys, qs, ts, h, budget)
     return rows
+
+
+class _TimedSink:
+    """Sink proxy recording per-``submit`` wall latency (the serial
+    sink flushes inline, so each sample is one flush group's end-to-end
+    path — including any inline compaction riding it)."""
+
+    def __init__(self, sink):
+        self._sink = sink
+        self.lat: list = []
+
+    def submit(self, *a, **kw):
+        t0 = time.perf_counter()
+        self._sink.submit(*a, **kw)
+        self.lat.append(time.perf_counter() - t0)
+
+    def __getattr__(self, name):
+        return getattr(self._sink, name)
+
+
+def _run_persist_compaction_rows(n_events, n_keys, batch, keys, qs, ts,
+                                 h, budget):
+    """Inline-vs-background compaction A/B under slept-IO, one row each.
+
+    Serial sink (queue_depth=0) on a single slept-IO durable store, so
+    every ``submit`` *is* the flush path: under ``compaction="inline"``
+    the periodic segment rewrite rides it (visible as flush-latency
+    spikes and ``compaction_stall_s``), under ``"background"`` the
+    compactor thread absorbs it and the stall column must be exactly
+    zero — asserted here, so a regression fails the bench (CI runs this
+    suite with ``--smoke``).  The two variants are interleaved rep by
+    rep to ride the same container noise.
+
+    The stream uses even entity ids only; after each run the store is
+    reopened lazily and probed with odd (absent) ids — a pure point-miss
+    workload.  The background variant compacts with a 10-bit/key bloom
+    trailer, the inline variant with the byte-compatible default (none),
+    so the two rows' ``miss_blocks_read`` columns show what the filter
+    saves on the exact same probe set."""
+    import shutil
+    import tempfile
+
+    from repro.core import init_state
+    from repro.core.stream import run_stream
+    from repro.streaming.durable import DurableStore
+    from repro.streaming.kvstore import StorageModel
+    from repro.streaming.persistence import WriteBehindSink
+
+    cfg = EngineConfig(taus=(60.0, 3600.0, 86400.0), h=h, budget=budget,
+                       alpha=1.0, policy="unfiltered")
+    even = keys.astype(np.int64) * 2
+    variants = {
+        "inline": dict(compaction="inline", bloom_bits_per_key=0),
+        "background": dict(compaction="background", bloom_bits_per_key=10,
+                           compact_rate_bytes_per_s=64e6),
+    }
+
+    def once(mode, tdir):
+        # seg_block_rows=64: enough blocks that the point-miss probe
+        # phase has something for the bloom filter to save
+        store = DurableStore(tdir, model=StorageModel(sleep_io=True),
+                             compact_threshold_bytes=1 << 16,
+                             seg_block_rows=64, **variants[mode])
+        sink = WriteBehindSink(cfg, stores=[store], queue_depth=0)
+        tsink = _TimedSink(sink)
+        state = init_state(2 * n_keys, len(cfg.taus))
+        t0 = time.perf_counter()
+        state, _ = run_stream(cfg, state, even, qs, ts, batch=batch,
+                              mode="fast", rng=jax.random.PRNGKey(0),
+                              collect_info=False, sink=tsink)
+        sink.flush()
+        jax.block_until_ready(state.agg)
+        wall = time.perf_counter() - t0
+        if mode == "background":
+            store.wait_for_compaction()
+        d = store.durable
+        out = {"wall": wall, "lat": tsink.lat,
+               "stall": d.compaction_stall_s,
+               "throttle": d.compact_throttle_s,
+               "compactions": d.compactions,
+               "tail_rewrites": d.wal_tail_rewrites,
+               "submit_wait_s": sink.stats.submit_wait_s}
+        store.compact()        # publish a segment for the probe phase
+        sink.close()
+        store.close()          # explicit stores= are not sink-owned
+        return out
+
+    def probe_misses(tdir, n_probe=2048):
+        rng = np.random.default_rng(99)
+        odd = rng.integers(0, n_keys, n_probe).astype(np.int64) * 2 + 1
+        with DurableStore(tdir, lazy_recovery=True) as r:
+            got = r.multi_get(odd)
+            assert all(g is None for g in got)   # soundness at bench scale
+            d = r.durable
+            return {"miss_probes": int(d.seg_probes),
+                    "miss_blocks_read": int(d.seg_blocks_read),
+                    "bloom_probes": int(d.bloom_probes),
+                    "bloom_skips": int(d.bloom_skips),
+                    "bloom_false_positives": int(d.bloom_false_positives)}
+
+    warm = tempfile.mkdtemp(prefix="bench-compact-warm-")
+    try:
+        once("inline", warm)                      # compile + warm caches
+    finally:
+        shutil.rmtree(warm, ignore_errors=True)
+    acc = {m: {"lat": [], "best": None} for m in variants}
+    dirs = {}
+    try:
+        for rep in range(3):
+            for mode in ("inline", "background"):     # interleaved A/B
+                tdir = tempfile.mkdtemp(prefix=f"bench-compact-{mode}-")
+                res = once(mode, tdir)
+                a = acc[mode]
+                a["lat"] += res["lat"]
+                if a["best"] is None or res["wall"] < a["best"]["wall"]:
+                    a["best"] = res
+                    if mode in dirs:
+                        shutil.rmtree(dirs[mode], ignore_errors=True)
+                    dirs[mode] = tdir
+                else:
+                    shutil.rmtree(tdir, ignore_errors=True)
+        rows = []
+        for mode in ("inline", "background"):
+            best, lat = acc[mode]["best"], np.asarray(acc[mode]["lat"])
+            if mode == "background":
+                assert best["stall"] == 0.0, (
+                    "background compaction rode the flush path: "
+                    f"compaction_stall_s={best['stall']}")
+            row = {"suite": "persist", "mode": "fast",
+                   "policy": "unfiltered",
+                   "variant": f"compaction-{mode}", "batch": batch,
+                   "n_events": n_events,
+                   "compaction": mode,
+                   "bloom_bits_per_key":
+                       variants[mode]["bloom_bits_per_key"],
+                   "events_per_s": round(n_events / best["wall"], 1),
+                   "flush_p50_ms": round(
+                       float(np.percentile(lat, 50)) * 1e3, 4),
+                   "flush_p99_ms": round(
+                       float(np.percentile(lat, 99)) * 1e3, 4),
+                   "compaction_stall_s": round(best["stall"], 4),
+                   "compact_throttle_s": round(best["throttle"], 4),
+                   "compactions": best["compactions"],
+                   "wal_tail_rewrites": best["tail_rewrites"],
+                   "submit_wait_s": round(best["submit_wait_s"], 4)}
+            pr = probe_misses(dirs[mode])
+            row.update(pr)
+            row["bloom_skip_rate"] = round(
+                pr["bloom_skips"] / max(pr["bloom_probes"], 1), 4)
+            row.update(memory_watermark())
+            rows.append(row)
+            emit("engine_persist", row)
+        return rows
+    finally:
+        for tdir in dirs.values():
+            shutil.rmtree(tdir, ignore_errors=True)
 
 
 def _run_persist_fault_row(n_events, n_keys, batch, keys, qs, ts, h,

@@ -80,6 +80,10 @@ OPTION_LINTS = (
     OptionLint(re.compile(r'admission="([A-Za-z0-9_]+)"'),
                'admission="{name}"', "src/repro/serving/frontend.py",
                r"^ADMISSION\s*=\s*\(([^)]*)\)", "ADMISSION"),
+    # compaction-mode names (`compaction="background"`)
+    OptionLint(re.compile(r'compaction="([A-Za-z0-9_]+)"'),
+               'compaction="{name}"', "src/repro/streaming/durable.py",
+               r"^COMPACTION\s*=\s*\(([^)]*)\)", "COMPACTION"),
 )
 
 
@@ -102,6 +106,14 @@ KNOB_LINTS = (
              r"pipeline_depth:\s*int\s*=\s*1"),
     KnobLint("adaptive_wait=", "src/repro/serving/frontend.py",
              r"adaptive_wait:\s*bool\s*=\s*False"),
+    # storage-plane knobs: segment bloom filter sizing, background-
+    # compaction rate limit, measured-IO admission watermark
+    KnobLint("bloom_bits_per_key=", "src/repro/streaming/durable.py",
+             r"bloom_bits_per_key:\s*int\s*=\s*0"),
+    KnobLint("compact_rate_bytes_per_s=", "src/repro/streaming/durable.py",
+             r"compact_rate_bytes_per_s:\s*Optional\[float\]\s*=\s*None"),
+    KnobLint("max_unsynced_bytes=", "src/repro/streaming/persistence.py",
+             r"max_unsynced_bytes:\s*Optional\[int\]\s*=\s*None"),
 )
 
 

@@ -358,7 +358,13 @@ def run_stream(cfg: EngineConfig, state: ProfileState, keys, qs, ts,
     touched partition as one atomic WAL batch under one fsync
     (``streaming/durable.py``), so a crash loses at most the trailing
     unflushed groups and recovery replays the log to exactly a group
-    boundary — never half a group.  The caller owns the sink lifecycle —
+    boundary — never half a group.  A sink built with
+    ``max_unsynced_bytes=`` adds measured-IO admission on top of the
+    bounded queue: this loop is held at ``submit()`` while more than that
+    many submitted bytes remain un-landed (un-fsynced, for the durable
+    backend), so a slow disk backpressures the engine by real IO
+    completion, not by modeled service times.  The caller owns the sink
+    lifecycle —
     call ``sink.flush()`` (or close it) to wait for the trailing groups.  State values are identical to the
     single-scan path (the engine numerics are
     compilation-context-invariant — ``kernels/detmath.py``).

@@ -734,8 +734,10 @@ class ShardedFeatureEngine:
         ``**kw`` passes through to the sink — in particular
         ``backend="durable", store_dir=...`` puts real WAL+compaction
         stores (``streaming/durable.py``) behind this engine, one
-        partition directory per shard; ``hydrate_from_dir`` is the
-        matching restart path.
+        partition directory per shard, and ``store_kw=`` forwards
+        storage-plane knobs to those stores (``compaction="background"``,
+        ``bloom_bits_per_key=``, ``compact_rate_bytes_per_s=``);
+        ``hydrate_from_dir`` is the matching restart path.
         """
         return persistence.WriteBehindSink(
             self.cfg, n_partitions=self.n_shards,

@@ -226,6 +226,7 @@ def run_restart_demo(spec: ProfileSpec, num_entities: int, keys, qs, ts,
                      rng=None, residency: Optional[int] = None,
                      sink_group: int = 4, backend: str = "memory",
                      store_dir: Optional[str] = None,
+                     store_kw: Optional[dict] = None,
                      **engine_overrides) -> dict:
     """End-to-end score -> persist -> restart -> score round trip.
 
@@ -239,7 +240,9 @@ def run_restart_demo(spec: ProfileSpec, num_entities: int, keys, qs, ts,
     ``store_dir=``) runs against real on-disk WAL+compaction stores and
     makes the crash real: the sink and its store handles are *closed*, and
     recovery reopens fresh stores from the directory — WAL replay included
-    — before hydrating.  The returned dict then carries a ``recovery``
+    — before hydrating.  ``store_kw=`` forwards storage-plane knobs
+    (``compaction="background"``, ``bloom_bits_per_key=``, ...) to both
+    the sink-opened stores and the recovery reopen.  The returned dict then carries a ``recovery``
     entry with the measured recovery counters (batches replayed, recovery
     seconds) summed over partitions.
 
@@ -265,7 +268,8 @@ def run_restart_demo(spec: ProfileSpec, num_entities: int, keys, qs, ts,
                                  **engine_overrides)
     pipe.scorer = init_scorer(_jax.random.PRNGKey(1), spec.feature_dim)
     rng = _jax.random.PRNGKey(0) if rng is None else rng
-    sink = pipe.make_sink(backend=backend, store_dir=store_dir)
+    sink = pipe.make_sink(backend=backend, store_dir=store_dir,
+                          **({"store_kw": store_kw} if store_kw else {}))
     state, info = pipe.process_stream(pipe.init(residency=residency), keys,
                                       qs, ts, rng=rng,
                                       batch_per_shard=batch_per_shard,
@@ -278,7 +282,8 @@ def run_restart_demo(spec: ProfileSpec, num_entities: int, keys, qs, ts,
         # a real crash boundary: final group-commit fsync, handles closed;
         # everything below this line reads only what is on disk
         sink.close()
-        recovered_stores = pipe.engine.reopen_stores(store_dir)
+        recovered_stores = pipe.engine.reopen_stores(store_dir,
+                                                     **(store_kw or {}))
         recovery = {}
         for s in recovered_stores:
             for k, v in s.measured().items():

@@ -46,7 +46,8 @@ from typing import FrozenSet, List, Optional, Tuple
 
 import numpy as np
 
-from repro.streaming.durable import WAL_NAME, DurableStore, FileOps
+from repro.streaming.durable import (SEG_SUFFIX, WAL_NAME, DurableStore,
+                                     FileOps)
 
 __all__ = ["TransientIOError", "FaultPlan", "FaultyFileOps",
            "StallingReads", "flip_bit", "truncate_at", "crash_cfg",
@@ -68,6 +69,13 @@ class FaultPlan:
     simply re-runs the append under the next count; ``kill_at_write``
     writes ``kill_partial_bytes`` of the record (clamped below a full
     record so the tail is genuinely torn) and SIGKILLs the process.
+
+    ``kill_at_seg_write`` is the background-compaction counterpart: it
+    counts ``write`` calls on *unpublished* segment files (``*.seg.tmp``,
+    the pre-rename build target) and SIGKILLs after
+    ``kill_seg_partial_bytes`` of the Nth such write reach the OS — the
+    crash lands strictly before the atomic rename, so recovery must
+    discard the torn ``.tmp`` and replay the still-intact WAL.
     """
     transient_at: FrozenSet[int] = frozenset()
     transient_every: int = 0
@@ -75,6 +83,8 @@ class FaultPlan:
     stall_s: float = 0.0
     kill_at_write: int = 0
     kill_partial_bytes: int = 24
+    kill_at_seg_write: int = 0
+    kill_seg_partial_bytes: int = 4096
 
     def wants_transient(self, n: int) -> bool:
         return (self.fail_always or n in self.transient_at
@@ -111,26 +121,64 @@ class _FaultyFile:
         return getattr(self._f, name)
 
 
-class FaultyFileOps(FileOps):
-    """``FileOps`` that wraps writable WAL handles in ``_FaultyFile``.
+class _FaultySegFile:
+    """Unpublished-segment (``*.seg.tmp``) proxy: the kill fires mid-build,
+    strictly before the atomic rename publishes the segment."""
 
-    Counts are process-wide per instance (``wal_writes``,
+    def __init__(self, f, ops: "FaultyFileOps"):
+        self._f = f
+        self._ops = ops
+
+    # the segment build opens its target as a context manager; dunder
+    # lookups bypass __getattr__, so delegate them explicitly
+    def __enter__(self):
+        self._f.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        return self._f.__exit__(*exc)
+
+    def write(self, buf) -> int:
+        ops = self._ops
+        plan = ops.plan
+        ops.seg_writes += 1
+        if (plan.kill_at_seg_write
+                and ops.seg_writes == plan.kill_at_seg_write):
+            k = min(int(plan.kill_seg_partial_bytes), max(len(buf) - 1, 0))
+            self._f.write(buf[:k])
+            self._f.flush()     # push the torn .tmp prefix to the OS
+            os.kill(os.getpid(), signal.SIGKILL)
+        return self._f.write(buf)
+
+    def __getattr__(self, name):
+        return getattr(self._f, name)
+
+
+class FaultyFileOps(FileOps):
+    """``FileOps`` that wraps writable WAL handles in ``_FaultyFile`` and
+    in-flight segment builds (``*.seg.tmp``) in ``_FaultySegFile``.
+
+    Counts are process-wide per instance (``wal_writes``, ``seg_writes``,
     ``injected_transients``) so a test can assert exactly how many faults
-    fired.  Segment/compaction files pass through untouched — the WAL
-    append is the deterministic injection point.
+    fired.  Published segments and sidecar indexes pass through untouched —
+    the WAL append and the pre-rename segment build are the deterministic
+    injection points.
     """
 
     def __init__(self, plan: FaultPlan):
         self.plan = plan
         self.wal_writes = 0
+        self.seg_writes = 0
         self.injected_transients = 0
 
     def open(self, path: str, mode: str):
         f = super().open(path, mode)
-        if os.path.basename(path) == WAL_NAME and ("a" in mode
-                                                   or "+" in mode
-                                                   or "w" in mode):
+        name = os.path.basename(path)
+        writable = "a" in mode or "+" in mode or "w" in mode
+        if name == WAL_NAME and writable:
             return _FaultyFile(f, self)
+        if name.endswith(SEG_SUFFIX + ".tmp") and writable:
+            return _FaultySegFile(f, self)
         return f
 
 
@@ -265,6 +313,10 @@ def _victim_main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kill-at-write", type=int, default=0)
     ap.add_argument("--kill-partial-bytes", type=int, default=24)
+    ap.add_argument("--kill-at-seg-write", type=int, default=0)
+    ap.add_argument("--compaction", default="inline",
+                    choices=("inline", "background"))
+    ap.add_argument("--compact-threshold", type=int, default=1 << 40)
     args = ap.parse_args(argv)
 
     import jax
@@ -273,11 +325,19 @@ def _victim_main(argv: Optional[List[str]] = None) -> None:
     from repro.streaming.persistence import WriteBehindSink
 
     plan = FaultPlan(kill_at_write=args.kill_at_write,
-                     kill_partial_bytes=args.kill_partial_bytes)
-    # one partition, serial sink, compaction disabled: exactly one WAL
-    # append per non-empty flush group, so kill_at_write=N dies in chunk N
+                     kill_partial_bytes=args.kill_partial_bytes,
+                     kill_at_seg_write=args.kill_at_seg_write)
+    # one partition, serial sink; with the huge default threshold
+    # compaction never triggers and exactly one WAL append lands per
+    # non-empty flush group, so kill_at_write=N dies in chunk N.  The
+    # background-kill matrix instead passes a tiny --compact-threshold and
+    # --kill-at-seg-write so the compactor thread dies mid-segment-build
+    # at a nondeterministic point in the chunk sequence (close() joins the
+    # compactor, so a crossed threshold guarantees the kill fires before
+    # CLEAN is printed).
     store = DurableStore(args.dir, fileops=FaultyFileOps(plan),
-                         compact_threshold_bytes=1 << 40)
+                         compaction=args.compaction,
+                         compact_threshold_bytes=args.compact_threshold)
     cfg = crash_cfg(args.policy)
     sink = WriteBehindSink(cfg, stores=[store], queue_depth=0)
     chunk = _chunk_events()
@@ -299,20 +359,31 @@ def _victim_main(argv: Optional[List[str]] = None) -> None:
 
 
 def spawn_kill_mid_flush(store_dir: str, *, policy: str, mode: str,
-                         kill_at_write: int, n_chunks: int = 4,
-                         seed: int = 0, timeout_s: float = 300.0):
+                         kill_at_write: int = 0, n_chunks: int = 4,
+                         seed: int = 0, timeout_s: float = 300.0,
+                         kill_at_seg_write: int = 0,
+                         compaction: str = "inline",
+                         compact_threshold: int = 1 << 40):
     """Run the victim process to its SIGKILL; returns
     ``(returncode, acked_events, stderr)``.
 
     ``returncode == -signal.SIGKILL`` and ``acked_events`` (the largest
-    ``ACK``, 0 if none) tell the caller exactly which durable prefix the
-    recovered store must equal.  The victim inherits the environment
-    (``PYTHONPATH=src`` under the test runner).
+    ``ACK``, 0 if none) tell the caller which durable prefix the recovered
+    store must cover.  For ``kill_at_write`` the kill is synchronous with
+    the append, so recovery equals the acked prefix exactly; for
+    ``kill_at_seg_write`` (background-compaction kill) the compactor
+    thread dies at an arbitrary point relative to the foreground chunks,
+    so recovery equals *some* whole-chunk prefix ``>= acked_events``.  The
+    victim inherits the environment (``PYTHONPATH=src`` under the test
+    runner).
     """
     cmd = [sys.executable, "-m", "repro.streaming.faults",
            "--dir", store_dir, "--policy", policy, "--mode", mode,
            "--n-chunks", str(n_chunks), "--seed", str(seed),
-           "--kill-at-write", str(kill_at_write)]
+           "--kill-at-write", str(kill_at_write),
+           "--kill-at-seg-write", str(kill_at_seg_write),
+           "--compaction", compaction,
+           "--compact-threshold", str(compact_threshold)]
     proc = subprocess.run(cmd, capture_output=True, text=True,
                           timeout=timeout_s)
     acks = [int(ln.split()[1]) for ln in proc.stdout.splitlines()

@@ -307,11 +307,23 @@ class KVStore:
     def waf(self) -> float:
         return self.model.waf(self.counters.bytes_written)
 
+    def memtable_bytes(self) -> int:
+        """Resident payload bytes of the in-memory table (a host-RAM
+        scan, O(rows)).  Distinct from ``DurableStore.storage_bytes()``,
+        which reports *on-disk* WAL/segment lengths from counters with
+        zero reads — the compaction trigger uses that one; this one is
+        for memory-watermark reporting."""
+        return sum(len(r) for r in self.data.values())
+
     def measured(self) -> dict:
         """Measured durability counters.  The modeled in-memory store has
         none (empty dict); ``streaming.durable.DurableStore`` overrides
-        this with real fsync/byte/recovery numbers, which the sink's
-        ``snapshot()`` aggregates next to the modeled columns."""
+        this with real fsync/byte/recovery numbers — including the
+        storage-plane columns (``io_write_s``/``io_sync_s``, bloom
+        ``bloom_probes``/``bloom_skips``/``bloom_false_positives``,
+        ``compaction_stall_s``/``compact_throttle_s``) — which the sink's
+        ``snapshot()`` aggregates next to the modeled columns (and, for
+        the write/sync split, per partition)."""
         return {}
 
 

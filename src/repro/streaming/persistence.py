@@ -143,6 +143,16 @@ class SinkStats:
     epochs_staged: int = 0
     staged_reads: int = 0
     parked_reads: int = 0
+    # measured-IO admission (``max_unsynced_bytes=``): submits that hit
+    # the outstanding-unsynced-WAL-bytes watermark (the wait itself lands
+    # in ``submit_wait_s``), and the high-water mark of outstanding bytes
+    admission_waits: int = 0
+    unsynced_bytes_peak: int = 0
+    # byte-capped L2 (``HostL2Cache(capacity_bytes=)``): resident payload
+    # bytes and rows dropped by the watermark shed loop (synced at
+    # ``snapshot`` like the other l2_* columns)
+    l2_bytes: int = 0
+    l2_shed_rows: int = 0
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -299,6 +309,16 @@ class WriteBehindSink:
     order and the one-thread-per-store invariant, so last-write-wins
     semantics are unchanged.
 
+    Measured-IO admission: ``max_unsynced_bytes=`` caps the payload bytes
+    handed to the store workers but not yet landed (for the durable
+    backend: not yet past the batch's group-commit fsync).  Above the
+    watermark ``submit()`` blocks — counted in ``admission_waits`` /
+    ``submit_wait_s`` — so a slow disk backpressures the engine by *real*
+    write/fsync completion, not by modeled service time or queue slots.
+    ``store_kw=`` forwards extra ``DurableStore`` knobs
+    (``compaction="background"``, ``bloom_bits_per_key=``, ...) to the
+    sink-opened partition stores.
+
     Thread-safety: ``submit``/``submit_read``/``flush``/``close`` are
     driver-thread calls; each store is touched by exactly one worker
     thread until ``flush``/``close`` returns.
@@ -315,7 +335,9 @@ class WriteBehindSink:
                  store_dir: Optional[str] = None,
                  retry: Optional[RetryPolicy] = None,
                  overflow: str = "block",
-                 l2=None):
+                 l2=None,
+                 max_unsynced_bytes: Optional[int] = None,
+                 store_kw: Optional[dict] = None):
         self.cfg = cfg
         self.serde = SerDe(len(cfg.taus))
         self.full_stream = cfg.policy in FULL_STREAM_POLICIES
@@ -327,13 +349,19 @@ class WriteBehindSink:
                              f"(expected one of {OVERFLOW_POLICIES})")
         self._owns_stores = stores is None
         if stores is not None:
+            if store_kw:
+                raise ValueError("store_kw= applies only to sink-opened "
+                                 "durable stores, not explicit stores=")
             self.stores = list(stores)
         elif backend == "durable":
             if store_dir is None:
                 raise ValueError("backend='durable' requires store_dir=")
             self.stores = open_partition_stores(
-                store_dir, n_partitions, model=storage, seed=seed)
+                store_dir, n_partitions, model=storage, seed=seed,
+                **(store_kw or {}))
         else:
+            if store_kw:
+                raise ValueError("store_kw= requires backend='durable'")
             self.stores = [KVStore(storage or StorageModel(), seed=seed + i)
                            for i in range(n_partitions)]
         self._partition_fn = partition_fn or \
@@ -363,6 +391,18 @@ class WriteBehindSink:
         self.retry = retry or RetryPolicy()
         self._retry_lock = threading.Lock()
         self._overflow = overflow
+        # measured-IO admission: outstanding bytes submitted to the store
+        # workers but not yet landed (and group-commit-fsynced, for the
+        # durable backend — the decrement happens after ``multi_put``
+        # returns, which is after the WAL fsync).  ``submit()`` blocks
+        # above the watermark, so a slow disk backpressures the engine by
+        # real IO completion time, not by modeled service times.
+        self._max_unsynced = (None if max_unsynced_bytes is None
+                              else int(max_unsynced_bytes))
+        if self._max_unsynced is not None and self._max_unsynced <= 0:
+            raise ValueError("max_unsynced_bytes must be > 0")
+        self._unsynced = 0
+        self._unsynced_cv = threading.Condition()
         self.stats = SinkStats()
         self.overlap = _OverlapMeter()
         # epoch-gated read lane (see ``stage_epoch``): key -> epoch of the
@@ -424,6 +464,19 @@ class WriteBehindSink:
             # rows and eventually deadlock on the bounded queue
             raise RuntimeError("submit() on a closed WriteBehindSink")
         self._check()
+        if (self._max_unsynced is not None
+                and self._unsynced > self._max_unsynced):
+            # measured-IO admission: hold the driver until the store
+            # workers have landed (and fsynced) enough outstanding bytes.
+            # A single oversized block still passes at zero outstanding.
+            t0 = time.perf_counter()
+            self.stats.admission_waits += 1
+            with self._unsynced_cv:
+                while (self._unsynced > self._max_unsynced
+                       and self._exc is None):
+                    self._unsynced_cv.wait(0.05)
+            self.stats.submit_wait_s += time.perf_counter() - t0
+            self._check()
         if self._serial:
             self._flush_block(keys, z, valid, rows, seq)
             return
@@ -688,8 +741,9 @@ class WriteBehindSink:
         # WAF — physical WAL+segment bytes per logical byte ingested —
         # reported *next to* the modeled ``waf`` column, never replacing it
         measured: dict = {}
-        for s in self.stores:
-            for k, v in s.measured().items():
+        per_part = [s.measured() for s in self.stores]
+        for m in per_part:
+            for k, v in m.items():
                 measured[k] = measured.get(k, 0) + v
         if measured:
             measured["measured_bytes_written"] = (
@@ -698,6 +752,16 @@ class WriteBehindSink:
                 measured["measured_bytes_written"]
                 / max(agg["bytes_written"], 1))
             agg["measured"] = measured
+            # per-partition measured IO: the admission watermark throttles
+            # on *real* write/fsync completion, so the per-store split is
+            # the observable a slow-disk diagnosis needs
+            agg["measured_per_partition"] = [
+                {"io_write_s": round(m.get("io_write_s", 0.0), 6),
+                 "io_sync_s": round(m.get("io_sync_s", 0.0), 6),
+                 "wal_bytes": m.get("wal_bytes", 0),
+                 "fsyncs": m.get("fsyncs", 0)} if m else {}
+                for m in per_part]
+        agg["unsynced_bytes"] = self._unsynced
         # host/device split: totals + measured wall-clock intersection
         self.stats.host_pack_s = self.overlap.total[_OverlapMeter.HOST]
         self.stats.device_wait_s = self.overlap.total[_OverlapMeter.DEVICE]
@@ -711,6 +775,8 @@ class WriteBehindSink:
             caches = list({id(c): c for c in self.l2}.values())
             self.stats.l2_hits = sum(c.hits for c in caches)
             self.stats.l2_demotions = sum(c.demotions for c in caches)
+            self.stats.l2_bytes = sum(c.bytes for c in caches)
+            self.stats.l2_shed_rows = sum(c.shed_rows for c in caches)
             agg["l2_rows"] = sum(len(c) for c in caches)
             agg["l2_inserts"] = sum(c.inserts for c in caches)
             agg["l2_read_fills"] = sum(c.read_fills for c in caches)
@@ -811,9 +877,17 @@ class WriteBehindSink:
                         raise
                 elif item[0] == "epoch":
                     self._mark_applied(i, item[1])
-                elif self._exc is None:
-                    _, ks, rows = item
-                    self._exec_put(i, ks, rows)
+                else:
+                    _, ks, rows, nbytes = item
+                    try:
+                        if self._exc is None:
+                            self._exec_put(i, ks, rows)
+                    finally:
+                        # always release the admission budget — including
+                        # the skipped-on-poison path, or a blocked
+                        # ``submit()`` could outlive the error it should
+                        # be surfacing
+                        self._unsynced_sub(nbytes)
             except BaseException as e:
                 self._exc = e
             finally:
@@ -839,13 +913,38 @@ class WriteBehindSink:
                 ticket._deliver(idx, (), exc=e)
                 raise
 
+    @staticmethod
+    def _payload_bytes(rows) -> int:
+        """Logical payload bytes of one partition's packed rows (the unit
+        the ``max_unsynced_bytes`` watermark is counted in; WAL framing
+        adds a small constant per batch on top)."""
+        if isinstance(rows, np.ndarray):
+            return int(rows.nbytes)
+        return sum(len(r) for r in rows)
+
     def _put(self, p: int, keys, rows, inline: bool = False) -> None:
         """Route one partition's packed rows to its store (worker thread,
         or directly under the serial strawman / a degraded flush)."""
+        nbytes = self._payload_bytes(rows)
+        self._unsynced_add(nbytes)
         if self._serial or inline:
-            self._exec_put(p, keys, rows)
+            try:
+                self._exec_put(p, keys, rows)
+            finally:
+                self._unsynced_sub(nbytes)
         else:
-            self._store_qs[p].put(("put", keys, rows))
+            self._store_qs[p].put(("put", keys, rows, nbytes))
+
+    def _unsynced_add(self, nbytes: int) -> None:
+        with self._unsynced_cv:
+            self._unsynced += nbytes
+            if self._unsynced > self.stats.unsynced_bytes_peak:
+                self.stats.unsynced_bytes_peak = self._unsynced
+
+    def _unsynced_sub(self, nbytes: int) -> None:
+        with self._unsynced_cv:
+            self._unsynced -= nbytes
+            self._unsynced_cv.notify_all()
 
     def _exec_put(self, p: int, keys, rows) -> None:
         """Execute one partition's batched put, then mirror the packed

@@ -416,6 +416,11 @@ def split_oversized_group(keys, valid: Optional[np.ndarray],
     return masks
 
 
+# distinguishes "key not cached" from a cached-absence ``None`` entry in
+# byte accounting (``HostL2Cache.put_rows``)
+_L2_MISS = object()
+
+
 class HostL2Cache:
     """Host-RAM second level between device slots and the durable store.
 
@@ -449,15 +454,39 @@ class HostL2Cache:
 
     ``capacity=None`` is unbounded; otherwise LRU (recency refreshed by
     probes, inserts and demotions) with eldest-out eviction — an evicted
-    entry simply falls through to the durable store again.  Thread-safe
-    via one lock; counters are read unlocked for stats snapshots.
+    entry simply falls through to the durable store again.
+    ``capacity_bytes=`` sizes the cache by resident payload bytes instead
+    of (or in addition to) entries: crossing the high watermark on insert
+    sheds eldest entries down to ``shed_low_frac`` of the cap
+    (``shed_rows`` counts them), so a burst of inserts pays one amortized
+    shed sweep rather than one eviction per insert.  Both bounds are
+    purely capacity policy — a shed entry falls through to the durable
+    store exactly like a ``capacity`` eviction, so contents stay
+    bit-identical to any other bound (or none).  Thread-safe via one
+    lock; counters are read unlocked for stats snapshots.
     """
 
-    def __init__(self, capacity: Optional[int] = None):
+    #: approximate per-entry host overhead (dict slot + key + bytes-object
+    #: header) counted on top of the payload, so an absence marker still
+    #: has nonzero cost and ``capacity_bytes`` bounds real memory, not
+    #: just payload
+    ENTRY_OVERHEAD = 96
+
+    def __init__(self, capacity: Optional[int] = None,
+                 capacity_bytes: Optional[int] = None,
+                 shed_low_frac: float = 0.9):
         if capacity is not None and capacity <= 0:
             raise ValueError("l2 capacity must be positive (None: unbounded)")
+        if capacity_bytes is not None and capacity_bytes <= 0:
+            raise ValueError("l2 capacity_bytes must be positive "
+                             "(None: unbounded)")
+        if not 0.0 < shed_low_frac <= 1.0:
+            raise ValueError("shed_low_frac must be in (0, 1]")
         self.capacity = capacity
+        self.capacity_bytes = capacity_bytes
+        self.shed_low_frac = float(shed_low_frac)
         self._rows: "OrderedDict[int, Optional[bytes]]" = OrderedDict()
+        self._bytes = 0
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -465,10 +494,20 @@ class HostL2Cache:
         self.inserts = 0
         self.read_fills = 0
         self.capacity_evictions = 0
+        self.shed_rows = 0
 
     def __len__(self) -> int:
         with self._lock:
             return len(self._rows)
+
+    @property
+    def bytes(self) -> int:
+        """Resident entry cost in bytes (payload + per-entry overhead)."""
+        return self._bytes
+
+    @classmethod
+    def _entry_cost(cls, r: Optional[bytes]) -> int:
+        return cls.ENTRY_OVERHEAD + (0 if r is None else len(r))
 
     def put_rows(self, keys, rows) -> None:
         """Insert/overwrite packed rows (flush path, store-worker thread).
@@ -479,8 +518,12 @@ class HostL2Cache:
         with self._lock:
             for k, r in zip(keys, rows):
                 k = int(k)
-                self._rows.pop(k, None)
-                self._rows[k] = bytes(r)
+                old = self._rows.pop(k, _L2_MISS)
+                if old is not _L2_MISS:
+                    self._bytes -= self._entry_cost(old)
+                r = bytes(r)
+                self._rows[k] = r
+                self._bytes += self._entry_cost(r)
                 self.inserts += 1
             self._evict_over_capacity()
 
@@ -543,13 +586,25 @@ class HostL2Cache:
                 if k in self._rows:
                     self._rows.move_to_end(k)
                 else:
-                    self._rows[k] = None if r is None else bytes(r)
+                    r = None if r is None else bytes(r)
+                    self._rows[k] = r
+                    self._bytes += self._entry_cost(r)
                     self.read_fills += 1
             self._evict_over_capacity()
 
+    def _pop_eldest(self) -> None:
+        _, r = self._rows.popitem(last=False)
+        self._bytes -= self._entry_cost(r)
+
     def _evict_over_capacity(self) -> None:
-        if self.capacity is None:
-            return
-        while len(self._rows) > self.capacity:
-            self._rows.popitem(last=False)
-            self.capacity_evictions += 1
+        if self.capacity is not None:
+            while len(self._rows) > self.capacity:
+                self._pop_eldest()
+                self.capacity_evictions += 1
+        if self.capacity_bytes is not None and self._bytes > self.capacity_bytes:
+            # high/low watermark shed: drop eldest down to the low mark so
+            # an insert burst pays one sweep, not one eviction per insert
+            low = self.capacity_bytes * self.shed_low_frac
+            while self._rows and self._bytes > low:
+                self._pop_eldest()
+                self.shed_rows += 1
